@@ -1,0 +1,31 @@
+"""Throughput of the jax-backend collaborative analyzer (shard_map
+binning + psum_scatter/all_gather reduction) on the local device set."""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import distributed_binstats
+
+from .common import Row, timeit
+
+
+def run() -> List[Row]:
+    rng = np.random.default_rng(1)
+    n, n_bins, total = 262_144, 1024, 1e9
+    ts = jnp.asarray(rng.uniform(0, total, n), jnp.float32)
+    vals = jnp.asarray(rng.normal(50, 10, n), jnp.float32)
+    dev = jax.devices()
+    mesh = jax.sharding.Mesh(np.asarray(dev), ("data",))
+
+    def go():
+        distributed_binstats(ts, vals, total, n_bins,
+                             mesh).block_until_ready()
+    go()
+    us = timeit(go, repeat=3)
+    return [Row("analyzer/jax_backend", us,
+                f"{n/us:.1f} Mev/s;devices={len(dev)}")]

@@ -1,0 +1,94 @@
+"""Top HBM-traffic contributors from a saved dry-run HLO.
+
+  PYTHONPATH=src python -m benchmarks.bytes_breakdown \\
+      experiments/dryrun/hymba-1.5b_train_4k_pod16x16.hlo.txt.gz
+"""
+
+from __future__ import annotations
+
+import gzip
+import re
+import sys
+from collections import Counter
+
+from repro.roofline.hlo_cost import (HloCostModel, _DTYPE_BYTES,
+                                     _OPERAND_RE, _elems)
+
+
+def multipliers(m: HloCostModel):
+    mult = {m.entry: 1.0}
+    order = [m.entry]
+    seen = set()
+    i = 0
+    while i < len(order):
+        comp = order[i]
+        i += 1
+        if comp in seen:
+            continue
+        seen.add(comp)
+        for instr in m.comps.get(comp, []):
+            rest = instr.rest
+            if instr.opcode == "while":
+                mc = re.search(r"condition=%?([\w.\-]+)", rest)
+                mb = re.search(r"body=%?([\w.\-]+)", rest)
+                t = m._trip_count(mc.group(1))
+                mult[mb.group(1)] = mult.get(mb.group(1), 0) + \
+                    mult[comp] * t
+                order.append(mb.group(1))
+            elif instr.opcode in ("call", "conditional", "custom-call"):
+                for callee in re.findall(
+                        r"(?:to_apply|calls)=%?([\w.\-]+)", rest):
+                    mult[callee] = mult.get(callee, 0) + mult[comp]
+                    order.append(callee)
+    return mult
+
+
+def breakdown(hlo_text: str, top: int = 18):
+    m = HloCostModel(hlo_text, 1)
+    mult = multipliers(m)
+    agg = Counter()
+    for comp, instrs in m.comps.items():
+        if comp not in mult:
+            continue
+        k = mult[comp]
+        for instr in instrs:
+            op = instr.opcode
+            if op in ("parameter", "constant", "get-tuple-element",
+                      "tuple", "bitcast", "iota", "while", "call",
+                      "conditional"):
+                continue
+            rb = sum(_elems(d) * _DTYPE_BYTES.get(dt, 4)
+                     for dt, d in instr.shapes)
+            if op == "fusion":
+                dus = sum(m._dus_update_bytes(c) for c in re.findall(
+                    r"calls=%?([\w.\-]+)", instr.rest))
+                b = 2 * dus if dus > 0 else rb
+                shape = ",".join(f"{dt}[{'x'.join(map(str, d))}]"
+                                 for dt, d in instr.shapes[:1])
+                agg[(op, shape)] += int(k) * b
+                continue
+            if op in ("dot", "convolution"):
+                ops_ = _OPERAND_RE.findall(instr.rest.split("),")[0])
+                ob = sum(_elems(d) * _DTYPE_BYTES.get(dt, 4)
+                         for o in ops_ for dt, d in m.shape_of.get(o, []))
+                b = rb + ob
+            elif op == "dynamic-update-slice":
+                ops_ = _OPERAND_RE.findall(instr.rest.split("),")[0])
+                b = 2 * sum(_elems(d) * _DTYPE_BYTES.get(dt, 4)
+                            for dt, d in (m.shape_of.get(ops_[1], [])
+                                          if len(ops_) > 1 else []))
+            else:
+                b = rb
+            shape = ",".join(f"{dt}[{'x'.join(map(str, d))}]"
+                             for dt, d in instr.shapes[:1])
+            agg[(op, shape)] += int(k) * b
+    total = sum(agg.values())
+    print(f"total traffic proxy: {total/1e12:.2f} TB "
+          f"(-> {total/819e9:.2f} s at 819 GB/s)")
+    for (op, shape), b in agg.most_common(top):
+        print(f"  {op:22s} {shape:32s} {b/1e9:10.1f} GB")
+
+
+if __name__ == "__main__":
+    with gzip.open(sys.argv[1], "rt") as f:
+        breakdown(f.read())

@@ -1,0 +1,89 @@
+"""Per-(op, size) collective wire-byte breakdown from a saved dry-run HLO.
+
+  PYTHONPATH=src python -m benchmarks.collective_breakdown \\
+      experiments/dryrun/deepseek-v2-236b_train_4k_pod16x16.hlo.txt.gz
+"""
+
+from __future__ import annotations
+
+import gzip
+import re
+import sys
+from collections import Counter
+
+from repro.roofline.hlo_cost import (HloCostModel, _DTYPE_BYTES, _elems,
+                                     _wire_factor)
+
+
+def breakdown(hlo_text: str, default_group: int, top: int = 15):
+    m = HloCostModel(hlo_text, default_group)
+    mult = {m.entry: 1.0}
+    order = [m.entry]
+    seen = set()
+    i = 0
+    while i < len(order):
+        comp = order[i]
+        i += 1
+        if comp in seen:
+            continue
+        seen.add(comp)
+        for instr in m.comps.get(comp, []):
+            rest = instr.rest
+            if instr.opcode == "while":
+                mc = re.search(r"condition=%?([\w.\-]+)", rest)
+                mb = re.search(r"body=%?([\w.\-]+)", rest)
+                t = m._trip_count(mc.group(1))
+                mult[mb.group(1)] = mult.get(mb.group(1), 0) + \
+                    mult[comp] * t
+                order.append(mb.group(1))
+            elif instr.opcode in ("call", "fusion", "conditional",
+                                  "custom-call"):
+                for callee in re.findall(r"(?:to_apply|calls)=%?([\w.\-]+)",
+                                         rest):
+                    mult[callee] = mult.get(callee, 0) + mult[comp]
+                    order.append(callee)
+    agg = Counter()
+    groups = {}
+    for comp, instrs in m.comps.items():
+        if comp not in mult:
+            continue
+        for instr in instrs:
+            base = instr.opcode.replace("-start", "").replace("-done", "")
+            if base not in ("all-gather", "all-reduce", "reduce-scatter",
+                            "all-to-all", "collective-permute") or \
+                    instr.opcode.endswith("-done"):
+                continue
+            b = sum(_elems(d) * _DTYPE_BYTES.get(dt, 4)
+                    for dt, d in instr.shapes[-1:])
+            if "_promoted" in instr.rest:
+                b //= 2                 # XLA-CPU bf16->f32 promotion
+            mm = re.search(r"replica_groups=\[(\d+),(\d+)\]", instr.rest)
+            if mm:
+                p = int(mm.group(2))
+            else:
+                mm2 = re.search(r"replica_groups=\{\{([0-9,]+)\}",
+                                instr.rest)
+                p = (len(mm2.group(1).split(","))
+                     if mm2 else default_group)
+            agg[(base, b)] += int(mult[comp])
+            groups[(base, b)] = p
+    rows = []
+    for (op, b), n in agg.items():
+        p = groups[(op, b)]
+        wire = b * n * _wire_factor(op, p)
+        rows.append((wire, op, b, n, p))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total wire bytes/dev: {total/1e9:.2f} GB "
+          f"(-> {total/50e9:.2f} s at 50 GB/s)")
+    for wire, op, b, n, p in rows[:top]:
+        print(f"  {op:20s} {b:>14,d} B x {n:>6d} (grp {p:>3d}) "
+              f"= {wire/1e9:9.2f} GB wire")
+
+
+if __name__ == "__main__":
+    path = sys.argv[1]
+    group = int(sys.argv[2]) if len(sys.argv) > 2 else 256
+    with gzip.open(path, "rt") as f:
+        text = f.read()
+    breakdown(text, group)

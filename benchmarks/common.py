@@ -1,0 +1,57 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+import time
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core.events import (SyntheticSpec, generate_synthetic,
+                               write_synthetic_dbs)
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str        # free-form derived metric ("93M rows", "x2.1", ...)
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timeit(fn: Callable, repeat: int = 3, number: int = 1) -> float:
+    """Median wall time per call in µs."""
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        for _ in range(number):
+            fn()
+        times.append((time.perf_counter() - t0) / number)
+    return float(np.median(times) * 1e6)
+
+
+_DATASET_CACHE = {}
+
+
+def dataset(scale: str = "small"):
+    """(ds, db_paths, workdir) for a synthetic Table-1-shaped dataset."""
+    if scale in _DATASET_CACHE:
+        return _DATASET_CACHE[scale]
+    spec = {
+        "small": SyntheticSpec(n_ranks=2, kernels_per_rank=5_000,
+                               memcpys_per_rank=700, duration_s=60,
+                               seed=3),
+        "medium": SyntheticSpec(n_ranks=4, kernels_per_rank=40_000,
+                                memcpys_per_rank=5_000, duration_s=120,
+                                seed=3),
+    }[scale]
+    ds = generate_synthetic(spec)
+    d = tempfile.mkdtemp(prefix=f"repro_bench_{scale}_")
+    paths = write_synthetic_dbs(ds, os.path.join(d, "dbs"))
+    _DATASET_CACHE[scale] = (ds, paths, d)
+    return _DATASET_CACHE[scale]

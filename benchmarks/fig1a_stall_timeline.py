@@ -1,0 +1,60 @@
+"""Fig 1a analogue: per-rank memory-stall duration over elapsed runtime.
+
+Runs the full two-phase pipeline, then reports per-rank binned stall means
+and whether stall windows CO-OCCUR across ranks (the paper's finding that
+motivates picking one rank for deep analysis)."""
+
+from __future__ import annotations
+
+import os
+from typing import List
+
+import numpy as np
+
+from repro.core import GenerationConfig, PipelineConfig, \
+    VariabilityPipeline
+
+from .common import Row, dataset, timeit
+
+
+def run() -> List[Row]:
+    ds, paths, work = dataset("small")
+    cfg = PipelineConfig(n_ranks=2, backend="serial",
+                         generation=GenerationConfig())
+    pipe = VariabilityPipeline(cfg)
+    res = {}
+
+    def go():
+        res["r"] = pipe.run(paths, os.path.join(work, "fig1a"))
+    us = timeit(go, repeat=1)
+    r = res["r"]
+    stats = r.aggregation.stats
+    occupied = stats.count > 0
+    # co-occurrence: top-stall bins per SOURCE (profiling) rank overlap —
+    # the Fig-1a finding that motivates drilling into one rank.
+    from repro.core import TraceStore
+    from repro.core.aggregation import bin_samples
+    store = TraceStore(os.path.join(work, "fig1a"))
+    plan = r.aggregation.plan
+    per_src = {}
+    for s in store.shard_indices():
+        cols = store.read_shard(s)
+        for src in np.unique(cols["src_rank"]).astype(int):
+            m = cols["src_rank"] == src
+            part = bin_samples(cols["k_start"][m].astype(np.int64),
+                               cols["k_stall"][m], plan)
+            per_src[src] = (per_src[src].merge(part) if src in per_src
+                            else part)
+    tops = []
+    for p in per_src.values():
+        occ = p.count > 0
+        if occ.any():
+            thresh = np.quantile(p.mean[occ], 0.9)
+            tops.append(set(np.nonzero(occ & (p.mean >= thresh))[0]))
+    co = len(set.intersection(*tops)) if len(tops) > 1 else 0
+    rows = [Row("fig1a/pipeline", us,
+                f"bins={stats.count.shape[0]};occupied={int(occupied.sum())}"
+                f";mean_stall_ns={stats.mean[occupied].mean():.0f}"),
+            Row("fig1a/coocurrence", 0.0,
+                f"shared_top_bins={co};ranks={len(tops)}")]
+    return rows

@@ -1,0 +1,39 @@
+"""Fig 1b analogue: top-5% variability intervals + transfer-direction
+breakdown (H2D/D2H ping-pong dominance vs sparse D2D)."""
+
+from __future__ import annotations
+
+import os
+from typing import List
+
+import numpy as np
+
+from repro.core import PipelineConfig, VariabilityPipeline
+from repro.core.anomaly import top_variability_bins
+from repro.core.events import COPY_D2D, COPY_D2H, COPY_H2D
+
+from .common import Row, dataset, timeit
+
+
+def run() -> List[Row]:
+    ds, paths, work = dataset("small")
+    pipe = VariabilityPipeline(PipelineConfig(n_ranks=2, backend="serial"))
+    res = pipe.run(paths, os.path.join(work, "fig1b"))
+
+    out = {}
+
+    def select():
+        out["top"] = top_variability_bins(res.aggregation.stats,
+                                          quantile=0.95)
+    us = timeit(select)
+    kb = res.aggregation.copy_kind_bytes
+    h2d = float(np.sum(kb.get(COPY_H2D, 0.0)))
+    d2h = float(np.sum(kb.get(COPY_D2H, 0.0)))
+    d2d = float(np.sum(kb.get(COPY_D2D, 0.0)))
+    pp = h2d + d2h
+    return [
+        Row("fig1b/top5pct_bins", us, f"n={len(out['top'])}"),
+        Row("fig1b/direction_bytes", 0.0,
+            f"H2D={h2d:.3g};D2H={d2h:.3g};D2D={d2d:.3g};"
+            f"pingpong_over_d2d=x{pp/max(d2d,1):.1f}"),
+    ]

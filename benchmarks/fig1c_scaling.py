@@ -1,0 +1,38 @@
+"""Fig 1c analogue: Data Generation vs Data Aggregation duration vs #MPI
+ranks (strong scaling of both phases, process backend).
+
+NOTE: this container exposes ONE CPU core, so wall-clock speedup is not
+expected here; the benchmark reports per-phase times and the WORK-division
+factor (max shards owned by any rank), which is what scales on a real
+cluster. The paper's claim "both phases decrease with ranks" is validated
+structurally: per-rank work shrinks as 1/P."""
+
+from __future__ import annotations
+
+import os
+from typing import List
+
+import numpy as np
+
+from repro.core import GenerationConfig, PipelineConfig, \
+    VariabilityPipeline
+from repro.core.sharding import assignment
+
+from .common import Row, dataset
+
+
+def run() -> List[Row]:
+    ds, paths, work = dataset("medium")
+    rows: List[Row] = []
+    for p in (1, 2, 4):
+        pipe = VariabilityPipeline(PipelineConfig(
+            n_ranks=p, backend="process",
+            generation=GenerationConfig()))
+        res = pipe.run(paths, os.path.join(work, f"fig1c_{p}"))
+        shards = res.generation.n_shards
+        per_rank = max(len(s) for s in assignment(shards, p, "block"))
+        rows.append(Row(
+            f"fig1c/ranks{p}", (res.gen_seconds + res.agg_seconds) * 1e6,
+            f"gen_s={res.gen_seconds:.3f};agg_s={res.agg_seconds:.3f};"
+            f"max_shards_per_rank={per_rank};work_div=x{shards/per_rank:.2f}"))
+    return rows

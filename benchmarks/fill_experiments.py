@@ -1,0 +1,79 @@
+"""Inject generated roofline tables into EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m benchmarks.fill_experiments
+Idempotent: each <!-- MARKER --> line is replaced by MARKER + table.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+
+from .roofline_table import HEADER, fmt_row, load
+
+HILL = [("deepseek-v2-236b", "train_4k"), ("hymba-1.5b", "train_4k"),
+        ("mamba2-370m", "train_4k"),
+        ("deepseek-v2-236b", "decode_32k")]    # H8 serving layout
+
+
+def table(rows, mesh):
+    rows = [r for r in rows if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return "\n".join([HEADER] + [fmt_row(r) for r in rows])
+
+
+def hillclimb_table(base, opt):
+    b = {(r["arch"], r["shape"], r["mesh"]): r for r in base}
+    o = {(r["arch"], r["shape"], r["mesh"]): r for r in opt}
+    out = ["| cell | metric | baseline | optimized (H1+H3+H4) | Δ |",
+           "|---|---|---|---|---|"]
+    for arch, shape in HILL:
+        kb = b.get((arch, shape, "pod16x16"))
+        ko = o.get((arch, shape, "pod16x16"))
+        if not kb or not ko:
+            continue
+        rb, ro = kb["roofline"], ko["roofline"]
+        for metric, fmtv in (("collective_s", "{:.2f} s"),
+                             ("memory_s", "{:.2f} s"),
+                             ("compute_s", "{:.2f} s"),
+                             ("step_s", "{:.2f} s"),
+                             ("mfu", "{:.4f}")):
+            vb, vo = rb[metric], ro[metric]
+            ratio = (vb / vo) if vo else float("inf")
+            out.append(
+                f"| {arch}×{shape} | {metric} | "
+                f"{fmtv.format(vb)} | {fmtv.format(vo)} | "
+                f"{'×%.1f better' % ratio if vb > vo else '×%.2f' % (1/max(ratio,1e-9))} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    base = load("experiments/dryrun")
+    opt = load("experiments/dryrun_opt") if os.path.isdir(
+        "experiments/dryrun_opt") else []
+
+    subs = {
+        "<!-- BASELINE_TABLE_SINGLE -->": table(base, "pod16x16"),
+        "<!-- BASELINE_TABLE_MULTI -->": table(base, "pod2x16x16"),
+        "<!-- OPT_TABLE_SINGLE -->": (table(opt, "pod16x16")
+                                      if opt else "(sweep pending)"),
+        "<!-- HILLCLIMB_TABLE -->": (hillclimb_table(base, opt)
+                                     if opt else "(sweep pending)"),
+    }
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    for marker, content in subs.items():
+        block = marker + "\n" + content
+        if marker in text:
+            # replace marker AND any previously injected table right after
+            pat = re.escape(marker) + r"(\n\|[^\n]*)*"
+            text = re.sub(pat, block.replace("\\", "\\\\"), text, count=1)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md tables updated "
+          f"({len(base)} baseline, {len(opt)} optimized cells)")
+
+
+if __name__ == "__main__":
+    main()

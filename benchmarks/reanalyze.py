@@ -1,0 +1,52 @@
+"""Recompute roofline records from SAVED dry-run HLO (no recompilation).
+
+The walker evolves (e.g. the promoted-bf16-all-reduce accounting fix);
+this keeps every recorded cell consistent with the CURRENT cost model:
+
+  PYTHONPATH=src python -m benchmarks.reanalyze --dir experiments/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+import os
+
+from repro.roofline import Roofline
+from repro.roofline.hlo_cost import analyze_hlo
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    n = 0
+    for f in sorted(os.listdir(args.dir)):
+        if not f.endswith(".json"):
+            continue
+        jpath = os.path.join(args.dir, f)
+        hpath = jpath.replace(".json", ".hlo.txt.gz")
+        if not os.path.exists(hpath):
+            continue
+        with open(jpath) as fh:
+            rec = json.load(fh)
+        with gzip.open(hpath, "rt") as fh:
+            hlo = fh.read()
+        walked = analyze_hlo(hlo, rec["chips"])
+        roof = Roofline(
+            arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+            chips=rec["chips"], flops_per_dev=walked.flops,
+            bytes_per_dev=walked.bytes,
+            wire_bytes_per_dev=walked.wire_bytes,
+            model_flops=rec["roofline"]["model_flops"],
+            collectives=walked.collectives)
+        rec["roofline"] = roof.to_dict()
+        with open(jpath, "w") as fh:
+            json.dump(rec, fh, indent=2)
+        n += 1
+    print(f"re-analyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Render the §Roofline baseline table from experiments/dryrun JSONs.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+
+def load(dirname: str) -> List[Dict]:
+    rows = []
+    for f in sorted(os.listdir(dirname)):
+        if f.endswith(".json"):
+            with open(os.path.join(dirname, f)) as fh:
+                rows.append(json.load(fh))
+    return rows
+
+
+def fmt_row(r: Dict) -> str:
+    rf = r["roofline"]
+    mem = r.get("memory", {})
+    peak = mem.get("peak_bytes", 0) / 2**30
+    return ("| {arch} | {shape} | {mesh} | {c:.3f} | {m:.3f} | {k:.3f} | "
+            "{dom} | {step:.1f} | {ur:.2f} | {mfu:.3f} | {pk:.1f} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        c=rf["compute_s"], m=rf["memory_s"], k=rf["collective_s"],
+        dom=rf["dominant"][:4], step=rf["step_s"] * 1e3,
+        ur=rf["useful_ratio"], mfu=rf["mfu"], pk=peak)
+
+
+HEADER = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+          "dom | step_ms | useful | MFU | peak_GiB |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if args.mesh:
+        rows = [r for r in rows if r["mesh"] == args.mesh]
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    print(HEADER)
+    for r in rows:
+        print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

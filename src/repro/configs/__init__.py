@@ -1,0 +1,49 @@
+"""Architecture registry: the ten assigned architectures (+ smoke variants)
+selectable by ``--arch <id>``."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.model import ModelConfig
+
+from .common import SHAPES, ShapeSpec, applicable, input_specs
+
+_MODULES: Dict[str, str] = {
+    "hymba-1.5b": "hymba_1_5b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "stablelm-3b": "stablelm_3b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "starcoder2-15b": "starcoder2_15b",
+    "hubert-xlarge": "hubert_xlarge",
+    "mamba2-370m": "mamba2_370m",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+}
+
+ARCH_NAMES: List[str] = list(_MODULES)
+
+
+def _mod(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCH_NAMES}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _mod(name).config()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _mod(name).smoke_config()
+
+
+def all_cells():
+    """Every assigned (arch × shape) cell with its applicability verdict."""
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, why = applicable(cfg, shape)
+            yield arch, shape, ok, why

@@ -1,0 +1,89 @@
+"""Shared builders for architecture configs + the assigned input shapes."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import AttnConfig
+from repro.models.model import ModelConfig, init_cache
+from repro.models.moe import MoEConfig
+from repro.models.ssm import SSMConfig
+from repro.models.transformer import LayerSpec
+
+
+def gqa(d_model: int, n_heads: int, n_kv: int, head_dim: Optional[int] = None,
+        **kw) -> AttnConfig:
+    return AttnConfig(d_model=d_model, n_heads=n_heads, n_kv_heads=n_kv,
+                      head_dim=head_dim or d_model // n_heads, **kw)
+
+
+# --- assigned input shapes -------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """(runs?, reason-if-not). The two structural skip rules of the brief."""
+    sp = SHAPES[shape]
+    if sp.kind == "decode" and not cfg.decode_supported:
+        return False, "encoder-only arch: no decode step"
+    if shape == "long_500k" and not cfg.long_context:
+        return False, "pure full-attention arch: 500k decode is quadratic"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str,
+                vlm_patches: int = 256) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    train/prefill: the batch dict fed to loss_fn / prefill.
+    decode: {"token", "caches", "index"} for decode_step, cache sized at
+    sp.seq absolute positions (the assignment's decode semantics: one new
+    token against a seq_len-deep cache).
+    """
+    sp = SHAPES[shape]
+    b, s = sp.batch, sp.seq
+    i32, f32 = jnp.int32, jnp.float32
+
+    if sp.kind == "decode":
+        caches = jax.eval_shape(
+            lambda: init_cache(cfg, b, s + cfg.meta_tokens))
+        return {"token": _sds((b, 1), i32), "caches": caches,
+                "index": _sds((), i32)}
+
+    batch: Dict = {}
+    if cfg.frontend == "audio":
+        batch["frames"] = _sds((b, s, cfg.frontend_dim), cfg.dtype)
+        batch["labels"] = _sds((b, s), i32)
+        batch["loss_mask"] = _sds((b, s), f32)
+    elif cfg.frontend == "vlm":
+        p = vlm_patches
+        batch["patches"] = _sds((b, p, cfg.frontend_dim), cfg.dtype)
+        batch["tokens"] = _sds((b, s - p), i32)
+        batch["positions3"] = _sds((b, 3, s + cfg.meta_tokens), i32)
+        batch["labels"] = _sds((b, s - p), i32)
+    else:
+        batch["tokens"] = _sds((b, s), i32)
+        batch["labels"] = _sds((b, s), i32)
+    return batch

@@ -1,0 +1,26 @@
+"""The paper's primary contribution: a scalable, sharded, collaboratively
+reduced GPU performance-variability analysis pipeline.
+
+Layout (one module per paper concept — see DESIGN.md §2/§3):
+  events        CUPTI-shaped schema, SQLite I/O, synthetic generator
+  tracestore    columnar shard files + manifest ("parquet")
+  sharding      time partitioner, block/cyclic rank assignment
+  generation    phase 1: extract -> window left-join -> shard files
+  aggregation   phase 2: bin -> partial moments -> round-robin merge
+  anomaly       IQR fences, top-k anomalous shards
+  distributed   jax backend (shard_map + psum_scatter/all_gather)
+  pipeline      end-to-end driver (serial | process | jax backends)
+"""
+
+from .events import (EventTable, GpuInfo, RankTrace, SyntheticSpec,
+                     SyntheticDataset, generate_synthetic,
+                     write_synthetic_dbs, read_rank_db, write_rank_db)
+from .sharding import (ShardPlan, assignment, block_assignment,
+                       cyclic_assignment, owner_of_shards)
+from .tracestore import StoreManifest, TraceStore
+from .generation import (GenerationConfig, GenerationReport,
+                         run_generation, window_left_join)
+from .aggregation import (AggregationResult, BinStats, bin_samples,
+                          round_robin_merge, run_aggregation)
+from .anomaly import IQRReport, anomalous_bins, iqr_detect, recovered
+from .pipeline import PipelineConfig, PipelineResult, VariabilityPipeline

@@ -1,0 +1,118 @@
+"""IQR anomaly detection (paper §3: "we select the top 5 anomalous shards
+using the Inter-quartile Range (IQR) method [Whaley 2014]").
+
+Given per-bin statistics, a bin is *anomalous* when its score exceeds the
+Tukey upper fence  Q3 + k·IQR  (k = 1.5 by default).  The paper reports the
+top-5 anomalous shards; we rank flagged bins by their fence exceedance and
+return the top-k.  Also provides the Fig-1b selection: top q% of bins by
+variability (std).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from .aggregation import BinStats
+
+
+def quartiles(x: np.ndarray) -> Tuple[float, float, float]:
+    """(Q1, median, Q3) with linear interpolation — matches np.percentile."""
+    if x.size == 0:
+        return (0.0, 0.0, 0.0)
+    q1, q2, q3 = np.percentile(x, [25.0, 50.0, 75.0])
+    return float(q1), float(q2), float(q3)
+
+
+@dataclasses.dataclass
+class IQRReport:
+    q1: float
+    q3: float
+    iqr: float
+    lo_fence: float
+    hi_fence: float
+    flags: np.ndarray           # bool (n_bins,) — outside the fences
+    scores: np.ndarray          # the per-bin score that was fenced
+    top_idx: np.ndarray         # top-k anomalous bin indices, ranked
+    top_windows: np.ndarray     # (k, 2) int64 ns — bin time bounds
+
+
+def iqr_detect(scores: np.ndarray, k: float = 1.5, top_k: int = 5,
+               boundaries: Optional[np.ndarray] = None,
+               two_sided: bool = False) -> IQRReport:
+    """Tukey-fence detection over per-bin scores.
+
+    ``boundaries`` (n_bins+1,) converts flagged bin indices into time
+    windows (the paper reports anomalous *shards*, i.e. time intervals).
+    """
+    scores = np.asarray(scores, np.float64)
+    # Fences are estimated over the *occupied* bins: empty bins score 0 and
+    # would otherwise drag Q1/Q3 toward zero on sparse traces.
+    occupied = scores != 0.0
+    base = scores[occupied] if occupied.any() else scores
+    q1, _, q3 = quartiles(base)
+    iqr = q3 - q1
+    hi = q3 + k * iqr
+    lo = q1 - k * iqr
+    flags = scores > hi
+    if two_sided:
+        flags |= scores < lo
+
+    exceed = np.where(flags, np.abs(scores - np.clip(scores, lo, hi)), -1.0)
+    order = np.argsort(-exceed, kind="stable")
+    top = order[: min(top_k, int(flags.sum()))]
+
+    if boundaries is not None and top.size:
+        wins = np.stack([boundaries[top], boundaries[top + 1]],
+                        axis=1).astype(np.int64)
+    else:
+        wins = np.zeros((top.size, 2), np.int64)
+    return IQRReport(q1=q1, q3=q3, iqr=iqr, lo_fence=lo, hi_fence=hi,
+                     flags=flags, scores=scores, top_idx=top,
+                     top_windows=wins)
+
+
+def anomalous_bins(stats: BinStats, k: float = 1.5, top_k: int = 5,
+                   boundaries: Optional[np.ndarray] = None,
+                   score: str = "mean") -> IQRReport:
+    """Paper's detector: IQR over a per-bin summary of the stall metric."""
+    if score == "mean":
+        s = stats.mean
+    elif score == "std":
+        s = stats.std
+    elif score == "max":
+        s = stats.finite_max()
+    elif score == "sum":
+        s = stats.sum
+    else:
+        raise ValueError(f"unknown score {score!r}")
+    return iqr_detect(s, k=k, top_k=top_k, boundaries=boundaries)
+
+
+def top_variability_bins(stats: BinStats, quantile: float = 0.95,
+                         ) -> np.ndarray:
+    """Fig-1b selection: indices of the top (1-quantile) bins by std."""
+    std = stats.std
+    occ = stats.count > 0
+    if not occ.any():
+        return np.zeros((0,), np.int64)
+    thresh = np.quantile(std[occ], quantile)
+    idx = np.nonzero(occ & (std >= thresh))[0]
+    return idx[np.argsort(-std[idx], kind="stable")]
+
+
+def recovered(windows_true: np.ndarray, windows_found: np.ndarray,
+              tol_ns: int = 0) -> float:
+    """Fraction of ground-truth anomaly windows overlapped by any detection
+    (used by the paper-claim validation tests)."""
+    if len(windows_true) == 0:
+        return 1.0
+    hit = 0
+    for t0, t1 in np.asarray(windows_true):
+        for f0, f1 in np.asarray(windows_found):
+            if f0 - tol_ns < t1 and t0 < f1 + tol_ns:
+                hit += 1
+                break
+    return hit / len(windows_true)

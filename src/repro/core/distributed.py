@@ -1,0 +1,211 @@
+"""JAX backend for the paper's collaborative analysis (rank = device).
+
+Hardware adaptation (DESIGN.md §2): the paper's MPI ranks exchanging partial
+statistics become mesh devices exchanging via ICI collectives:
+
+  - per-rank binning/moments  -> `shard_map` over the mesh "data" axis; each
+    device bins ITS shard of the event stream (block partitioning: the
+    device's shard is a contiguous slice, exactly like the paper's ranks),
+  - round-robin collaborative stats -> `psum_scatter` (each device reduces
+    the bins it OWNS — cyclic ownership, the round-robin), then
+    `all_gather` to rebuild the global table. On TPU, psum_scatter+all_gather
+    is strictly cheaper than all-devices-all-bins `psum` for large bin
+    tables: each link carries 1/P of the table instead of all of it.
+  - min/max have no psum_scatter; they ride an `all_reduce`-style `pmin`/
+    `pmax` (these are latency-bound; the heavy sum/sumsq take the scatter
+    path).
+
+Two public entry points:
+
+  * :func:`binstats_local` — pure-jnp per-device moments (also the oracle
+    for the Pallas binstats kernel),
+  * :func:`distributed_binstats` — full shard_map pipeline over a 1-D mesh
+    axis; exactly equal to the serial result (property-tested).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+STATS = 5   # count, sum, sumsq, min, max
+
+_NEG_CAP = -3.4e38   # sentinel instead of inf: survives bf16/psum paths
+_POS_CAP = 3.4e38
+
+
+def binstats_local(bin_ids: jnp.ndarray, values: jnp.ndarray,
+                   n_bins: int, valid: Optional[jnp.ndarray] = None,
+                   ) -> jnp.ndarray:
+    """Per-bin partial moments (n_bins, 5) for one device's samples.
+
+    `segment_*` ops lower to sorted-scatter on TPU; the Pallas `binstats`
+    kernel replaces this with a one-hot MXU matmul formulation (see
+    kernels/binstats) — both satisfy this exact contract.
+    """
+    v = values.astype(jnp.float32)
+    if valid is None:
+        valid = jnp.ones(v.shape, dtype=bool)
+    bin_ids = jnp.clip(bin_ids, 0, n_bins - 1)
+    # invalid rows: weight 0 and neutral elements for min/max
+    w = valid.astype(jnp.float32)
+    count = jax.ops.segment_sum(w, bin_ids, n_bins)
+    s = jax.ops.segment_sum(v * w, bin_ids, n_bins)
+    ss = jax.ops.segment_sum(v * v * w, bin_ids, n_bins)
+    v_min = jnp.where(valid, v, _POS_CAP)
+    v_max = jnp.where(valid, v, _NEG_CAP)
+    mn = jax.ops.segment_min(v_min, bin_ids, n_bins)
+    mx = jax.ops.segment_max(v_max, bin_ids, n_bins)
+    # segments with no rows at all come back as +inf/-inf from segment_min;
+    # cap them to the sentinels so downstream collectives stay finite.
+    mn = jnp.where(jnp.isfinite(mn), mn, _POS_CAP)
+    mx = jnp.where(jnp.isfinite(mx), mx, _NEG_CAP)
+    return jnp.stack([count, s, ss, mn, mx], axis=-1)
+
+
+def merge_stats(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Associative merge of two (n_bins, 5) moment tables."""
+    return jnp.stack([
+        a[..., 0] + b[..., 0],
+        a[..., 1] + b[..., 1],
+        a[..., 2] + b[..., 2],
+        jnp.minimum(a[..., 3], b[..., 3]),
+        jnp.maximum(a[..., 4], b[..., 4]),
+    ], axis=-1)
+
+
+def derive(stats: jnp.ndarray) -> dict:
+    """(n_bins,5) moments -> {count,mean,std,min,max} (paper's metrics)."""
+    count = stats[..., 0]
+    c = jnp.maximum(count, 1.0)
+    mean = stats[..., 1] / c
+    var = jnp.maximum(stats[..., 2] / c - mean * mean, 0.0)
+    occupied = count > 0
+    return {
+        "count": count,
+        "mean": jnp.where(occupied, mean, 0.0),
+        "std": jnp.where(occupied, jnp.sqrt(var), 0.0),
+        "min": jnp.where(occupied, stats[..., 3], 0.0),
+        "max": jnp.where(occupied, stats[..., 4], 0.0),
+    }
+
+
+def _collaborative_reduce(local: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Round-robin collaborative merge on-mesh.
+
+    `psum_scatter(tiled=False)` gives each device the reduced block of bins
+    it owns (the paper's round-robin ownership); `all_gather` rebuilds the
+    full table on every device. min/max channels are made scatter-compatible
+    by negation tricks NOT being valid for min (it's not additive) — so they
+    take a `pmin`/`pmax` all-reduce instead.
+    """
+    sums = local[..., :3]           # count, sum, sumsq — additive
+    mn = local[..., 3]
+    mx = local[..., 4]
+    # pad bins to a multiple of the axis size for the scatter
+    P_sz = jax.lax.axis_size(axis)
+    n = sums.shape[0]
+    pad = (-n) % P_sz
+    sums_p = jnp.pad(sums, ((0, pad), (0, 0)))
+    owned = jax.lax.psum_scatter(sums_p, axis, scatter_dimension=0,
+                                 tiled=True)
+    sums_red = jax.lax.all_gather(owned, axis, axis=0, tiled=True)[:n]
+    mn_red = jax.lax.pmin(mn, axis)
+    mx_red = jax.lax.pmax(mx, axis)
+    return jnp.concatenate(
+        [sums_red, mn_red[:, None], mx_red[:, None]], axis=-1)
+
+
+def distributed_binstats_from_bins(bin_ids: jnp.ndarray,
+                                   values: jnp.ndarray, n_bins: int,
+                                   mesh: Mesh, axis: str = "data",
+                                   valid: Optional[jnp.ndarray] = None,
+                                   ) -> jnp.ndarray:
+    """Collaborative moments from precomputed bin ids (exact int64 binning
+    happens on host — CUPTI ns timestamps overflow int32; see
+    :func:`distributed_binstats` for the on-device float32 variant).
+
+    Events arrive block-partitioned: device d holds rows
+    [d*n/P, (d+1)*n/P) — contiguous, like the paper's ranks.
+    Returns replicated (n_bins, 5) moments.
+    """
+    def rank_fn(bins, vals, vld):
+        local = binstats_local(bins, vals, n_bins, valid=vld)
+        return _collaborative_reduce(local, axis)
+
+    spec = P(axis)
+    fn = jax.shard_map(rank_fn, mesh=mesh, check_vma=False,
+                       in_specs=(spec, spec, spec), out_specs=P())
+    if valid is None:
+        valid = jnp.ones(values.shape, dtype=bool)
+    return fn(bin_ids, values, valid)
+
+
+def distributed_binstats(rel_timestamps: jnp.ndarray, values: jnp.ndarray,
+                         total_ns: float, n_bins: int,
+                         mesh: Mesh, axis: str = "data",
+                         valid: Optional[jnp.ndarray] = None,
+                         ) -> jnp.ndarray:
+    """Fused on-device binning + collaborative moments.
+
+    CONTRACT: ``rel_timestamps`` are float32 nanoseconds RELATIVE to the
+    dataset start (the int64 -> relative conversion is exact on host).
+    Bin = floor(rel * n_bins / total) clipped to [0, n_bins). The Pallas
+    binstats kernel implements this same contract (see kernels/binstats).
+    """
+    inv_width = np.float32(n_bins / total_ns)
+
+    def rank_fn(ts, vals, vld):
+        bins = jnp.clip((ts * inv_width).astype(jnp.int32), 0, n_bins - 1)
+        local = binstats_local(bins, vals, n_bins, valid=vld)
+        return _collaborative_reduce(local, axis)
+
+    spec = P(axis)
+    fn = jax.shard_map(rank_fn, mesh=mesh, check_vma=False,
+                       in_specs=(spec, spec, spec), out_specs=P())
+    if valid is None:
+        valid = jnp.ones(values.shape, dtype=bool)
+    return fn(rel_timestamps, values, valid)
+
+
+def distributed_iqr(scores: jnp.ndarray, k: float = 1.5) -> dict:
+    """IQR fences in pure jax (sort-based percentile), jit-friendly.
+
+    Operates on the replicated per-bin score table (it is tiny compared to
+    the event stream — the paper's design point: raw events never leave
+    their rank; only O(n_bins) statistics are exchanged).
+    """
+    occupied = scores != 0.0
+    # percentile over occupied bins via sort + linear interpolation
+    big = jnp.where(occupied, scores, jnp.inf)
+    srt = jnp.sort(big)
+    n_occ = jnp.maximum(occupied.sum(), 1)
+
+    def pct(q):
+        pos = q * (n_occ - 1).astype(jnp.float32)
+        lo = jnp.floor(pos).astype(jnp.int32)
+        hi = jnp.ceil(pos).astype(jnp.int32)
+        frac = pos - lo.astype(jnp.float32)
+        vlo = jnp.where(jnp.isfinite(srt[lo]), srt[lo], 0.0)
+        vhi = jnp.where(jnp.isfinite(srt[hi]), srt[hi], 0.0)
+        return vlo + frac * (vhi - vlo)
+
+    q1, q3 = pct(0.25), pct(0.75)
+    iqr = q3 - q1
+    hi_fence = q3 + k * iqr
+    lo_fence = q1 - k * iqr
+    return {"q1": q1, "q3": q3, "iqr": iqr,
+            "lo_fence": lo_fence, "hi_fence": hi_fence,
+            "flags": scores > hi_fence}
+
+
+def top_k_anomalies(scores: jnp.ndarray, hi_fence: jnp.ndarray,
+                    top_k: int = 5) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Ranked top-k fence exceedances: (values, bin indices)."""
+    exceed = jnp.where(scores > hi_fence, scores - hi_fence, -jnp.inf)
+    return jax.lax.top_k(exceed, top_k)

@@ -1,0 +1,249 @@
+"""End-to-end two-phase variability pipeline (paper §3) — both backends.
+
+Backends:
+  * ``serial``   — rank loop in-process (debugging / tiny traces).
+  * ``process``  — one OS process per rank (faithful MPI-rank semantics:
+    private address spaces, exchange through shard files, barrier at the
+    phase boundary). This is the paper's execution model with
+    ``multiprocessing`` standing in for ``mpirun``.
+  * ``jax``      — ranks are mesh devices; binning + collaborative stats run
+    as shard_map collectives (see :mod:`repro.core.distributed`).
+
+The phases and their timings are reported separately (the paper's Fig 1c
+plots Data Generation vs Data Aggregation duration vs #ranks).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import os
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .aggregation import (AggregationResult, BinStats, bin_samples,
+                          load_rank_partials, round_robin_merge,
+                          run_aggregation, DEFAULT_METRIC)
+from .anomaly import IQRReport, anomalous_bins, top_variability_bins
+from .generation import (GenerationConfig, GenerationReport, generate_rank,
+                         global_time_range, run_generation)
+from .sharding import ShardPlan, assignment, owner_of_shards
+from .tracestore import StoreManifest, TraceStore
+
+# "fork" gives faithful cheap rank processes on Linux; the workers touch only
+# numpy + sqlite (jax is imported lazily, never before the fork point).
+_MP_CONTEXT = "fork" if "fork" in mp.get_all_start_methods() else "spawn"
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    n_ranks: int = 4
+    backend: str = "process"               # serial | process | jax
+    generation: GenerationConfig = dataclasses.field(
+        default_factory=GenerationConfig)
+    metric: str = DEFAULT_METRIC
+    agg_interval_ns: Optional[int] = None  # None -> reuse generation bins
+    iqr_k: float = 1.5
+    top_k: int = 5
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    generation: GenerationReport
+    aggregation: AggregationResult
+    anomalies: IQRReport
+    top_variability: np.ndarray
+    gen_seconds: float
+    agg_seconds: float
+
+    @property
+    def anomaly_windows(self) -> np.ndarray:
+        return self.anomalies.top_windows
+
+
+# --- process backend workers (module-level for picklability) ---------------
+
+def _gen_worker(args) -> int:
+    rank, db_paths, plan_tuple, shard_ids, out_dir, cfg_dict = args
+    plan = ShardPlan(*plan_tuple)
+    cfg = GenerationConfig(**cfg_dict)
+    store = TraceStore(out_dir)
+    return generate_rank(rank, db_paths, plan, np.asarray(shard_ids),
+                         store, cfg, contiguous=(cfg.partitioning == "block"))
+
+
+def _agg_worker(args):
+    store_dir, shard_ids, plan_tuple, metric = args
+    plan = ShardPlan(*plan_tuple)
+    store = TraceStore(store_dir)
+    part, kinds = load_rank_partials(store, shard_ids, plan, metric)
+    return part.to_columns(), {int(k): v for k, v in kinds.items()}
+
+
+class VariabilityPipeline:
+    """Drives phase 1 + phase 2 + anomaly selection over rank SQLite DBs."""
+
+    def __init__(self, cfg: Optional[PipelineConfig] = None):
+        self.cfg = cfg or PipelineConfig()
+
+    # -- phase 1 -------------------------------------------------------------
+    def generate(self, db_paths: Sequence[str], out_dir: str,
+                 ) -> GenerationReport:
+        cfg, gen = self.cfg, self.cfg.generation
+        t0 = time.perf_counter()
+        lo, hi = global_time_range(db_paths)
+        plan = (ShardPlan(lo, hi, gen.n_shards) if gen.n_shards is not None
+                else ShardPlan.from_interval(lo, hi, gen.interval_ns))
+        store = TraceStore(out_dir)
+        rank_shards = assignment(plan.n_shards, cfg.n_ranks,
+                                 gen.partitioning)
+
+        if self.cfg.backend == "process":
+            jobs = [(r, list(db_paths),
+                     (plan.t_start, plan.t_end, plan.n_shards),
+                     rank_shards[r].tolist(), out_dir,
+                     dataclasses.asdict(gen))
+                    for r in range(cfg.n_ranks)]
+            with mp.get_context(_MP_CONTEXT).Pool(
+                    min(cfg.n_ranks, os.cpu_count() or 1)) as pool:
+                joined = sum(pool.map(_gen_worker, jobs))
+        else:
+            joined = 0
+            for r in range(cfg.n_ranks):
+                joined += generate_rank(
+                    r, db_paths, plan, rank_shards[r], store, gen,
+                    contiguous=(gen.partitioning == "block"))
+
+        owner = owner_of_shards(plan.n_shards, cfg.n_ranks, gen.partitioning)
+        from .generation import SHARD_COLUMNS
+        store.write_manifest(StoreManifest(
+            t_start=plan.t_start, t_end=plan.t_end, n_shards=plan.n_shards,
+            n_ranks=cfg.n_ranks, partitioning=gen.partitioning,
+            columns=SHARD_COLUMNS, shard_owner=owner.tolist(),
+            extra={"interval_ns": gen.interval_ns,
+                   "join_window_ns": gen.join_window_ns,
+                   "join_cap": gen.join_cap}))
+
+        rows = {"KERNEL": 0, "MEMCPY": 0, "GPU": 0}
+        from .events import read_rank_db
+        for p in db_paths:
+            tr = read_rank_db(p, rank=0)
+            rows["KERNEL"] += len(tr.kernels)
+            rows["MEMCPY"] += len(tr.memcpys)
+            rows["GPU"] += len(tr.gpus)
+        return GenerationReport(
+            n_shards=plan.n_shards, n_ranks=cfg.n_ranks,
+            t_start=plan.t_start, t_end=plan.t_end, rows_per_table=rows,
+            joined_rows=joined, seconds=time.perf_counter() - t0)
+
+    # -- phase 2 -------------------------------------------------------------
+    def aggregate(self, store_dir: str) -> AggregationResult:
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        store = TraceStore(store_dir)
+        man = store.read_manifest()
+        plan = (ShardPlan(man.t_start, man.t_end, man.n_shards)
+                if cfg.agg_interval_ns is None
+                else ShardPlan.from_interval(man.t_start, man.t_end,
+                                             cfg.agg_interval_ns))
+        shard_sets = assignment(man.n_shards, cfg.n_ranks, "block")
+
+        if cfg.backend == "process":
+            jobs = [(store_dir, shard_sets[r].tolist(),
+                     (plan.t_start, plan.t_end, plan.n_shards), cfg.metric)
+                    for r in range(cfg.n_ranks)]
+            with mp.get_context(_MP_CONTEXT).Pool(
+                    min(cfg.n_ranks, os.cpu_count() or 1)) as pool:
+                results = pool.map(_agg_worker, jobs)
+            partials = [BinStats.from_columns(c) for c, _ in results]
+            kind_parts = [k for _, k in results]
+        elif cfg.backend == "jax":
+            partials, kind_parts = self._aggregate_jax(
+                store, shard_sets, plan)
+        else:
+            partials, kind_parts = [], []
+            for r in range(cfg.n_ranks):
+                part, kinds = load_rank_partials(
+                    store, shard_sets[r], plan, cfg.metric)
+                partials.append(part)
+                kind_parts.append(kinds)
+
+        merged, _ = round_robin_merge(partials, plan.n_shards)
+        kind_bytes: Dict[int, np.ndarray] = {}
+        for kp in kind_parts:
+            for k, v in kp.items():
+                kind_bytes[k] = kind_bytes.get(k, 0) + v
+        return AggregationResult(
+            plan=plan, metric=cfg.metric, stats=merged,
+            per_rank_stats=partials, copy_kind_bytes=kind_bytes,
+            seconds=time.perf_counter() - t0)
+
+    def _aggregate_jax(self, store: TraceStore, shard_sets, plan: ShardPlan):
+        """jax backend: concat all rank events, shard over devices, use the
+        collaborative collective reduction. Falls back to the device count
+        available (1 on this container, n on a pod)."""
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import Mesh
+        from .distributed import distributed_binstats_from_bins
+
+        ts_all, val_all = [], []
+        kind_parts = []
+        for r in range(len(shard_sets)):
+            kinds: Dict[int, np.ndarray] = {}
+            for s in shard_sets[r]:
+                if not store.has_shard(int(s)):
+                    continue
+                cols = store.read_shard(int(s))
+                ts_all.append(cols["k_start"].astype(np.int64))
+                val_all.append(cols[self.cfg.metric])
+                joined = cols["joined"] > 0
+                if joined.any():
+                    kb = cols["m_bytes"][joined]
+                    kk = cols["m_kind"][joined].astype(np.int64)
+                    kt = cols["m_start"][joined].astype(np.int64)
+                    kbins = plan.shard_of(kt)
+                    for kind in np.unique(kk):
+                        m = kk == kind
+                        acc = kinds.setdefault(int(kind),
+                                               np.zeros(plan.n_shards))
+                        np.add.at(acc, kbins[m], kb[m])
+            kind_parts.append(kinds)
+
+        ts = np.concatenate(ts_all) if ts_all else np.zeros(0, np.int64)
+        vals = np.concatenate(val_all) if val_all else np.zeros(0)
+        # exact int64 binning on host (ns timestamps overflow device int32)
+        bins = plan.shard_of(ts).astype(np.int32)
+        dev = jax.devices()
+        n_dev = len(dev)
+        pad = (-len(ts)) % max(n_dev, 1)
+        valid = np.concatenate([np.ones(len(ts), bool), np.zeros(pad, bool)])
+        bins = np.concatenate([bins, np.zeros(pad, np.int32)])
+        vals = np.concatenate([vals, np.zeros(pad)])
+
+        mesh = Mesh(np.asarray(dev), ("data",))
+        stats5 = np.asarray(distributed_binstats_from_bins(
+            jnp.asarray(bins), jnp.asarray(vals, jnp.float32),
+            plan.n_shards, mesh, valid=jnp.asarray(valid)))
+        part = BinStats(
+            count=stats5[:, 0].astype(np.float64),
+            sum=stats5[:, 1].astype(np.float64),
+            sumsq=stats5[:, 2].astype(np.float64),
+            min=np.where(stats5[:, 0] > 0, stats5[:, 3], np.inf),
+            max=np.where(stats5[:, 0] > 0, stats5[:, 4], -np.inf))
+        return [part], kind_parts
+
+    # -- end to end ----------------------------------------------------------
+    def run(self, db_paths: Sequence[str], work_dir: str) -> PipelineResult:
+        gen = self.generate(db_paths, work_dir)
+        agg = self.aggregate(work_dir)
+        bounds = agg.plan.boundaries()
+        report = anomalous_bins(agg.stats, k=self.cfg.iqr_k,
+                                top_k=self.cfg.top_k, boundaries=bounds)
+        topvar = top_variability_bins(agg.stats)
+        return PipelineResult(
+            generation=gen, aggregation=agg, anomalies=report,
+            top_variability=topvar,
+            gen_seconds=gen.seconds, agg_seconds=agg.seconds)

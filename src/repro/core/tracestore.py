@@ -1,0 +1,110 @@
+"""Columnar shard store — the framework's "parquet" stand-in.
+
+The paper's data-generation phase writes each shard's query results to a
+consistently named parquet file so the aggregation phase can address shards
+without coordination. pyarrow is not available offline, so we provide a
+self-contained columnar store with the same contract:
+
+  - one file per (rank-agnostic) shard index: ``shard_{idx:06d}.npz``
+  - a JSON manifest recording the global partition (time range, shard count,
+    interval, rank assignment, schema) so any process can locate any shard.
+
+Files are written atomically (tmp + rename) so a crashed writer never leaves
+a torn shard — part of the fault-tolerance story.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+def shard_filename(idx: int) -> str:
+    return f"shard_{idx:06d}.npz"
+
+
+@dataclasses.dataclass
+class StoreManifest:
+    t_start: int
+    t_end: int
+    n_shards: int
+    n_ranks: int
+    partitioning: str                  # "block" | "cyclic"
+    columns: List[str]
+    shard_owner: List[int]             # rank owning each shard (generation)
+    extra: Dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2)
+
+    @staticmethod
+    def from_json(s: str) -> "StoreManifest":
+        return StoreManifest(**json.loads(s))
+
+
+class TraceStore:
+    """Directory of columnar shard files + manifest."""
+
+    MANIFEST = "manifest.json"
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    # -- manifest ----------------------------------------------------------
+    def write_manifest(self, manifest: StoreManifest) -> None:
+        self._atomic_write(os.path.join(self.root, self.MANIFEST),
+                           manifest.to_json().encode())
+
+    def read_manifest(self) -> StoreManifest:
+        with open(os.path.join(self.root, self.MANIFEST)) as f:
+            return StoreManifest.from_json(f.read())
+
+    # -- shards ------------------------------------------------------------
+    def write_shard(self, idx: int, columns: Dict[str, np.ndarray]) -> str:
+        """Atomically write one shard's columns."""
+        path = os.path.join(self.root, shard_filename(idx))
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, **columns)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+            raise
+        return path
+
+    def read_shard(self, idx: int) -> Dict[str, np.ndarray]:
+        path = os.path.join(self.root, shard_filename(idx))
+        with np.load(path) as z:
+            return {k: z[k] for k in z.files}
+
+    def has_shard(self, idx: int) -> bool:
+        return os.path.exists(os.path.join(self.root, shard_filename(idx)))
+
+    def shard_indices(self) -> List[int]:
+        out = []
+        for name in sorted(os.listdir(self.root)):
+            if name.startswith("shard_") and name.endswith(".npz"):
+                out.append(int(name[len("shard_"):-len(".npz")]))
+        return out
+
+    # -- util ----------------------------------------------------------------
+    @staticmethod
+    def _atomic_write(path: str, data: bytes) -> None:
+        d = os.path.dirname(path)
+        fd, tmp = tempfile.mkstemp(dir=d)
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+            raise

@@ -1,0 +1,2 @@
+"""Deterministic restart-safe synthetic data pipeline."""
+from .pipeline import DataConfig, Prefetcher, make_batch

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the analyzer's compute hot spots (DESIGN.md §5).
+
+  binstats  fused timestamp-binning + per-bin moments (scatter-as-matmul)
+  iqr       in-VMEM bitonic sort + quantiles + Tukey fences
+  rolling   rolling mean/std with overlapped block views
+
+Each ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper
+with use_kernel/interpret switches) and ref.py (pure-jnp oracle). Validated
+in interpret mode on CPU; compiled path targets TPU VMEM/MXU.
+"""
+from .binstats import binstats, binstats_ref
+from .iqr import iqr_fences, iqr_ref
+from .rolling import rolling_stats, rolling_ref
+from .ssd import ssd_fused, ssd_ref
+from .flashattn import flash_attention, flash_attention_ref

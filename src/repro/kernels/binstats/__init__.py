@@ -1,0 +1,2 @@
+from .ops import binstats
+from .ref import binstats_ref

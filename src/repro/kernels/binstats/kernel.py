@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: fused timestamp-binning + per-bin moments.
+
+The paper's aggregation hot loop is, per rank:
+
+    for each sample (t, v):  bin = floor((t - t0)/interval)
+        count[bin] += 1; sum[bin] += v; sumsq[bin] += v*v
+        min[bin] = min(min[bin], v); max[bin] = max(...)
+
+On GPU this is a hash map / atomicAdd scatter. TPU has no atomics and the
+VPU hates data-dependent scatter — the TPU-native rethink (DESIGN.md §5) is
+**scatter-as-matmul on the MXU**:
+
+  * grid = (bin_tiles, event_tiles); the event axis is the INNER, sequential
+    dimension, so each bin tile's accumulator stays resident in VMEM across
+    all event tiles (sequential-grid accumulation replaces atomics);
+  * per (bin_tile, event_tile): one-hot(local_bin) is a (T_EV, T_BIN) fp32
+    tile; ``onehot.T @ [w, w·v, w·v²]`` runs on the MXU and yields the
+    additive moments for the whole tile in one 128-aligned matmul;
+  * min/max ride masked VPU reductions over the same one-hot mask.
+
+Binning is fused: the kernel receives float32 timestamps RELATIVE to the
+dataset start (int64 ns -> relative conversion is exact on host; see
+core.distributed for the contract) and computes
+``bin = clip(floor(ts * inv_width), 0, n_bins-1)`` in-register.
+
+Block shapes: T_EV=1024 events x T_BIN=128 bins -> one-hot tile is 512 KB
+fp32, the (T_BIN, 8) accumulator a few KB; both fit VMEM comfortably and
+the matmul contraction dim (1024) and output dim (128) are MXU-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Padded stats layout (lane-aligned to 8; 5 used):
+#   0: count, 1: sum, 2: sumsq, 3: min, 4: max, 5..7: zero padding
+N_STATS = 8
+
+NEG_CAP = -3.4e38
+POS_CAP = 3.4e38
+
+DEFAULT_EV_TILE = 1024
+DEFAULT_BIN_TILE = 128
+
+
+def _binstats_kernel(ts_ref, val_ref, valid_ref, out_ref, *,
+                     inv_width: float, n_bins: int, bin_tile: int):
+    """One (bin_tile, event_tile) grid cell."""
+    e = pl.program_id(1)
+    b = pl.program_id(0)
+
+    ts = ts_ref[...]                      # (T_EV,) f32 relative ns
+    v = val_ref[...].astype(jnp.float32)  # (T_EV,)
+    valid = valid_ref[...]                # (T_EV,) bool
+
+    bins = jnp.clip((ts * inv_width).astype(jnp.int32), 0, n_bins - 1)
+    local = bins - b * bin_tile           # bin id within this tile
+    lane = jax.lax.broadcasted_iota(jnp.int32, (ts.shape[0], bin_tile), 1)
+    onehot_b = (local[:, None] == lane) & valid[:, None]  # (T_EV, T_BIN)
+    onehot = onehot_b.astype(jnp.float32)
+
+    w = valid.astype(jnp.float32)
+    vals3 = jnp.stack([w, w * v, w * v * v], axis=1)      # (T_EV, 3)
+    # MXU: (T_BIN, T_EV) @ (T_EV, 3) — the scatter-as-matmul step.
+    sums = jax.lax.dot_general(
+        onehot, vals3, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (T_BIN, 3)
+
+    big_min = jnp.where(onehot_b, v[:, None], POS_CAP).min(axis=0)
+    big_max = jnp.where(onehot_b, v[:, None], NEG_CAP).max(axis=0)
+
+    tile = jnp.concatenate(
+        [sums,
+         big_min[:, None], big_max[:, None],
+         jnp.zeros((bin_tile, N_STATS - 5), jnp.float32)], axis=1)
+
+    @pl.when(e == 0)
+    def _init():
+        out_ref[...] = jnp.concatenate(
+            [jnp.zeros((bin_tile, 3), jnp.float32),
+             jnp.full((bin_tile, 1), POS_CAP, jnp.float32),
+             jnp.full((bin_tile, 1), NEG_CAP, jnp.float32),
+             jnp.zeros((bin_tile, N_STATS - 5), jnp.float32)], axis=1)
+
+    acc = out_ref[...]
+    out_ref[...] = jnp.concatenate(
+        [acc[:, :3] + tile[:, :3],
+         jnp.minimum(acc[:, 3:4], tile[:, 3:4]),
+         jnp.maximum(acc[:, 4:5], tile[:, 4:5]),
+         acc[:, 5:]], axis=1)
+
+
+def binstats_pallas(rel_ts: jnp.ndarray, values: jnp.ndarray,
+                    valid: jnp.ndarray, *, total_ns: float, n_bins: int,
+                    n_bins_padded: int,
+                    ev_tile: int = DEFAULT_EV_TILE,
+                    bin_tile: int = DEFAULT_BIN_TILE,
+                    interpret: bool = True) -> jnp.ndarray:
+    """(N,) events -> (n_bins_padded, 8) padded moments.
+
+    ``n_bins`` is the LOGICAL bin count (defines the bin width and the clip
+    range); ``n_bins_padded`` only rounds the output allocation up to the
+    bin tile. Inputs must be pre-padded: N % ev_tile == 0 (ops.py pads)."""
+    n = rel_ts.shape[0]
+    assert n % ev_tile == 0 and n_bins_padded % bin_tile == 0
+    assert n_bins_padded >= n_bins
+    grid = (n_bins_padded // bin_tile, n // ev_tile)
+    inv_width = float(n_bins / total_ns)
+
+    kern = functools.partial(_binstats_kernel, inv_width=inv_width,
+                             n_bins=n_bins, bin_tile=bin_tile)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ev_tile,), lambda b, e: (e,)),
+            pl.BlockSpec((ev_tile,), lambda b, e: (e,)),
+            pl.BlockSpec((ev_tile,), lambda b, e: (e,)),
+        ],
+        out_specs=pl.BlockSpec((bin_tile, N_STATS), lambda b, e: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_bins_padded, N_STATS),
+                                       jnp.float32),
+        interpret=interpret,
+    )(rel_ts, values, valid)

@@ -1,0 +1,60 @@
+"""Jit'd public wrapper for the binstats kernel: padding + dispatch.
+
+``binstats(...)`` pads events to the tile size and bins to the bin tile,
+then calls the Pallas kernel (interpret=True on CPU, compiled on TPU) or
+the jnp reference. Returns the UNPADDED (n_bins, 5) moment table matching
+:class:`repro.core.aggregation.BinStats` field order.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import (DEFAULT_BIN_TILE, DEFAULT_EV_TILE, binstats_pallas)
+from .ref import binstats_ref
+
+
+def _pad_to(x: jnp.ndarray, mult: int, fill=0):
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("total_ns", "n_bins", "use_kernel",
+                              "interpret", "ev_tile", "bin_tile"))
+def binstats(rel_ts: jnp.ndarray, values: jnp.ndarray,
+             valid: jnp.ndarray, *, total_ns: float, n_bins: int,
+             use_kernel: bool = True, interpret: bool = True,
+             ev_tile: int = DEFAULT_EV_TILE,
+             bin_tile: int = DEFAULT_BIN_TILE) -> jnp.ndarray:
+    """Fused binning + per-bin (count, sum, sumsq, min, max) moments.
+
+    rel_ts : (N,) float32 ns relative to dataset start
+    values : (N,) float32 metric samples
+    valid  : (N,) bool
+    """
+    rel_ts = _pad_to(rel_ts.astype(jnp.float32), ev_tile)
+    values = _pad_to(values.astype(jnp.float32), ev_tile)
+    valid = _pad_to(valid.astype(bool), ev_tile, fill=False)
+
+    if use_kernel:
+        n_bins_p = int(np.ceil(n_bins / bin_tile) * bin_tile)
+        out = binstats_pallas(rel_ts, values, valid,
+                              total_ns=total_ns, n_bins=n_bins,
+                              n_bins_padded=n_bins_p,
+                              ev_tile=ev_tile, bin_tile=bin_tile,
+                              interpret=interpret)
+        # events were clipped to n_bins-1 < n_bins_p, so padding bins are
+        # empty by construction; drop them.
+        out = out[:n_bins]
+    else:
+        out = binstats_ref(rel_ts, values, valid,
+                           total_ns=total_ns, n_bins=n_bins)
+    return out[:, :5]

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the binstats kernel (same contract, no Pallas)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import N_STATS, NEG_CAP, POS_CAP
+
+
+def binstats_ref(rel_ts: jnp.ndarray, values: jnp.ndarray,
+                 valid: jnp.ndarray, *, total_ns: float, n_bins: int,
+                 ) -> jnp.ndarray:
+    """(N,) events -> (n_bins, 8): count,sum,sumsq,min,max,0,0,0.
+
+    Bin contract identical to the kernel: float32 relative timestamps,
+    bin = clip(floor(ts * n_bins/total), 0, n_bins-1); invalid rows are
+    weightless and neutral for min/max. Empty bins report min=POS_CAP,
+    max=NEG_CAP (the merge identity), exactly like the kernel.
+    """
+    inv_width = jnp.float32(n_bins / total_ns)
+    v = values.astype(jnp.float32)
+    bins = jnp.clip((rel_ts * inv_width).astype(jnp.int32), 0, n_bins - 1)
+    w = valid.astype(jnp.float32)
+    count = jax.ops.segment_sum(w, bins, n_bins)
+    s = jax.ops.segment_sum(v * w, bins, n_bins)
+    ss = jax.ops.segment_sum(v * v * w, bins, n_bins)
+    mn = jax.ops.segment_min(jnp.where(valid, v, POS_CAP), bins, n_bins)
+    mx = jax.ops.segment_max(jnp.where(valid, v, NEG_CAP), bins, n_bins)
+    mn = jnp.where(jnp.isfinite(mn), mn, POS_CAP)
+    mx = jnp.where(jnp.isfinite(mx), mx, NEG_CAP)
+    pad = jnp.zeros((n_bins, N_STATS - 5), jnp.float32)
+    return jnp.concatenate(
+        [count[:, None], s[:, None], ss[:, None],
+         mn[:, None], mx[:, None], pad], axis=1)

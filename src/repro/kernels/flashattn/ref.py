@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash-attention kernel (dense masked softmax)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True, window: int = 0,
+                        scale: float = None,
+                        s_real: int = None) -> jnp.ndarray:
+    """q, k, v: (BH, S, hd). O(S²) dense reference."""
+    bh, s, hd = q.shape
+    scale = scale if scale is not None else hd ** -0.5
+    s_real = s_real if s_real is not None else s
+    logits = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = ki < s_real
+    if causal:
+        mask &= qi >= ki
+    if window > 0:
+        mask &= (qi - ki) < window
+    logits = jnp.where(mask[None], logits, -1e30)
+    p = jnp.exp(logits - logits.max(-1, keepdims=True))
+    p = jnp.where(mask[None], p, 0.0)
+    denom = jnp.maximum(p.sum(-1, keepdims=True), 1e-20)
+    return jnp.einsum("bqk,bkh->bqh", (p / denom).astype(jnp.float32),
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,2 @@
+from .ops import iqr_fences
+from .ref import iqr_ref

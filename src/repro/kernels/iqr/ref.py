@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the IQR kernel (same contract)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import POS_CAP
+
+
+def iqr_ref(scores: jnp.ndarray, occupied: jnp.ndarray, *,
+            k_factor: float = 1.5):
+    """Returns (sorted, flags, stats8) exactly like iqr_pallas."""
+    keyed = jnp.where(occupied, scores, POS_CAP)
+    srt = jnp.sort(keyed)
+    n = scores.shape[0]
+    n_occ = jnp.maximum(occupied.astype(jnp.float32).sum(), 1.0)
+
+    def pct(q):
+        pos = q * (n_occ - 1.0)
+        lo = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, n - 1)
+        hi = jnp.clip(lo + 1, 0, n - 1)
+        frac = pos - lo.astype(jnp.float32)
+        safe = jnp.where(srt >= POS_CAP, 0.0, srt)
+        return jnp.where(n_occ > 1,
+                         safe[lo] + frac * (safe[hi] - safe[lo]),
+                         safe[lo])
+
+    q1, q3 = pct(0.25), pct(0.75)
+    iqr = q3 - q1
+    hi_fence = q3 + k_factor * iqr
+    lo_fence = q1 - k_factor * iqr
+    flags = ((scores > hi_fence) & occupied).astype(jnp.int32)
+    stats = jnp.stack([q1, q3, iqr, lo_fence, hi_fence, n_occ,
+                       jnp.float32(0.0), jnp.float32(0.0)])
+    return jnp.where(srt >= POS_CAP, 0.0, srt), flags, stats

@@ -1,0 +1,2 @@
+from .ops import rolling_stats
+from .ref import rolling_ref

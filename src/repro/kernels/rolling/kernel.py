@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: rolling mean/std over a stall time series.
+
+The Fig-1a metric (memory-stall duration over elapsed time) is smoothed
+with a trailing window before plotting / fencing. The GPU version is a
+sliding-window loop; the TPU rethink streams the series through VMEM in
+blocks with **overlapped input views**: each grid step sees its own block
+AND the previous block (two BlockSpecs on the same operand, one shifted),
+so windowed sums come from a local cumulative sum — no scalar carry, no
+sequential dependence between grid steps beyond the pipelined reads.
+
+Requires window <= block (ops.py enforces/grows the block).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 1024
+
+
+def _rolling_kernel(prev_ref, cur_ref, out_ref, *, window: int, block: int):
+    b = pl.program_id(0)
+    prev = prev_ref[...]                       # block b-1 (b=0: block 0)
+    cur = cur_ref[...]                         # block b
+    # For b == 0 there is no previous block: zero it.
+    prev = jnp.where(b == 0, jnp.zeros_like(prev), prev)
+
+    both = jnp.concatenate([prev, cur])        # (2B,)
+    cs = jnp.cumsum(both.astype(jnp.float32))
+    cs2 = jnp.cumsum((both * both).astype(jnp.float32))
+
+    # out[i] = stats over both[B+i-window+1 .. B+i]
+    i = jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
+    hi = block + i
+    lo = hi - window                            # exclusive prefix index
+    glob = b * block + i                        # global position
+    # first elements of the series have partial windows
+    n_eff = jnp.minimum(glob + 1, window).astype(jnp.float32)
+    lo_valid = lo >= 0
+    # gather cs[lo] via shifted slice: cs[hi] - cs[lo] with lo>=0 always true
+    # when b>0 OR window<=i+1; for b==0, lo may index into the zeroed prev
+    # region, which contributes 0 to the cumsum — so cs[lo] is exact anyway.
+    cs_hi = cs[block:]                          # cs at positions B..2B-1
+    cs2_hi = cs2[block:]
+    # roll the cumsum so index i reads position B+i-window
+    cs_lo = jnp.roll(cs, window)[block:]
+    cs2_lo = jnp.roll(cs2, window)[block:]
+    cs_lo = jnp.where(lo_valid, cs_lo, 0.0)
+    cs2_lo = jnp.where(lo_valid, cs2_lo, 0.0)
+
+    s = cs_hi - cs_lo
+    ss = cs2_hi - cs2_lo
+    mean = s / n_eff
+    var = jnp.maximum(ss / n_eff - mean * mean, 0.0)
+    out_ref[...] = jnp.stack([mean, jnp.sqrt(var)], axis=1)
+
+
+def rolling_pallas(x: jnp.ndarray, *, window: int,
+                   block: int = DEFAULT_BLOCK,
+                   interpret: bool = True) -> jnp.ndarray:
+    """x: (N,) f32 with N % block == 0, window <= block.
+    Returns (N, 2): rolling mean and std (trailing window, partial at
+    the start of the series)."""
+    n = x.shape[0]
+    assert n % block == 0 and window <= block
+    grid = (n // block,)
+    kern = functools.partial(_rolling_kernel, window=window, block=block)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            # previous block (clamped at 0 — kernel zeroes it for b==0)
+            pl.BlockSpec((block,), lambda b: (jnp.maximum(b - 1, 0),)),
+            pl.BlockSpec((block,), lambda b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((block, 2), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 2), jnp.float32),
+        interpret=interpret,
+    )(x, x)

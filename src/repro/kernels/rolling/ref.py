@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the rolling mean/std kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rolling_ref(x: jnp.ndarray, *, window: int) -> jnp.ndarray:
+    """(N,) -> (N, 2) trailing-window mean/std, partial windows at start."""
+    x = x.astype(jnp.float32)
+    n = x.shape[0]
+    cs = jnp.cumsum(x)
+    cs2 = jnp.cumsum(x * x)
+    i = jnp.arange(n)
+    lo = i - window                      # exclusive prefix index
+    cs_lo = jnp.where(lo >= 0, cs[jnp.maximum(lo, 0)], 0.0)
+    cs2_lo = jnp.where(lo >= 0, cs2[jnp.maximum(lo, 0)], 0.0)
+    n_eff = jnp.minimum(i + 1, window).astype(jnp.float32)
+    s = cs - cs_lo
+    ss = cs2 - cs2_lo
+    mean = s / n_eff
+    var = jnp.maximum(ss / n_eff - mean * mean, 0.0)
+    return jnp.stack([mean, jnp.sqrt(var)], axis=1)

@@ -1,0 +1,2 @@
+from .ops import ssd_fused
+from .ref import ssd_ref

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: fused SSD (mamba2) chunk scan.
+
+The XLA formulation of the SSD chunk step (models/ssm.py) materializes the
+(q × q) decay matrix L, the C·Bᵀ score tile and the decay weights in HBM —
+per-chunk traffic that makes every SSM cell memory-bound in the baseline
+roofline (§Perf). This kernel keeps the ENTIRE chunk step in VMEM:
+
+  grid = (B·H, n_chunks); the chunk axis is the inner, sequential
+  dimension, so the (P, N) inter-chunk state lives in a VMEM scratch
+  across chunks (exactly the binstats sequential-accumulator pattern).
+
+Per grid cell, all in VMEM/registers:
+  cum   = cumsum(dtA)                       (q,)
+  L     = exp(cum_i - cum_j) ⊙ causal       (q, q)      — never hits HBM
+  S     = (C Bᵀ ⊙ L) x̄  + exp(cum)·(C h)    (q, P) MXU
+  h'    = exp(cum_last)·h + (B ⊙ decay)ᵀ x̄  (P, N) MXU
+
+HBM traffic = x̄/dt/B/C reads + y write + the tiny state — the roofline
+memory term drops by the L/score factor (≈ q/P ≈ 2× plus all fp32
+intermediates; measured in EXPERIMENTS.md §Perf).
+
+B/C are per-GROUP; the index_map routes head -> group, so group-shared
+tensors are fetched once per head WITHOUT a host-side repeat.
+
+Block shapes: q = chunk (128 default) aligns the MXU contraction dim; N
+and P pad to the 128-lane boundary inside the kernel automatically (they
+are the minor dims of (q, N)/(q, P) tiles).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dta_ref, b_ref, c_ref, y_ref, state_ref, *,
+                nc: int):
+    """One (bh, chunk) grid cell.
+
+    x_ref: (q, P) x̄ = dt·x ;  dta_ref: (q,) dtA ≤ 0
+    b_ref, c_ref: (q, N) ;  y_ref: (q, P) out ; state_ref: (P, N) scratch
+    carried across the sequential chunk axis (output-aliased).
+    """
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xb = x_ref[0].astype(jnp.float32)            # (q, P)
+    dta = dta_ref[0].astype(jnp.float32)         # (q,)
+    B = b_ref[0].astype(jnp.float32)             # (q, N)
+    C = c_ref[0].astype(jnp.float32)             # (q, N)
+    h = state_ref[0]                             # (P, N) f32
+
+    cum = jnp.cumsum(dta)                        # (q,)
+    last = cum[-1]
+
+    # intra-chunk: (C Bᵀ ⊙ L) x̄ — L lives only in VREGs/VMEM
+    q = xb.shape[0]
+    li = cum[:, None] - cum[None, :]             # (q, q) ≤ 0 on tril
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(iota_j <= iota_i, jnp.exp(li), 0.0)
+    scores = jax.lax.dot_general(                # C Bᵀ : (q, q)
+        C, B, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_intra = jax.lax.dot_general(               # (q, q) @ (q, P)
+        scores * L, xb, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # inter-chunk: exp(cum)·(C h)
+    y_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        C, h, (((1,), (1,)), ((), ())),          # (q, N)x(P, N) -> (q, P)
+        preferred_element_type=jnp.float32)
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h' = exp(last)·h + x̄ᵀ (B ⊙ decay)
+    decay = jnp.exp(last - cum)[:, None]         # (q, 1)
+    bw = B * decay                               # (q, N)
+    h_new = jnp.exp(last) * h + jax.lax.dot_general(
+        xb, bw, (((0,), (0,)), ((), ())),        # (q,P)ᵀ(q,N) -> (P, N)
+        preferred_element_type=jnp.float32)
+    state_ref[0] = h_new
+
+
+def ssd_pallas(xbar: jnp.ndarray, dta: jnp.ndarray, B: jnp.ndarray,
+               C: jnp.ndarray, *, hg: int, chunk: int,
+               interpret: bool = True):
+    """Fused SSD scan.
+
+    xbar: (BH, S, P) — dt·x, head-major
+    dta:  (BH, S)   — dt·A ≤ 0
+    B, C: (BG, S, N) — per group; head bh belongs to group bh // hg
+    Returns (y (BH, S, P) like xbar, state (BH, P, N) fp32).
+    S must be a multiple of ``chunk`` (ops.py pads).
+    """
+    bh, s, p = xbar.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    grid = (bh, nc)
+
+    kern = functools.partial(_ssd_kernel, nc=nc)
+    y, state = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk), lambda i, c: (i, c)),
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i // hg, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i // hg, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, p, n), lambda i, c: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, p), xbar.dtype),
+            jax.ShapeDtypeStruct((bh, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xbar, dta, B, C)
+    return y, state

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the SSD kernel — same head-major contract."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(xbar: jnp.ndarray, dta: jnp.ndarray, B: jnp.ndarray,
+            C: jnp.ndarray, *, hg: int, chunk: int):
+    """Sequential per-token recurrence (exact semantics, O(S) steps).
+
+    xbar (BH, S, P); dta (BH, S); B, C (BG, S, N); head bh -> group bh//hg.
+    Returns (y (BH, S, P), state (BH, P, N) fp32).
+    """
+    bh, s, p = xbar.shape
+    n = B.shape[-1]
+    Bh = jnp.repeat(B, hg, axis=0).astype(jnp.float32)     # (BH, S, N)
+    Ch = jnp.repeat(C, hg, axis=0).astype(jnp.float32)
+
+    def step(h, inp):
+        xb_t, dta_t, b_t, c_t = inp          # (BH,P), (BH,), (BH,N) ×2
+        a = jnp.exp(dta_t)[:, None, None]
+        h = a * h + xb_t[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bpn,bn->bp", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((bh, p, n), jnp.float32)
+    xs = (jnp.moveaxis(xbar.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dta.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(xbar.dtype), h_fin

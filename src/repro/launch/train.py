@@ -1,0 +1,58 @@
+"""Training CLI: ``python -m repro.launch.train --arch mamba2-370m --smoke``.
+
+On this CPU container only ``--smoke`` configs run end-to-end; full configs
+are exercised by the dry-run (``repro.launch.dryrun``). On a real pod the
+same driver runs the full config over ``make_production_mesh()``.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.data.pipeline import DataConfig
+from repro.train import RunConfig, TrainConfig, Trainer
+from repro.train.optim import AdamWConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use make_production_mesh() (real pods only)")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(
+        args.arch)
+    mesh = None
+    if args.production_mesh:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh()
+
+    tcfg = TrainConfig(
+        optim=AdamWConfig(peak_lr=args.lr, warmup_steps=args.steps // 10,
+                          total_steps=args.steps),
+        grad_accum=args.grad_accum)
+    dcfg = DataConfig(batch=args.batch, seq=args.seq)
+    rcfg = RunConfig(steps=args.steps, workdir=args.workdir,
+                     ckpt_every=max(args.steps // 2, 1),
+                     monitor_every=max(args.steps // 4, 1))
+    trainer = Trainer(cfg, tcfg, dcfg, rcfg, mesh=mesh)
+    res = trainer.run(progress=lambda i, m: print(
+        f"step {i}: loss={float(np.asarray(m['loss'])):.4f} "
+        f"gnorm={float(np.asarray(m['grad_norm'])):.3f}"))
+    print(f"final loss {res['losses'][-1]:.4f}; "
+          f"telemetry -> {res['telemetry_dir']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model substrate: the ten assigned architectures' building blocks."""

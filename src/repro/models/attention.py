@@ -1,0 +1,451 @@
+"""Attention family: GQA, sliding-window, MLA — train/prefill + decode.
+
+Memory-bounded design: train/prefill attention is a **chunked online-softmax
+scan** (flash-attention dataflow expressed in jax.lax, left to XLA to fuse)
+— the (S x S) score matrix never materializes; the live working set is one
+(q_chunk x kv_chunk) tile per head. Sliding-window attention restricts the
+scan to the chunks that intersect the window, making SWA genuinely
+sub-quadratic (not a masked dense matmul).
+
+Decode is single-token dense attention over the cache; SWA decode uses a
+ring buffer of window size; MLA decode uses the weight-absorbed latent form
+(cache = kv_lora + rope_k per token, shared across heads — the entire point
+of MLA).
+
+Shapes: q (B, S, Hq, hd), k/v (B, S, Hkv, hd), GQA via head grouping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import apply_mrope, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope: str = "rope"              # rope | partial | mrope | none
+    rope_theta: float = 10000.0
+    rotary_fraction: float = 1.0
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    window: int = 0                 # 0 = full attention; >0 = SWA
+    causal: bool = True
+    qkv_bias: bool = False          # stablelm-2 / qwen2 style
+    # online-softmax tile sizes: the live (q_chunk × kv_chunk) fp32 score
+    # tile per (head-group, batch) must fit the per-device memory budget
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    # MLA (deepseek-v2) — 0 disables
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 0
+    qk_nope_dim: int = 0
+    v_head_dim: int = 0
+
+    @property
+    def is_mla(self) -> bool:
+        return self.kv_lora_rank > 0
+
+
+# --- parameter init ----------------------------------------------------------
+
+def attn_init(key, cfg: AttnConfig) -> Dict:
+    if cfg.is_mla:
+        return mla_init(key, cfg)
+    ks = jax.random.split(key, 4)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), fan_in=d),
+        "wk": dense_init(ks[1], (d, kv, hd), fan_in=d),
+        "wv": dense_init(ks[2], (d, kv, hd), fan_in=d),
+        "wo": dense_init(ks[3], (h, hd, d), fan_in=h * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), jnp.float32)
+        p["bk"] = jnp.zeros((kv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((kv, hd), jnp.float32)
+    return p
+
+
+def mla_init(key, cfg: AttnConfig) -> Dict:
+    ks = jax.random.split(key, 8)
+    d, h = cfg.d_model, cfg.n_heads
+    ql, kl = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": dense_init(ks[0], (d, ql), fan_in=d),          # down-proj
+        "wq_b": dense_init(ks[1], (ql, h, dn + dr), fan_in=ql),
+        "wkv_a": dense_init(ks[2], (d, kl), fan_in=d),         # latent
+        "wk_rope": dense_init(ks[3], (d, dr), fan_in=d),       # shared rope k
+        "wk_b": dense_init(ks[4], (kl, h, dn), fan_in=kl),     # up-proj K
+        "wv_b": dense_init(ks[5], (kl, h, dv), fan_in=kl),     # up-proj V
+        "wo": dense_init(ks[6], (h, dv, d), fan_in=h * dv),
+        "q_norm": {"scale": jnp.ones((ql,), jnp.float32)},
+        "kv_norm": {"scale": jnp.ones((kl,), jnp.float32)},
+    }
+
+
+# --- chunked online-softmax core ----------------------------------------------
+
+def _chunk_attend(q, k, v, mask, scale):
+    """One (q_chunk, kv_chunk) tile: returns (out_unnorm, m, l).
+    q: (B, Q, H, hd), k: (B, K, Hkv, hd), v: (B, K, Hkv, hdv),
+    mask: (Q, K) bool or None. hdv may differ from hd (MLA)."""
+    b, qlen, h, hd = q.shape
+    kv_h = k.shape[2]
+    g = h // kv_h
+    qg = q.reshape(b, qlen, kv_h, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
+    m = s.max(axis=-1)                                     # (B,kv,g,Q)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+    return o, m, l
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      scale: Optional[float] = None,
+                      q_chunk: int = 2048, kv_chunk: int = 2048,
+                      q_offset: int = 0):
+    """Flash-style attention: scan over KV chunks with running (m, l, acc).
+
+    window > 0: each query attends to keys in (pos-window, pos]. The scan
+    for a given q chunk only visits kv chunks intersecting
+    [q_start - window, q_end] — sub-quadratic compute for SWA.
+    q_offset: absolute position of q[0] (for prefill continuation).
+    """
+    b, s_q, h, hd = q.shape
+    s_kv = k.shape[1]
+    kv_h = k.shape[2]
+    g = h // kv_h
+    scale = scale if scale is not None else 1.0 / np.sqrt(q.shape[-1])
+    q_chunk = min(q_chunk, s_q)
+    kv_chunk = min(kv_chunk, s_kv)
+    n_q = (s_q + q_chunk - 1) // q_chunk
+    n_kv = (s_kv + kv_chunk - 1) // kv_chunk
+    # pad to chunk multiples
+    q = jnp.pad(q, ((0, 0), (0, n_q * q_chunk - s_q), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, n_kv * kv_chunk - s_kv), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, n_kv * kv_chunk - s_kv), (0, 0), (0, 0)))
+
+    hdv = v.shape[-1]
+    q_pos_base = jnp.arange(q_chunk) + q_offset
+    kv_pos_base = jnp.arange(kv_chunk)
+
+    if window > 0:
+        max_visits = min((q_chunk + window + kv_chunk - 2) // kv_chunk + 1,
+                         n_kv)
+    else:
+        max_visits = n_kv
+
+    def q_block(qi):
+        """Attend one query chunk against the kv chunks it can see.
+        Runs under lax.map, so qi is traced — everything shape-static."""
+        qc = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, 1)
+        q_pos = q_pos_base + qi * q_chunk
+
+        if window > 0:
+            # only kv chunks intersecting [q_start - window + 1, q_end]
+            lo = jnp.maximum(
+                (qi * q_chunk + q_offset - window + 1) // kv_chunk, 0)
+            hi_pos = qi * q_chunk + q_offset + q_chunk - 1
+            hi = jnp.minimum(hi_pos // kv_chunk, n_kv - 1)
+            visits = jnp.minimum(lo + jnp.arange(max_visits), hi)
+            live = lo + jnp.arange(max_visits) <= hi
+        else:
+            visits = jnp.arange(n_kv)
+            live = jnp.ones((n_kv,), bool) if not causal else (
+                jnp.arange(n_kv) * kv_chunk <=
+                qi * q_chunk + q_offset + q_chunk - 1)
+
+        # remat per kv-chunk: the (q_chunk × kv_chunk) score tile is
+        # recomputed in the backward pass instead of being stashed per
+        # iteration (flash-attention memory behaviour; without this the
+        # scan saves every tile and decode/train blows HBM)
+        @jax.checkpoint
+        def body(carry, inputs):
+            acc, m_run, l_run = carry
+            ki, is_live = inputs
+            kc = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, 1)
+            vc = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, 1)
+            kv_pos = kv_pos_base + ki * kv_chunk
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= q_pos[:, None] >= kv_pos[None, :]
+            if window > 0:
+                mask &= q_pos[:, None] - kv_pos[None, :] < window
+            mask &= kv_pos[None, :] < s_kv          # kv padding
+            mask &= is_live
+            o, m, l = _chunk_attend(qc, kc, vc, mask, scale)
+            m_new = jnp.maximum(m_run, m)
+            alpha = jnp.exp(m_run - m_new)        # (B, kv, g, Q)
+            beta = jnp.exp(m - m_new)
+            # acc/o are (B, Q, kv, g, hdv): move Q behind (kv, g)
+            alpha_t = jnp.transpose(alpha, (0, 3, 1, 2))[..., None]
+            beta_t = jnp.transpose(beta, (0, 3, 1, 2))[..., None]
+            acc = acc * alpha_t.astype(acc.dtype) + \
+                o * beta_t.astype(o.dtype)
+            l_new = l_run * alpha + l * beta
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, q_chunk, kv_h, g, hdv), jnp.float32)
+        m0 = jnp.full((b, kv_h, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv_h, g, q_chunk), jnp.float32)
+        (acc, m_f, l_f), _ = jax.lax.scan(
+            body, (acc0, m0, l0), (visits, live))
+        l_f = jnp.maximum(l_f, 1e-20)
+        out = acc / jnp.transpose(l_f, (0, 3, 1, 2))[..., None]
+        return out.reshape(b, q_chunk, h, hdv)
+
+    # lax.map keeps the HLO one-block-sized regardless of sequence length
+    outs = jax.lax.map(q_block, jnp.arange(n_q))   # (n_q, B, qc, H, hdv)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, n_q * q_chunk, h, hdv)
+    return out[:, :s_q].astype(v.dtype)
+
+
+# --- standard (GQA / SWA) attention -------------------------------------------
+
+def _project_qkv(params, x, cfg: AttnConfig, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    if cfg.rope == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "partial":
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_fraction)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rotary_fraction)
+    elif cfg.rope == "mrope":
+        # positions here is (B, 3, S)
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    return q, k, v
+
+
+def _constrain_heads(t, ctx):
+    """§Perf H4: pin the head axis of (B, S, H, hd) activations to the
+    tensor axis. Without the anchor, GSPMD replicates K/V over `model`
+    inside the chunked-attention loop and re-gathers the FULL tensor per
+    kv-chunk (measured: 805 MB × 31k gathers on deepseek train_4k)."""
+    if ctx is None or ctx.tensor is None:
+        return t
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    h = t.shape[2]
+    h_ax = ctx.tensor if h % ctx.tensor_size == 0 else None
+    b_ax = ctx.batch if (ctx.batch and
+                         t.shape[0] % ctx.batch_size == 0) else None
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(ctx.mesh, P(b_ax, None, h_ax, None)))
+
+
+def attn_forward(params, x, cfg: AttnConfig, positions=None, ctx=None):
+    """Training / prefill forward. Returns (out, cache_entries)."""
+    if cfg.is_mla:
+        return mla_forward(params, x, cfg, positions, ctx)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    # §Perf H1: expand KV heads to the query-head layout with a STATIC
+    # gather. The (kv, g) reshape inside grouped attention factors the
+    # tensor-sharded H axis into (kv, g) — unexpressible for the mesh's
+    # 16-way sharding, so GSPMD regathered K/V per kv-chunk (e.g. 805 MB
+    # × 31k gathers on deepseek train). One intact H axis shards cleanly;
+    # the decode path keeps the compact GQA cache. Only worth it when the
+    # head axis actually shards (hymba's 25 heads replicate: expansion
+    # would cost 5× KV traffic for zero sharding benefit — measured +8%).
+    expand = (cfg.n_kv_heads != cfg.n_heads and ctx is not None
+              and ctx.tensor is not None
+              and cfg.n_heads % ctx.tensor_size == 0)
+    if expand:
+        kv_map = jnp.arange(cfg.n_heads) // \
+            (cfg.n_heads // cfg.n_kv_heads)
+        k_x = jnp.take(k, kv_map, axis=2)
+        v_x = jnp.take(v, kv_map, axis=2)
+    else:
+        k_x, v_x = k, v
+    q = _constrain_heads(q, ctx)
+    k_x = _constrain_heads(k_x, ctx)
+    v_x = _constrain_heads(v_x, ctx)
+    out = chunked_attention(
+        q, k_x, v_x, causal=cfg.causal, window=cfg.window,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    out = _constrain_heads(out, ctx)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, {"k": k, "v": v}
+
+
+def attn_decode(params, x, cache, cfg: AttnConfig, cache_index):
+    """One-token decode against a (possibly ring) KV cache.
+
+    x: (B, 1, D); cache: {"k","v"}: (B, C, Hkv, hd) where C = window for
+    SWA or max_len otherwise; cache_index: scalar int32 — number of tokens
+    already absorbed (absolute position of the new token).
+    """
+    if cfg.is_mla:
+        return mla_decode(params, x, cache, cfg, cache_index)
+    b = x.shape[0]
+    pos = jnp.full((b, 1), cache_index, jnp.int32)
+    if cfg.rope == "mrope":
+        # decode: text token — all three position ids advance together
+        pos3 = jnp.full((b, 3, 1), cache_index, jnp.int32)
+        q, k, v = _project_qkv(params, x, cfg, pos3)
+    else:
+        q, k, v = _project_qkv(params, x, cfg, pos)
+
+    c = cache["k"].shape[1]
+    if cfg.window > 0:
+        slot = cache_index % c              # ring buffer (c == window)
+    else:
+        slot = jnp.minimum(cache_index, c - 1)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, 1)
+
+    # which cache slots hold real tokens (ring-aware)
+    idx = jnp.arange(c)
+    if cfg.window > 0:
+        # once the ring has wrapped every slot is live; before that only
+        # slots [0, slot] have been written
+        valid = (cache_index >= c) | (idx <= slot)
+    else:
+        valid = idx <= slot
+    kv_h, hd = k.shape[2], k.shape[3]
+    g = cfg.n_heads // kv_h
+    qg = q.reshape(b, 1, kv_h, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_cache).astype(jnp.float32)
+    s = s / np.sqrt(hd)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v_cache)
+    o = o.reshape(b, 1, cfg.n_heads, hd)
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def attn_init_cache(cfg: AttnConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16) -> Dict:
+    c = min(cfg.window, max_len) if cfg.window > 0 else max_len
+    if cfg.is_mla:
+        return {
+            "latent": jnp.zeros((batch, c, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, c, cfg.qk_rope_dim), dtype),
+        }
+    return {"k": jnp.zeros((batch, c, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, c, cfg.n_kv_heads, cfg.head_dim), dtype)}
+
+
+# --- MLA (deepseek-v2) ---------------------------------------------------------
+
+def _mla_norm(scale, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def mla_forward(params, x, cfg: AttnConfig, positions=None, ctx=None):
+    """MLA train/prefill: expand the latent to per-head K/V, attend with
+    decoupled RoPE. Cache entries are the LATENT (+ shared rope key)."""
+    b, s, _ = x.shape
+    dt = x.dtype
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    q_lat = jnp.einsum("bsd,dl->bsl", x, params["wq_a"].astype(dt))
+    q_lat = _mla_norm(params["q_norm"]["scale"], q_lat)
+    q = jnp.einsum("bsl,lhk->bshk", q_lat, params["wq_b"].astype(dt))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    latent = jnp.einsum("bsd,dl->bsl", x, params["wkv_a"].astype(dt))
+    latent = _mla_norm(params["kv_norm"]["scale"], latent)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, params["wk_rope"].astype(dt))
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+
+    k_nope = jnp.einsum("bsl,lhk->bshk", latent, params["wk_b"].astype(dt))
+    v = jnp.einsum("bsl,lhv->bshv", latent, params["wv_b"].astype(dt))
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, cfg.n_heads, dr))], axis=-1)
+    q_full = _constrain_heads(q_full, ctx)
+    k_full = _constrain_heads(k_full, ctx)
+    v = _constrain_heads(v, ctx)
+    scale = 1.0 / np.sqrt(dn + dr)
+    out = chunked_attention(q_full, k_full, v, causal=cfg.causal,
+                            scale=scale, q_chunk=cfg.q_chunk,
+                            kv_chunk=cfg.kv_chunk)
+    out = _constrain_heads(out, ctx)
+    y = jnp.einsum("bshv,hvd->bsd", out, params["wo"].astype(dt))
+    return y, {"latent": latent, "k_rope": k_rope}
+
+
+def mla_decode(params, x, cache, cfg: AttnConfig, cache_index):
+    """Weight-absorbed MLA decode: score/accumulate directly in latent space.
+
+    cache: latent (B, C, kv_lora), k_rope (B, C, dr). Per-step compute is
+    O(H·(dn·kl)) for the absorption plus O(C·(kl+dr)) per head for scores —
+    the cache is HEAD-SHARED, 576 B/token/layer in bf16.
+    """
+    b = x.shape[0]
+    dt = x.dtype
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kl = cfg.kv_lora_rank
+    pos = cache_index[None, None]
+
+    q_lat = jnp.einsum("bsd,dl->bsl", x, params["wq_a"].astype(dt))
+    q_lat = _mla_norm(params["q_norm"]["scale"], q_lat)
+    q = jnp.einsum("bsl,lhk->bshk", q_lat, params["wq_b"].astype(dt))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    latent_new = jnp.einsum("bsd,dl->bsl", x, params["wkv_a"].astype(dt))
+    latent_new = _mla_norm(params["kv_norm"]["scale"], latent_new)
+    k_rope_new = jnp.einsum("bsd,dr->bsr", x, params["wk_rope"].astype(dt))
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], pos,
+                            cfg.rope_theta)[:, :, 0, :]
+
+    c = cache["latent"].shape[1]
+    slot = jnp.minimum(cache_index, c - 1)
+    latent = jax.lax.dynamic_update_slice_in_dim(
+        cache["latent"], latent_new.astype(cache["latent"].dtype), slot, 1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), slot, 1)
+
+    # absorb W_UK into the query: q_abs (B,1,H,kl)
+    q_abs = jnp.einsum("bshk,lhk->bshl", q_nope, params["wk_b"].astype(dt))
+    scores = jnp.einsum("bshl,bcl->bshc", q_abs, latent.astype(dt))
+    scores += jnp.einsum("bshr,bcr->bshc", q_rope, k_rope.astype(dt))
+    scores = scores.astype(jnp.float32) / np.sqrt(dn + dr)
+    valid = jnp.arange(c) <= slot
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    # accumulate in latent space, then up-project through W_UV
+    ctx = jnp.einsum("bshc,bcl->bshl", p.astype(dt), latent.astype(dt))
+    out = jnp.einsum("bshl,lhv->bshv", ctx, params["wv_b"].astype(dt))
+    y = jnp.einsum("bshv,hvd->bsd", out, params["wo"].astype(dt))
+    return y, {"latent": latent, "k_rope": k_rope}

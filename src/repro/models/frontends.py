@@ -1,0 +1,73 @@
+"""Modality frontend STUBS (per assignment: ``[audio]``/``[vlm]`` entries
+specify the transformer BACKBONE only; ``input_specs()`` provides
+precomputed frame/patch embeddings).
+
+  audio (hubert-xlarge): batch supplies conv-feature-extractor outputs
+    ``frames`` (B, S, frontend_dim); we project to d_model and add fixed
+    sinusoidal positions (stand-in for HuBERT's conv positional encoding —
+    recorded as an adaptation in DESIGN.md).
+  vlm (qwen2-vl): batch supplies vision-tower outputs ``patches``
+    (B, S_img, frontend_dim), projected and prepended to the text token
+    embeddings; M-RoPE ``positions3`` (B, 3, S_total) covers both spans.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def sinusoid_positions(s: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    pos = np.arange(s)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    out = np.zeros((s, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out, dtype)
+
+
+def embed_tokens(params, tokens, dtype) -> jnp.ndarray:
+    return jnp.take(params["embed"]["tokens"], tokens, axis=0).astype(dtype)
+
+
+def assemble(cfg, params, batch: Dict,
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Returns (x (B, S_total, D), positions, prefix_len).
+
+    ``prefix_len`` counts non-text positions (meta tokens + image patches)
+    that must be sliced off before the LM head / loss.
+    """
+    dtype = cfg.dtype
+    if cfg.frontend == "audio":
+        frames = batch["frames"]
+        x = jnp.einsum("bsf,fd->bsd", frames.astype(dtype),
+                       params["frontend_proj"].astype(dtype))
+        x = x + sinusoid_positions(x.shape[1], cfg.d_model, dtype)
+        positions = jnp.arange(x.shape[1])[None, :]
+        prefix = 0
+    elif cfg.frontend == "vlm":
+        patches = batch["patches"]
+        vis = jnp.einsum("bsf,fd->bsd", patches.astype(dtype),
+                         params["frontend_proj"].astype(dtype))
+        txt = embed_tokens(params, batch["tokens"], dtype)
+        x = jnp.concatenate([vis, txt], axis=1)
+        positions = batch["positions3"]               # (B, 3, S_total)
+        prefix = patches.shape[1]
+    else:
+        x = embed_tokens(params, batch["tokens"], dtype)
+        positions = jnp.arange(x.shape[1])[None, :]
+        prefix = 0
+
+    if cfg.meta_tokens > 0:
+        b = x.shape[0]
+        meta = jnp.broadcast_to(
+            params["meta_tokens"].astype(dtype)[None],
+            (b, cfg.meta_tokens, cfg.d_model))
+        x = jnp.concatenate([meta, x], axis=1)
+        if positions.ndim == 2:                       # plain positions
+            positions = jnp.arange(x.shape[1])[None, :]
+        prefix += cfg.meta_tokens
+    return x, positions, prefix

@@ -1,0 +1,159 @@
+"""Common model primitives: norms, linears, embeddings, RoPE variants.
+
+Parameters are plain nested dicts of jnp arrays. Sharding is attached by
+PATH-based logical rules (models/shardrules.py), so init code stays free of
+mesh details. Compute runs in ``cfg.dtype`` (bf16 by default) with fp32
+params and fp32 logits/loss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, scale: float, dtype=jnp.float32):
+    """He/LeCun-style init used across the zoo."""
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def dense_init(key, shape, fan_in: Optional[int] = None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return truncated_normal(key, shape, 1.0 / np.sqrt(fan_in), dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return truncated_normal(key, shape, 1.0, dtype)
+
+
+# --- norms ------------------------------------------------------------------
+
+def rmsnorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dt)
+
+
+def layernorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32),
+            "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dt)
+
+
+# --- activations -------------------------------------------------------------
+
+def squared_relu(x):
+    """Primer / Nemotron-4 activation: relu(x)^2."""
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "relu2": squared_relu,
+}
+
+
+# --- rotary position embeddings ----------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0,
+               rotary_dim: Optional[int] = None) -> jnp.ndarray:
+    """Inverse frequencies for the rotated sub-dimension (rotary_dim)."""
+    rd = rotary_dim or head_dim
+    return 1.0 / (theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0,
+               rotary_fraction: float = 1.0) -> jnp.ndarray:
+    """Standard (optionally partial) RoPE.
+
+    x: (..., S, H, head_dim); positions: broadcastable to (..., S).
+    ``rotary_fraction < 1`` rotates only the leading fraction of head_dim
+    (Nemotron-4 style partial RoPE); the tail passes through unchanged.
+    """
+    head_dim = x.shape[-1]
+    rd = int(head_dim * rotary_fraction)
+    rd -= rd % 2
+    if rd == 0:
+        return x
+    inv = rope_freqs(head_dim, theta, rd)                  # (rd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv    # (..., S, rd/2)
+    sin = jnp.sin(ang)[..., None, :]                        # (..., S, 1, rd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    rot, rest = x[..., :rd], x[..., rd:]
+    r1, r2 = rot[..., : rd // 2], rot[..., rd // 2:]
+    out1 = r1 * cos - r2 * sin
+    out2 = r2 * cos + r1 * sin
+    return jnp.concatenate([out1.astype(x.dtype), out2.astype(x.dtype),
+                            rest], axis=-1)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray,
+                sections: Tuple[int, int, int],
+                theta: float = 10000.0) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: the head_dim frequency bands are split into
+    (temporal, height, width) sections, each rotated by its own position id.
+
+    x: (B, S, H, head_dim); positions3: (B, 3, S) int32 — (t, h, w) ids.
+    ``sections`` counts FREQUENCIES (pairs), summing to head_dim/2
+    (e.g. 16/24/24 for head_dim=128).
+    """
+    head_dim = x.shape[-1]
+    assert sum(sections) * 2 == head_dim
+    inv = rope_freqs(head_dim, theta, head_dim)             # (hd/2,)
+    # section id per frequency: 0=t, 1=h, 2=w
+    sec = np.concatenate([np.full(s, i) for i, s in enumerate(sections)])
+    # gather per-frequency positions: (B, S, hd/2)
+    pos_f = jnp.transpose(positions3, (0, 2, 1)).astype(jnp.float32)
+    pos_per_freq = pos_f[..., jnp.asarray(sec, jnp.int32)]  # (B, S, hd/2)
+    ang = pos_per_freq * inv                                # (B, S, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    r1, r2 = x[..., : head_dim // 2], x[..., head_dim // 2:]
+    out1 = r1 * cos - r2 * sin
+    out2 = r2 * cos + r1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+# --- ffn ---------------------------------------------------------------------
+
+def ffn_init(key, d_model: int, d_ff: int, gated: bool):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d_model, d_ff)),
+         "w_down": dense_init(ks[1], (d_ff, d_model), fan_in=d_ff)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff))
+    return p
+
+
+def ffn_apply(params, x, activation: str = "silu"):
+    act = ACTIVATIONS[activation]
+    dt = x.dtype
+    up = jnp.einsum("...d,df->...f", x, params["w_up"].astype(dt))
+    if "w_gate" in params:
+        gate = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(dt))
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(dt))

@@ -1,0 +1,305 @@
+"""Unified language model: embed → segmented blocks → head, all families.
+
+One ``ModelConfig`` describes any of the ten assigned architectures
+(dense / SWA / hybrid / SSM / MoE / MLA / encoder-only / VLM): the layer
+plan is a tuple of (LayerSpec, count) segments (see transformer.py).
+
+Public entry points (all pure functions of (cfg, params, batch)):
+  init_params    parameter pytree (fp32 weights)
+  loss_fn        training loss (chunked CE — the (B,S,V) logits tensor is
+                 NEVER materialized; vocab-sharded chunks reduce on the fly)
+  forward_hidden encoder/LM trunk output
+  init_cache     decode caches (KV / ring / latent / SSM state)
+  prefill        prompt ingestion -> (last-token logits, caches)
+  decode_step    one-token step -> (logits, caches)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import shardrules
+from .frontends import assemble
+from .layers import dense_init, embed_init, layernorm, layernorm_init, \
+    rmsnorm, rmsnorm_init
+from .shardrules import ParallelCtx
+from .transformer import (LayerSpec, layer_init_cache, segment_forward,
+                          segment_init)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    vocab: int
+    plan: Tuple[Tuple[LayerSpec, int], ...]
+    norm: str = "rmsnorm"              # final norm kind
+    tie_embeddings: bool = True
+    causal: bool = True                # False: encoder-only (hubert)
+    meta_tokens: int = 0               # hymba learnable prefix
+    frontend: str = "none"             # none | audio | vlm
+    frontend_dim: int = 0
+    dtype: Any = jnp.bfloat16
+    loss_chunk: int = 1024
+    remat: str = "full"                # none | full | dots
+    # documentation-only flags consumed by configs/launch:
+    decode_supported: bool = True
+    long_context: bool = False         # sub-quadratic decode at 500k?
+
+    @property
+    def n_layers(self) -> int:
+        return sum(c for _, c in self.plan)
+
+
+# --- init -----------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    ks = jax.random.split(key, len(cfg.plan) + 4)
+    p: Dict[str, Any] = {
+        "embed": {"tokens": embed_init(ks[0], (cfg.vocab, cfg.d_model))},
+        "final_norm": (layernorm_init(cfg.d_model)
+                       if cfg.norm == "layernorm"
+                       else rmsnorm_init(cfg.d_model)),
+    }
+    if cfg.frontend != "none":
+        p["frontend_proj"] = dense_init(
+            ks[1], (cfg.frontend_dim, cfg.d_model), fan_in=cfg.frontend_dim)
+    if cfg.meta_tokens > 0:
+        p["meta_tokens"] = 0.02 * jax.random.normal(
+            ks[2], (cfg.meta_tokens, cfg.d_model), jnp.float32)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[3], (cfg.d_model, cfg.vocab))
+    p["segments"] = {
+        str(i): segment_init(ks[4 + i], spec, count, cfg.d_model)
+        for i, (spec, count) in enumerate(cfg.plan)
+    }
+    return p
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def cast_params(params, dtype):
+    """bf16 working copy for matmuls; scalars/norms stay fp32."""
+    def cast(x):
+        if x.ndim >= 2:
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(cast, params)
+
+
+# --- trunk ----------------------------------------------------------------------
+
+def _final_norm(cfg, params, x):
+    if cfg.norm == "layernorm":
+        return layernorm(params["final_norm"], x)
+    return rmsnorm(params["final_norm"], x)
+
+
+def forward_hidden(cfg: ModelConfig, params, batch: Dict,
+                   ctx: Optional[ParallelCtx] = None, mode: str = "train",
+                   caches: Optional[List] = None, cache_index=None,
+                   ) -> Tuple[jnp.ndarray, Optional[List], Dict, int]:
+    """Trunk forward. Returns (h, new_caches, metrics, prefix_len)."""
+    x, positions, prefix = assemble(cfg, params, batch)
+    x = shardrules.constrain_batch(x, ctx)
+    new_caches: List[Any] = []
+    metrics: Dict[str, jnp.ndarray] = {}
+    for i, (spec, count) in enumerate(cfg.plan):
+        cache_i = caches[i] if caches is not None else None
+        x, c, m = segment_forward(
+            params["segments"][str(i)], x, spec, count, positions, ctx,
+            mode, cache_i, cache_index, cfg.remat)
+        x = shardrules.constrain_batch(x, ctx)
+        new_caches.append(c)
+        for k, v in m.items():
+            metrics[k] = metrics.get(k, 0.0) + v
+    h = _final_norm(cfg, params, x)
+    return h, (new_caches if mode != "train" else None), metrics, prefix
+
+
+# --- head / loss ----------------------------------------------------------------
+
+def _head_weight(cfg: ModelConfig, params):
+    if cfg.tie_embeddings:
+        return params["embed"]["tokens"]        # (V, D) — used transposed
+    return params["lm_head"].T                  # (V, D) view for same path
+
+
+def _head_scale(cfg: ModelConfig) -> float:
+    """Tied heads scale logits by 1/sqrt(D) (Gemma/T5 convention) so the
+    N(0,1) embedding table doubles as a sanely-scaled unembedding."""
+    return cfg.d_model ** -0.5 if cfg.tie_embeddings else 1.0
+
+
+def chunked_ce(h: jnp.ndarray, w_vd: jnp.ndarray, labels: jnp.ndarray,
+               mask: jnp.ndarray, chunk: int,
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cross-entropy without materializing (B, S, V).
+
+    h (B,S,D), w_vd (V,D), labels (B,S) int32, mask (B,S) float.
+    Scans S in ``chunk``-sized slices; each slice's logits live only inside
+    one scan step (vocab stays sharded over the tensor axis).
+    Returns (sum_ce, sum_mask).
+    """
+    b, s, d = h.shape
+    c = min(chunk, s)
+    nc = -(-s // c)
+    pad = nc * c - s
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hc = jnp.moveaxis(h.reshape(b, nc, c, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, c), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(b, nc, c), 1, 0)
+
+    def body(carry, inp):
+        h_i, l_i, m_i = inp
+        logits = jnp.einsum("bcd,vd->bcv", h_i,
+                            w_vd.astype(h_i.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        corr = jnp.take_along_axis(
+            logits, l_i[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        tot, cnt = carry
+        return (tot + ((lse - corr) * m_i).sum(), cnt + m_i.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (hc, lc, mc))
+    return tot, cnt
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict,
+            ctx: Optional[ParallelCtx] = None,
+            ) -> Tuple[jnp.ndarray, Dict]:
+    """Mean masked CE + MoE aux losses. batch needs labels (B,S_text) and
+    optionally loss_mask (B,S_text)."""
+    h, _, metrics, prefix = forward_hidden(cfg, params, batch, ctx, "train")
+    if prefix:
+        h = h[:, prefix:]
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    w_vd = _head_weight(cfg, params)
+    if ctx is not None and ctx.tensor is not None:
+        # §Perf H3: the embedding table is (vocab→tensor, d_model→fsdp)
+        # sharded; contracting the FSDP-sharded D in the loss head makes
+        # GSPMD all-reduce every fp32 (B,chunk,V) logits tile over `data`.
+        # Reshard the head ONCE to (V→tensor, D replicated): logits stay
+        # vocab-sharded, only the tiny (B,chunk) logsumexp reduces.
+        # H3b: non-divisible vocabs (50280 on model=16) shard UNEVENLY —
+        # GSPMD pads the last shard; still no logits all-reduce.
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        w_vd = jax.lax.with_sharding_constraint(
+            w_vd, NamedSharding(ctx.mesh, P(ctx.tensor, None)))
+    tot, cnt = chunked_ce(h * _head_scale(cfg), w_vd,
+                          labels, mask.astype(jnp.float32), cfg.loss_chunk)
+    ce = tot / jnp.maximum(cnt, 1.0)
+    metrics["ce"] = ce
+    loss = ce + metrics.get("aux_loss", 0.0)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def logits_for(cfg: ModelConfig, params, h_last: jnp.ndarray) -> jnp.ndarray:
+    """(B, D) -> (B, V) fp32 logits (decode head)."""
+    w = _head_weight(cfg, params)
+    return jnp.einsum("bd,vd->bv", h_last * _head_scale(cfg),
+                      w.astype(h_last.dtype)).astype(jnp.float32)
+
+
+# --- decode ----------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> List:
+    """Stacked per-segment caches sized for ``max_len`` absolute positions
+    (meta tokens + prompt + generated)."""
+    caches = []
+    for spec, count in cfg.plan:
+        one = layer_init_cache(spec, batch, max_len, dtype)
+        caches.append(jax.tree.map(
+            lambda a: jnp.zeros((count,) + a.shape, a.dtype), one))
+    return caches
+
+
+def _ring_from_prefill(entry: jnp.ndarray, window: int, s_abs: int,
+                       ) -> jnp.ndarray:
+    """Convert full-sequence prefill K/V (L, B, S, ...) into the ring layout
+    attn_decode expects (slot = position % window)."""
+    s = entry.shape[2]
+    if s >= window:
+        tail = entry[:, :, s - window:]
+        return jnp.roll(tail, shift=s_abs % window, axis=2)
+    pad = [(0, 0)] * entry.ndim
+    pad[2] = (0, window - s)
+    return jnp.pad(entry, pad)
+
+
+def _cache_from_prefill(spec: LayerSpec, pre, max_len: int, dtype,
+                        ) -> Dict:
+    """Prefill cache entries (full-sequence) -> decode cache layout."""
+    out = {}
+    if "attn" in pre:
+        a = pre["attn"]
+        if spec.attn.is_mla:
+            s = a["latent"].shape[2]
+            out["attn"] = {
+                k: jnp.pad(a[k].astype(dtype),
+                           [(0, 0), (0, 0), (0, max_len - s), (0, 0)])
+                for k in ("latent", "k_rope")}
+        elif spec.attn.window > 0:
+            w = min(spec.attn.window, max_len)
+            s = a["k"].shape[2]
+            out["attn"] = {
+                k: _ring_from_prefill(a[k].astype(dtype), w, s)
+                for k in ("k", "v")}
+        else:
+            s = a["k"].shape[2]
+            out["attn"] = {
+                k: jnp.pad(a[k].astype(dtype),
+                           [(0, 0), (0, 0), (0, max_len - s),
+                            (0, 0), (0, 0)])
+                for k in ("k", "v")}
+    if "ssm" in pre:
+        out["ssm"] = pre["ssm"]        # states are already decode-shaped
+    return out
+
+
+def prefill(cfg: ModelConfig, params, batch: Dict, max_len: int,
+            ctx: Optional[ParallelCtx] = None, cache_dtype=jnp.bfloat16,
+            ) -> Tuple[jnp.ndarray, List, jnp.ndarray]:
+    """Ingest the prompt. Returns (last-token logits, caches, next_index)."""
+    h, pre_caches, _, prefix = forward_hidden(cfg, params, batch, ctx,
+                                              "prefill")
+    caches = []
+    for (spec, count), pre in zip(cfg.plan, pre_caches):
+        caches.append(_cache_from_prefill(spec, pre, max_len, cache_dtype))
+    logits = logits_for(cfg, params, h[:, -1])
+    s_abs = h.shape[1]                  # meta/prefix included
+    return logits, caches, jnp.int32(s_abs)
+
+
+def decode_step(cfg: ModelConfig, params, token: jnp.ndarray, caches: List,
+                index, ctx: Optional[ParallelCtx] = None,
+                ) -> Tuple[jnp.ndarray, List]:
+    """token (B, 1) int32 (or (B,1,frontend_dim) frames); absolute position
+    ``index``. Returns ((B, V) logits, updated caches)."""
+    x = jnp.take(params["embed"]["tokens"], token, axis=0).astype(cfg.dtype)
+    new_caches = []
+    metrics: Dict[str, jnp.ndarray] = {}
+    h = x
+    for i, (spec, count) in enumerate(cfg.plan):
+        h, c, m = segment_forward(
+            params["segments"][str(i)], h, spec, count, None, ctx,
+            "decode", caches[i], index, cfg.remat)
+        new_caches.append(c)
+    h = _final_norm(cfg, params, h)
+    return logits_for(cfg, params, h[:, -1]), new_caches

@@ -1,0 +1,229 @@
+"""Layer blocks + segmented-scan stack.
+
+A model is a sequence of SEGMENTS; each segment is ``count`` structurally
+identical layers whose parameters are stacked on a leading axis and executed
+with ``jax.lax.scan`` (keeps HLO size O(1) in depth — critical for the 80
+dry-run compiles). Heterogeneous depth patterns (hymba's 3 global-attention
+layers among SWA layers, deepseek's dense first layer) become multiple
+segments, so every scan body is static — branch-free and exactly costed by
+``compiled.cost_analysis()``.
+
+Block kinds:
+  attn    pre-norm attention (+ optional dense-FFN / MoE sub-block)
+  ssm     pre-norm mamba2 mixer (mamba2: no FFN at all)
+  hybrid  hymba: attention and SSM heads run IN PARALLEL on the same
+          normed input; per-path output norms + learned gains, averaged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import tp
+from .attention import (AttnConfig, attn_decode, attn_forward,
+                        attn_init, attn_init_cache)
+from .layers import (ffn_apply, ffn_init, layernorm, layernorm_init,
+                     rmsnorm, rmsnorm_init)
+from .moe import MoEConfig, moe_forward, moe_init
+from .shardrules import ParallelCtx
+from .ssm import SSMConfig, ssm_decode, ssm_forward, ssm_init, ssm_init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str                        # "attn" | "ssm" | "hybrid"
+    attn: Optional[AttnConfig] = None
+    ssm: Optional[SSMConfig] = None
+    moe: Optional[MoEConfig] = None
+    d_ff: int = 0                    # dense FFN hidden (0 = no dense FFN)
+    activation: str = "silu"
+    gated: bool = True
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+
+
+def _norm_init(spec: LayerSpec, d: int):
+    return layernorm_init(d) if spec.norm == "layernorm" else rmsnorm_init(d)
+
+
+def _norm(spec: LayerSpec, p, x):
+    return layernorm(p, x) if spec.norm == "layernorm" else rmsnorm(p, x)
+
+
+# --- single-layer init / forward / decode --------------------------------------
+
+def layer_init(key, spec: LayerSpec, d_model: int) -> Dict:
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"norm1": _norm_init(spec, d_model)}
+    if spec.kind in ("attn", "hybrid"):
+        p["attn"] = attn_init(ks[0], spec.attn)
+    if spec.kind in ("ssm", "hybrid"):
+        p["ssm"] = ssm_init(ks[1], spec.ssm)
+    if spec.kind == "hybrid":
+        # per-path output norms + learned per-channel gains (hymba fusion)
+        p["norm_attn"] = rmsnorm_init(d_model)
+        p["norm_ssm"] = rmsnorm_init(d_model)
+        p["gain_attn"] = jnp.ones((d_model,), jnp.float32)
+        p["gain_ssm"] = jnp.ones((d_model,), jnp.float32)
+    if spec.moe is not None:
+        p["norm2"] = _norm_init(spec, d_model)
+        p["moe"] = moe_init(ks[2], spec.moe)
+    elif spec.d_ff > 0:
+        p["norm2"] = _norm_init(spec, d_model)
+        p["ffn"] = ffn_init(ks[3], d_model, spec.d_ff, spec.gated)
+    return p
+
+
+def _mixer(params, x_n, spec: LayerSpec, positions, ctx,
+           mode: str, cache, cache_index):
+    """The sequence mixer part of a layer. Returns (y, new_cache)."""
+    if spec.kind == "attn":
+        if mode == "decode":
+            y, c = attn_decode(params["attn"], x_n, cache["attn"],
+                               spec.attn, cache_index)
+            return y, {"attn": c}
+        if tp.attn_tp_applicable(spec.attn, ctx, mode):
+            y, c = tp.attn_tp(params["attn"], x_n, spec.attn, positions,
+                              ctx, mode)
+            return y, {"attn": c} if mode == "prefill" else None
+        y, c = attn_forward(params["attn"], x_n, spec.attn, positions,
+                            ctx)
+        return y, {"attn": c} if mode == "prefill" else None
+
+    if spec.kind == "ssm":
+        if mode == "decode":
+            y, c = ssm_decode(params["ssm"], x_n, cache["ssm"], spec.ssm)
+            return y, {"ssm": c}
+        y, c = ssm_forward(params["ssm"], x_n, spec.ssm, ctx)
+        return y, {"ssm": c} if mode == "prefill" else None
+
+    # hybrid (hymba): parallel attention + SSM heads, fused by normed mean
+    if mode == "decode":
+        ya, ca = attn_decode(params["attn"], x_n, cache["attn"],
+                             spec.attn, cache_index)
+        ys, cs = ssm_decode(params["ssm"], x_n, cache["ssm"], spec.ssm)
+        new_cache = {"attn": ca, "ssm": cs}
+    else:
+        ya, ca = attn_forward(params["attn"], x_n, spec.attn, positions,
+                              ctx)
+        ys, cs = ssm_forward(params["ssm"], x_n, spec.ssm, ctx)
+        new_cache = {"attn": ca, "ssm": cs} if mode == "prefill" else None
+    ya = rmsnorm(params["norm_attn"], ya) * params["gain_attn"].astype(
+        ya.dtype)
+    ys = rmsnorm(params["norm_ssm"], ys) * params["gain_ssm"].astype(
+        ys.dtype)
+    return 0.5 * (ya + ys), new_cache
+
+
+def layer_forward(params, x, spec: LayerSpec, positions=None,
+                  ctx: Optional[ParallelCtx] = None, mode: str = "train",
+                  cache=None, cache_index=None,
+                  ) -> Tuple[jnp.ndarray, Any, Dict]:
+    """Pre-norm residual layer. Returns (x, new_cache, metrics)."""
+    metrics: Dict[str, jnp.ndarray] = {}
+    y, new_cache = _mixer(params, _norm(spec, params["norm1"], x), spec,
+                          positions, ctx, mode, cache, cache_index)
+    x = x + y
+    if "moe" in params:
+        h, m = moe_forward(params["moe"],
+                           _norm(spec, params["norm2"], x), spec.moe, ctx)
+        x = x + h
+        metrics.update(m)
+    elif "ffn" in params:
+        x_n2 = _norm(spec, params["norm2"], x)
+        if tp.ffn_tp_applicable(spec.d_ff, ctx):
+            x = x + tp.ffn_tp(params["ffn"], x_n2, spec.activation, ctx)
+        else:
+            x = x + ffn_apply(params["ffn"], x_n2, spec.activation)
+    return x, new_cache, metrics
+
+
+# --- attention cache init (per layer kind) --------------------------------------
+
+def layer_init_cache(spec: LayerSpec, batch: int, max_len: int,
+                     dtype=jnp.bfloat16) -> Dict:
+    c: Dict[str, Any] = {}
+    if spec.kind in ("attn", "hybrid"):
+        c["attn"] = attn_init_cache(spec.attn, batch, max_len, dtype)
+    if spec.kind in ("ssm", "hybrid"):
+        c["ssm"] = ssm_init_cache(spec.ssm, batch, dtype)
+    return c
+
+
+# --- segments --------------------------------------------------------------------
+
+def segment_init(key, spec: LayerSpec, count: int, d_model: int) -> Dict:
+    """Stack ``count`` layers' params on a leading axis (scan layout)."""
+    keys = jax.random.split(key, count)
+    return jax.vmap(lambda k: layer_init(k, spec, d_model))(keys)
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)      # "full": save nothing
+
+
+def _agg_metrics(ms: Dict) -> Dict:
+    """Reduce stacked per-layer metrics: losses sum, rates average."""
+    if not ms:
+        return {}
+    return {k: (v.mean() if k == "dropped" else v.sum())
+            for k, v in ms.items()}
+
+
+def segment_forward(params, x, spec: LayerSpec, count: int, positions=None,
+                    ctx: Optional[ParallelCtx] = None, mode: str = "train",
+                    caches=None, cache_index=None, remat: str = "full",
+                    ) -> Tuple[jnp.ndarray, Any, Dict]:
+    """Scan ``count`` identical layers. caches (prefill out / decode in-out)
+    are stacked on the same leading axis as the params."""
+    if count == 1:
+        # single layers (hymba globals, deepseek dense L0) — no scan
+        squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
+        cache_l = squeeze(caches) if caches is not None else None
+        if mode == "train":
+            def one(p, h):
+                y, _, m = layer_forward(p, h, spec, positions, ctx, "train")
+                return y, m
+            x, metrics = _maybe_remat(one, remat)(squeeze(params), x)
+            return x, None, metrics
+        x, new_cache, metrics = layer_forward(
+            squeeze(params), x, spec, positions, ctx, mode, cache_l,
+            cache_index)
+        if new_cache is not None:
+            new_cache = jax.tree.map(lambda a: a[None], new_cache)
+        return x, new_cache, metrics
+
+    if mode == "train":
+        def body(h, layer_p):
+            h2, _, m = layer_forward(layer_p, h, spec, positions, ctx,
+                                     "train")
+            return h2, m
+        body = _maybe_remat(body, remat)
+        x, ms = jax.lax.scan(body, x, params)
+        return x, None, _agg_metrics(ms)
+
+    if mode == "prefill":
+        def body(h, layer_p):
+            h2, c, m = layer_forward(layer_p, h, spec, positions, ctx,
+                                     "prefill")
+            return h2, (c, m)
+        x, (new_caches, ms) = jax.lax.scan(body, x, params)
+        return x, new_caches, _agg_metrics(ms)
+
+    # decode
+    def body(h, inp):
+        layer_p, cache_l = inp
+        h2, c, m = layer_forward(layer_p, h, spec, positions, ctx,
+                                 "decode", cache_l, cache_index)
+        return h2, (c, m)
+    x, (new_caches, ms) = jax.lax.scan(body, x, (params, caches))
+    return x, new_caches, _agg_metrics(ms)

@@ -1,0 +1,4 @@
+"""Roofline analysis from compiled dry-run artifacts (DESIGN.md §Roofline)."""
+from .analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, CollectiveStats,
+                       Roofline, active_param_count, model_flops_for,
+                       parse_collectives)

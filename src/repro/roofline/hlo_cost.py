@@ -1,0 +1,313 @@
+"""HLO-text cost walker with while-loop trip multipliers.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE (calibrated in
+tests/test_roofline.py) — useless for scan-over-layers programs where 98%
+of the FLOPs live inside scans. This walker re-derives per-device costs
+from ``compiled.as_text()``:
+
+  * builds a module-wide  instruction-name -> shape  map,
+  * costs every computation bottom-up:
+      - dot: 2 × |result| × contraction (from lhs shape + contracting dims)
+      - convolution: 2 × |result| × window (depthwise approximation)
+      - collectives: result bytes × ring wire factor (group size from
+        replica_groups)
+      - while: trip count (max s32 constant in the condition computation —
+        scan conditions compare the induction variable against the length)
+        × body cost
+      - call / fusion: callee cost (+ fusion operand/result bytes as the
+        HBM-traffic proxy)
+  * ENTRY cost = the per-device totals the roofline terms consume.
+
+Bytes are an HBM-traffic PROXY (each materialized buffer written once +
+operands read once); exact traffic needs a real memory-assignment dump,
+which the CPU backend does not expose.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\d*[a-z]*\d*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[a-z]\w*\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?)\s+([a-z][\w\-]*)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_LCDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_WINDOW_RE = re.compile(r"window=\{size=([0-9x]+)")
+_CALLED_RE = re.compile(
+    r"(?:condition|body|to_apply|calls)=%?([\w.\-]+)")
+
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+_SKIP_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "iota", "after-all", "partition-id", "replica-id"}
+
+
+def _dims(dim_str: str) -> Tuple[int, ...]:
+    return tuple(int(d) for d in dim_str.split(",")) if dim_str else ()
+
+
+def _elems(dims: Tuple[int, ...]) -> int:
+    return int(np.prod(dims)) if dims else 1
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shapes: List[Tuple[str, Tuple[int, ...]]]   # result components
+    opcode: str
+    rest: str                                   # args + attrs text
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    collectives: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.wire_bytes += mult * other.wire_bytes
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0) + int(
+                mult * v)
+
+
+def _wire_factor(op: str, p: int) -> float:
+    if p <= 1:
+        return 0.0
+    return {"all-reduce": 2.0 * (p - 1) / p,
+            "all-gather": (p - 1) / p,
+            "reduce-scatter": float(p - 1),
+            "all-to-all": (p - 1) / p,
+            "collective-permute": 1.0}.get(op, 1.0)
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str, default_group: int):
+        self.default_group = default_group
+        self.comps: Dict[str, List[_Instr]] = {}
+        self.shape_of: Dict[str, List[Tuple[str, Tuple[int, ...]]]] = {}
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+        self._trip_memo: Dict[str, int] = {}
+
+    # -- parsing -------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        current: Optional[str] = None
+        self.entry: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.strip()
+            # computation header: "[ENTRY] %name (params...) -> type {"
+            if line.endswith("{") and "->" in line and (
+                    line.startswith("%") or line.startswith("ENTRY")):
+                is_entry = line.startswith("ENTRY")
+                head = line[len("ENTRY"):].strip() if is_entry else line
+                name = head.split("(")[0].strip().lstrip("%").strip()
+                current = name
+                self.comps[current] = []
+                if is_entry:
+                    self.entry = name
+                continue
+            if current is None:
+                continue
+            if line == "}":
+                current = None
+                continue
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, rtype, opcode, rest = m.groups()
+            shapes = [(dt, _dims(dd)) for dt, dd in
+                      _SHAPE_RE.findall(rtype)]
+            instr = _Instr(name=name, shapes=shapes, opcode=opcode,
+                           rest=rest)
+            self.comps[current].append(instr)
+            self.shape_of[name] = shapes
+
+    # -- trip counts ----------------------------------------------------------
+    def _trip_count(self, cond: str) -> int:
+        """Scan conditions compare the induction var against the length —
+        the max scalar-s32 constant in the condition computation."""
+        if cond in self._trip_memo:
+            return self._trip_memo[cond]
+        best = 1
+        for instr in self.comps.get(cond, []):
+            if instr.opcode == "constant" and instr.shapes and \
+                    instr.shapes[0][0] == "s32" and not instr.shapes[0][1]:
+                mm = re.match(r"(\d+)\)", instr.rest)
+                if mm:
+                    best = max(best, int(mm.group(1)))
+        self._trip_memo[cond] = best
+        return best
+
+    # -- costing ---------------------------------------------------------------
+    def _result_bytes(self, shapes) -> float:
+        return float(sum(_elems(d) * _DTYPE_BYTES.get(dt, 4)
+                         for dt, d in shapes))
+
+    def _operand_bytes(self, instr: _Instr) -> float:
+        args = instr.rest.split("),")[0]
+        total = 0.0
+        for name in _OPERAND_RE.findall(args):
+            for dt, d in self.shape_of.get(name, []):
+                total += _elems(d) * _DTYPE_BYTES.get(dt, 4)
+        return total
+
+    def _dus_update_bytes(self, comp: str) -> float:
+        """Sum of dynamic-update-slice update-operand bytes inside a
+        fusion computation (in-place aliased stacking writes)."""
+        total = 0.0
+        for instr in self.comps.get(comp, []):
+            if instr.opcode != "dynamic-update-slice":
+                continue
+            ops_ = _OPERAND_RE.findall(instr.rest.split("),")[0])
+            if len(ops_) >= 2:
+                for dt, d in self.shape_of.get(ops_[1], []):
+                    total += _elems(d) * _DTYPE_BYTES.get(dt, 4)
+        return total
+
+    def _dot_flops(self, instr: _Instr) -> float:
+        out = _elems(instr.shapes[0][1]) if instr.shapes else 0
+        ops = _OPERAND_RE.findall(instr.rest.split("),")[0])
+        contract = 1
+        m = _LCDIMS_RE.search(instr.rest)
+        if m and ops:
+            lhs_shapes = self.shape_of.get(ops[0], [])
+            if lhs_shapes:
+                lhs = lhs_shapes[0][1]
+                for d in (int(x) for x in m.group(1).split(",") if x):
+                    if d < len(lhs):
+                        contract *= lhs[d]
+        return 2.0 * out * contract
+
+    def cost_of(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = Cost()          # cycle guard
+        total = Cost()
+        for instr in self.comps.get(comp, []):
+            op = instr.opcode
+            if op in _SKIP_OPS:
+                continue
+            base_op = op.replace("-start", "").replace("-done", "")
+            if base_op in _COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                b = self._result_bytes(instr.shapes[-1:])
+                # XLA-CPU promotes bf16 reduce computations to f32
+                # ("to_apply=%.._promoted"); TPU reduces natively in bf16 —
+                # count the wire at the pre-promotion width.
+                if "_promoted" in instr.rest:
+                    b /= 2.0
+                m = _GROUPS_V2_RE.search(instr.rest)
+                if m:
+                    p = max(int(m.group(2)), 1)
+                else:
+                    m2 = _GROUPS_RE.search(instr.rest)
+                    p = (len(m2.group(1).split(",")) if m2
+                         else self.default_group)
+                total.flops += 0.0
+                total.bytes += b
+                total.wire_bytes += b * _wire_factor(base_op, p)
+                total.collectives[base_op] = \
+                    total.collectives.get(base_op, 0) + 1
+                continue
+            if op == "while":
+                called = dict.fromkeys(_CALLED_RE.findall(instr.rest))
+                names = list(called)
+                cond = body = None
+                mc = re.search(r"condition=%?([\w.\-]+)", instr.rest)
+                mb = re.search(r"body=%?([\w.\-]+)", instr.rest)
+                cond = mc.group(1) if mc else (names[0] if names else None)
+                body = mb.group(1) if mb else (names[-1] if names else None)
+                trip = self._trip_count(cond) if cond else 1
+                if body:
+                    total.add(self.cost_of(body), mult=trip)
+                continue
+            if op in ("call", "fusion", "conditional", "async-start",
+                      "custom-call"):
+                dus_update = 0.0
+                for callee in _CALLED_RE.findall(instr.rest):
+                    c = self.cost_of(callee)
+                    if op == "fusion":
+                        # fusion intermediates never materialize: take the
+                        # callee's flops/collectives, drop its bytes
+                        total.flops += c.flops
+                        total.wire_bytes += c.wire_bytes
+                        for k, v in c.collectives.items():
+                            total.collectives[k] = \
+                                total.collectives.get(k, 0) + v
+                        dus_update += self._dus_update_bytes(callee)
+                    else:
+                        total.add(c)
+                if op == "fusion" and dus_update > 0:
+                    # fused in-place scan-stacking (root is a DUS): the
+                    # write is the UPDATE slice, not the aliased buffer
+                    total.bytes += 2.0 * dus_update
+                else:
+                    total.bytes += self._result_bytes(instr.shapes)
+                continue
+            if op == "dot":
+                # matmuls dominate HBM traffic: read both operands, write
+                # the result (the TPU-fusion memory model — elementwise
+                # chains are assumed fused into their consumers)
+                total.flops += self._dot_flops(instr)
+                total.bytes += self._result_bytes(instr.shapes) + \
+                    self._operand_bytes(instr)
+                continue
+            if op == "convolution":
+                out = _elems(instr.shapes[0][1]) if instr.shapes else 0
+                m = _WINDOW_RE.search(instr.rest)
+                win = 1
+                if m:
+                    for s in m.group(1).split("x"):
+                        win *= int(s)
+                total.flops += 2.0 * out * win
+                total.bytes += self._result_bytes(instr.shapes) + \
+                    self._operand_bytes(instr)
+                continue
+            if op == "dynamic-update-slice":
+                # aliased in place: traffic = the update slice (read +
+                # write), NOT the full destination buffer (decode caches!)
+                ops_ = _OPERAND_RE.findall(instr.rest.split("),")[0])
+                upd = 0.0
+                if len(ops_) >= 2:
+                    for dt, d in self.shape_of.get(ops_[1], []):
+                        upd += _elems(d) * _DTYPE_BYTES.get(dt, 4)
+                total.bytes += 2.0 * upd
+                continue
+            # everything else: one write of the materialized result.
+            # Reads are counted at the consumer only for dots; elementwise
+            # consumers are assumed fused (TPU behaviour).
+            total.bytes += self._result_bytes(instr.shapes)
+        self._memo[comp] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        entry = self.entry
+        if entry is None:
+            entry = next((n for n in self.comps if "main" in n),
+                         max(self.comps, key=lambda c: len(self.comps[c])))
+        return self.cost_of(entry)
+
+
+def analyze_hlo(hlo_text: str, default_group: int) -> Cost:
+    return HloCostModel(hlo_text, default_group).entry_cost()

@@ -1,0 +1,2 @@
+"""Serving: prefill/decode steps, cache sharding, batched engine."""
+from .engine import ServeConfig, ServeEngine, cache_specs, make_decode_fn, make_prefill_fn

@@ -1,0 +1,144 @@
+"""Serving: jitted prefill/decode steps with cache sharding + a batched
+greedy engine (telemetry-instrumented).
+
+Cache sharding policy (the serve-side analogue of shardrules):
+  * batch dim over the batch axes when divisible;
+  * KV heads over the tensor axis when divisible;
+  * long-context fallback (B=1): the CACHE SEQUENCE dim shards over the
+    batch axes — GSPMD gathers it for the dense decode attention. That
+    baseline is deliberately collective-bound; §Perf hillclimbs it with a
+    shard_map flash-decode (see launch/perf notes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import shardrules
+from repro.models.model import (ModelConfig, decode_step, init_cache,
+                                prefill)
+from repro.models.shardrules import make_ctx
+from repro.telemetry import KIND_DECODE, KIND_PREFILL, TelemetryRecorder
+
+
+def _fit(dim: int, axes, mesh) -> Optional[Tuple[str, ...]]:
+    return shardrules._fit_axes(dim, axes, mesh) if axes else None
+
+
+def cache_specs(cfg: ModelConfig, caches, mesh: Mesh):
+    """PartitionSpec tree for stacked decode caches (leaf-name keyed).
+
+    KV tensors (L, B, C, Hkv, hd): batch over the batch axes and KV heads
+    over the tensor axis when divisible. Whenever a dim does NOT divide
+    (GQA kv=4/5/8 on model=16; B=1 long-context), the freed axes move to
+    the CACHE LENGTH dim — dense decode attention over a length-sharded
+    cache lowers to distributed-softmax partials + tiny all-reduces
+    instead of gathering the cache (see DESIGN.md §4)."""
+    baxes = shardrules.batch_axes(mesh)
+    taxes = ("model",) if "model" in mesh.axis_names else ()
+
+    def spec(path, x):
+        name = ""
+        for p in path:
+            if hasattr(p, "key"):
+                name = str(p.key)
+        shape = x.shape                     # (L, B, ...)
+        b_fit = _fit(shape[1], baxes, mesh)
+        if name in ("k", "v"):              # (L, B, C, Hkv, hd)
+            h_fit = _fit(shape[3], taxes, mesh)
+            c_axes = (() if b_fit else baxes) + (() if h_fit else taxes)
+            c_fit = _fit(shape[2], c_axes, mesh)
+            return P(None, b_fit, c_fit, h_fit, None)
+        if name in ("latent", "k_rope"):    # (L, B, C, r)
+            c_axes = (() if b_fit else baxes) + taxes
+            c_fit = _fit(shape[2], c_axes, mesh)
+            return P(None, b_fit, c_fit, None)
+        if name == "state":                 # (L, B, H, P, N)
+            h_fit = _fit(shape[2], taxes, mesh)
+            return P(None, b_fit, h_fit, None, None)
+        if name == "conv_x":                # (L, B, w-1, d_inner)
+            c_fit = _fit(shape[3], taxes, mesh)
+            return P(None, b_fit, None, c_fit)
+        if name in ("conv_b", "conv_c"):
+            return P(None, b_fit, None, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, caches)
+
+
+def batch_specs(cfg: ModelConfig, batch, mesh: Mesh):
+    from repro.train.step import batch_specs as bs
+    return bs(batch, mesh)
+
+
+def make_prefill_fn(cfg: ModelConfig, max_len: int,
+                    mesh: Optional[Mesh] = None):
+    ctx = make_ctx(mesh)
+
+    def fn(params, batch):
+        return prefill(cfg, params, batch, max_len, ctx)
+    return fn
+
+
+def make_decode_fn(cfg: ModelConfig, mesh: Optional[Mesh] = None):
+    ctx = make_ctx(mesh)
+
+    def fn(params, token, caches, index):
+        return decode_step(cfg, params, token, caches, index, ctx)
+    return fn
+
+
+# --- engine ------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 4096
+    max_new_tokens: int = 32
+    cache_dtype: Any = jnp.bfloat16
+
+
+class ServeEngine:
+    """Batched greedy decoding over a fixed-shape request batch."""
+
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig,
+                 mesh: Optional[Mesh] = None,
+                 telemetry: Optional[TelemetryRecorder] = None):
+        self.cfg, self.params = cfg, params
+        self.scfg = serve_cfg
+        self.mesh = mesh
+        self.telemetry = telemetry or TelemetryRecorder()
+        ctx = make_ctx(mesh)
+
+        def _prefill(params, batch):
+            return prefill(cfg, params, batch, serve_cfg.max_len, ctx,
+                           cache_dtype=serve_cfg.cache_dtype)
+
+        def _decode(params, token, caches, index):
+            return decode_step(cfg, params, token, caches, index, ctx)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode, donate_argnums=(2,))
+
+    def generate(self, batch: Dict) -> np.ndarray:
+        """Greedy-decode max_new_tokens for each request in the batch."""
+        with self.telemetry.timed(0, KIND_PREFILL, 0):
+            logits, caches, index = self._prefill(self.params, batch)
+            logits = jax.block_until_ready(logits)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out = [np.asarray(tok)]
+        for t in range(self.scfg.max_new_tokens - 1):
+            with self.telemetry.timed(0, KIND_DECODE, t):
+                logits, caches = self._decode(self.params, tok, caches,
+                                              index + t)
+                logits = jax.block_until_ready(logits)
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            out.append(np.asarray(tok))
+        return np.concatenate(out, axis=1)

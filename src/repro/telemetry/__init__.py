@@ -1,0 +1,8 @@
+"""Self-telemetry in the paper's CUPTI trace format + the straggler
+monitor that closes the loop (DESIGN.md §2, last row)."""
+
+from .recorder import (KIND_CKPT, KIND_DATA, KIND_DECODE, KIND_PREFILL,
+                       KIND_TRAIN, StepEvent, TelemetryRecorder)
+from .straggler import (ACTION_CHECKPOINT, ACTION_NONE, ACTION_REBALANCE,
+                        ACTION_WARN, MonitorConfig, StragglerMonitor,
+                        StragglerReport)

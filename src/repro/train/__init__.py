@@ -1,0 +1,5 @@
+"""Training: AdamW, grad-accum step, checkpointing, trainer loop."""
+from .optim import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from .step import TrainConfig, init_state, jit_train_step, make_train_step
+from .checkpoint import CheckpointManager
+from .trainer import RunConfig, Trainer

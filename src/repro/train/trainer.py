@@ -1,0 +1,111 @@
+"""Training driver: data prefetch, jitted step, telemetry, checkpoints,
+auto-resume, straggler-monitor hooks — the end-to-end loop a real job runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.data.pipeline import DataConfig, Prefetcher, make_batch
+from repro.models.model import ModelConfig
+from repro.telemetry import (KIND_CKPT, KIND_TRAIN, StragglerMonitor,
+                             TelemetryRecorder)
+
+from .checkpoint import CheckpointManager
+from .step import TrainConfig, init_state, make_train_step
+
+
+@dataclasses.dataclass
+class RunConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    monitor_every: int = 25
+    log_every: int = 10
+    workdir: str = "/tmp/repro_run"
+    resume: bool = True
+    async_ckpt: bool = True
+    host: int = 0
+    n_hosts: int = 1
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, train_cfg: TrainConfig,
+                 data_cfg: DataConfig, run_cfg: RunConfig,
+                 mesh=None, seed: int = 0):
+        self.mcfg, self.tcfg = model_cfg, train_cfg
+        self.dcfg, self.rcfg = data_cfg, run_cfg
+        self.mesh = mesh
+        self.seed = seed
+        os.makedirs(run_cfg.workdir, exist_ok=True)
+        self.ckpt = CheckpointManager(
+            os.path.join(run_cfg.workdir, "ckpt"))
+        self.telemetry = TelemetryRecorder(n_hosts=run_cfg.n_hosts)
+        self.monitor = StragglerMonitor(on_action=self._on_monitor_action)
+        self._log_path = os.path.join(run_cfg.workdir, "metrics.jsonl")
+        self._monitor_actions = []
+
+    def _on_monitor_action(self, action: str, report) -> None:
+        self._monitor_actions.append((action, report))
+        if action == "checkpoint":
+            # protect progress immediately when variability spikes
+            self.ckpt.save(self._state, int(self._state["step"]),
+                           blocking=False)
+
+    def _log(self, step: int, metrics: Dict) -> None:
+        row = {"step": step,
+               **{k: float(np.asarray(v)) for k, v in metrics.items()}}
+        with open(self._log_path, "a") as f:
+            f.write(json.dumps(row) + "\n")
+
+    def run(self, progress: Optional[Callable[[int, Dict], None]] = None,
+            ) -> Dict:
+        r = self.rcfg
+        state = init_state(self.mcfg, jax.random.PRNGKey(self.seed))
+        start_step = 0
+        if r.resume and self.ckpt.latest_step() is not None:
+            state = self.ckpt.restore(state)
+            start_step = int(state["step"])
+
+        step_fn = jax.jit(make_train_step(self.mcfg, self.tcfg, self.mesh),
+                          donate_argnums=(0,))
+        prefetch = Prefetcher(self.mcfg, self.dcfg, start_step=start_step,
+                              host=r.host, n_hosts=r.n_hosts)
+        losses = []
+        try:
+            for i in range(start_step, r.steps):
+                t_wait0 = time.time_ns()
+                _, batch = next(prefetch)
+                stall_ns = time.time_ns() - t_wait0    # input-wait stall
+                with self.telemetry.timed(r.host, KIND_TRAIN, i,
+                                          stall_ns=stall_ns):
+                    state, metrics = step_fn(state, batch)
+                    jax.block_until_ready(metrics["loss"])
+                self._state = state
+                losses.append(float(metrics["loss"]))
+                if (i + 1) % r.log_every == 0:
+                    self._log(i, metrics)
+                    if progress is not None:
+                        progress(i, metrics)
+                if (i + 1) % r.ckpt_every == 0:
+                    with self.telemetry.timed(r.host, KIND_CKPT, i):
+                        self.ckpt.save(state, i + 1,
+                                       blocking=not r.async_ckpt)
+                if (i + 1) % r.monitor_every == 0:
+                    self.monitor.analyze(self.telemetry)
+        finally:
+            prefetch.close()
+            self.ckpt.wait()
+
+        self.ckpt.save(state, r.steps, blocking=True)
+        trace_dir = os.path.join(r.workdir, "telemetry")
+        self.telemetry.write_dbs(trace_dir)
+        return {"state": state, "losses": losses,
+                "telemetry_dir": trace_dir,
+                "monitor_actions": self._monitor_actions}

@@ -1,0 +1,26 @@
+import os
+import sys
+
+# Tests see the real (single-CPU) device topology; ONLY the dry-run scripts
+# force 512 host devices. Keep CPU parallelism modest for CI-like stability.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.core.events import SyntheticSpec, generate_synthetic, \
+    write_synthetic_dbs
+
+
+@pytest.fixture(scope="session")
+def small_dataset(tmp_path_factory):
+    """Session-scoped synthetic trace: 2 ranks, injected anomalies."""
+    spec = SyntheticSpec(n_ranks=2, kernels_per_rank=4000,
+                         memcpys_per_rank=600, duration_s=40.0,
+                         n_anomaly_windows=2, seed=7)
+    ds = generate_synthetic(spec)
+    out = tmp_path_factory.mktemp("dbs")
+    paths = write_synthetic_dbs(ds, str(out))
+    return ds, paths

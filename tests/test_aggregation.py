@@ -1,0 +1,97 @@
+"""Distributed statistics ≡ serial statistics (the paper's correctness
+core): partial-moment merges are associative/commutative and the
+round-robin collaborative reduction is exact."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import (BinStats, bin_samples,
+                                    round_robin_merge)
+from repro.core.sharding import ShardPlan
+
+
+def _random_samples(rng, n, t0, t1):
+    ts = rng.integers(t0, t1, size=n)
+    vals = rng.normal(50, 20, size=n)
+    return ts, vals
+
+
+def test_bin_samples_matches_numpy_groupby():
+    rng = np.random.default_rng(0)
+    plan = ShardPlan(0, 1000, 10)
+    ts, vals = _random_samples(rng, 500, 0, 1000)
+    stats = bin_samples(ts, vals, plan)
+    bins = plan.shard_of(ts)
+    for b in range(10):
+        sel = vals[bins == b]
+        assert stats.count[b] == len(sel)
+        if len(sel):
+            np.testing.assert_allclose(stats.sum[b], sel.sum(), rtol=1e-9)
+            np.testing.assert_allclose(stats.min[b], sel.min())
+            np.testing.assert_allclose(stats.max[b], sel.max())
+            np.testing.assert_allclose(stats.std[b], sel.std(), atol=1e-8)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 400), parts=st.integers(1, 7),
+       seed=st.integers(0, 999))
+def test_partition_merge_equals_serial(n, parts, seed):
+    """Property: binning any partition of the samples and merging gives
+    EXACTLY the serial result (Chan et al. mergeable moments)."""
+    rng = np.random.default_rng(seed)
+    plan = ShardPlan(0, 10_000, 23)
+    ts, vals = _random_samples(rng, n, 0, 10_000)
+    serial = bin_samples(ts, vals, plan)
+
+    cut = np.sort(rng.integers(0, n, size=parts - 1)) if parts > 1 else []
+    pieces = np.split(np.arange(n), cut)
+    merged = BinStats.zeros(plan.n_shards)
+    for idx in pieces:
+        merged = merged.merge(bin_samples(ts[idx], vals[idx], plan))
+
+    np.testing.assert_allclose(merged.count, serial.count)
+    np.testing.assert_allclose(merged.sum, serial.sum, rtol=1e-12)
+    np.testing.assert_allclose(merged.sumsq, serial.sumsq, rtol=1e-12)
+    np.testing.assert_array_equal(merged.min, serial.min)
+    np.testing.assert_array_equal(merged.max, serial.max)
+
+
+@settings(max_examples=20, deadline=None)
+@given(p=st.integers(1, 9), seed=st.integers(0, 99))
+def test_round_robin_merge_equals_plain_merge(p, seed):
+    rng = np.random.default_rng(seed)
+    plan = ShardPlan(0, 5000, 17)
+    partials = []
+    for _ in range(p):
+        ts, vals = _random_samples(rng, 100, 0, 5000)
+        partials.append(bin_samples(ts, vals, plan))
+    rr, owned = round_robin_merge(partials, plan.n_shards)
+
+    plain = BinStats.zeros(plan.n_shards)
+    for part in partials:
+        plain = plain.merge(part)
+    np.testing.assert_allclose(rr.count, plain.count)
+    np.testing.assert_allclose(rr.sum, plain.sum, rtol=1e-12)
+    np.testing.assert_array_equal(rr.min, plain.min)
+    # ownership is the cyclic round-robin of the paper
+    for r, ids in enumerate(owned):
+        if len(ids):
+            assert ids[0] == r
+
+
+def test_merge_is_commutative():
+    rng = np.random.default_rng(3)
+    plan = ShardPlan(0, 100, 5)
+    a = bin_samples(*_random_samples(rng, 50, 0, 100), plan)
+    b = bin_samples(*_random_samples(rng, 60, 0, 100), plan)
+    ab, ba = a.merge(b), b.merge(a)
+    np.testing.assert_array_equal(ab.sum, ba.sum)
+    np.testing.assert_array_equal(ab.min, ba.min)
+
+
+def test_empty_bins_have_identity_stats():
+    plan = ShardPlan(0, 100, 4)
+    stats = bin_samples(np.asarray([5]), np.asarray([2.0]), plan)
+    assert stats.count[3] == 0
+    assert stats.finite_min()[3] == 0.0 and stats.finite_max()[3] == 0.0
+    assert np.isinf(stats.min[3])

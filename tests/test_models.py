@@ -1,0 +1,262 @@
+"""Model-substrate correctness: attention vs dense oracle, SSD vs naive
+recurrence, decode ≡ prefill, MoE invariants, RoPE properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (AttnConfig, attn_decode, attn_forward,
+                                    attn_init, attn_init_cache,
+                                    chunked_attention)
+from repro.models.layers import apply_mrope, apply_rope
+from repro.models.moe import MoEConfig, moe_forward, moe_init
+from repro.models.ssm import (SSMConfig, ssd_scan, ssm_decode, ssm_forward,
+                              ssm_init, ssm_init_cache)
+
+RNG = np.random.default_rng(0)
+
+
+def _dense_attention(q, k, v, causal=True, window=0):
+    """O(S²) oracle."""
+    b, s, h, hd = q.shape
+    kv_h = k.shape[2]
+    g = h // kv_h
+    qg = q.reshape(b, s, kv_h, g, hd)
+    scores = np.einsum("bqkgh,bskh->bkgqs", qg, k) / np.sqrt(hd)
+    qi = np.arange(s)[:, None]
+    ki = np.arange(s)[None, :]
+    mask = np.ones((s, s), bool)
+    if causal:
+        mask &= qi >= ki
+    if window > 0:
+        mask &= (qi - ki) < window
+    scores = np.where(mask, scores, -1e30)
+    p = np.exp(scores - scores.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    o = np.einsum("bkgqs,bskh->bqkgh", p, v)
+    return o.reshape(b, s, h, hd)
+
+
+@pytest.mark.parametrize("s,h,kv,window,causal", [
+    (33, 4, 2, 0, True),
+    (64, 4, 4, 0, True),
+    (50, 8, 2, 16, True),     # SWA
+    (40, 4, 4, 0, False),     # encoder
+])
+def test_chunked_attention_matches_dense(s, h, kv, window, causal):
+    b, hd = 2, 16
+    q = RNG.normal(size=(b, s, h, hd)).astype(np.float32)
+    k = RNG.normal(size=(b, s, kv, hd)).astype(np.float32)
+    v = RNG.normal(size=(b, s, kv, hd)).astype(np.float32)
+    out = chunked_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            causal=causal, window=window,
+                            q_chunk=16, kv_chunk=16)
+    ref = _dense_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_attention_chunk_invariance():
+    b, s, h, hd = 1, 48, 2, 8
+    q = jnp.asarray(RNG.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, h, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, h, hd)), jnp.float32)
+    a = chunked_attention(q, k, v, q_chunk=8, kv_chunk=8)
+    c = chunked_attention(q, k, v, q_chunk=48, kv_chunk=48)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_gqa_decode_matches_prefill_next_token():
+    cfg = AttnConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                     q_chunk=8, kv_chunk=8)
+    params = attn_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 12, 32)), jnp.float32)
+    full, _ = attn_forward(params, x, cfg)
+    _, pre = attn_forward(params, x[:, :11], cfg)
+    cache = {"k": jnp.pad(pre["k"], ((0, 0), (0, 5), (0, 0), (0, 0))),
+             "v": jnp.pad(pre["v"], ((0, 0), (0, 5), (0, 0), (0, 0)))}
+    dec, _ = attn_decode(params, x[:, 11:12], cache, cfg,
+                         jnp.int32(11))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, 11]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_swa_ring_decode_matches_full_window():
+    """Ring-buffer decode over window w ≡ attention over the last w
+    tokens."""
+    w = 8
+    cfg = AttnConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                     window=w, q_chunk=8, kv_chunk=8)
+    params = attn_init(jax.random.PRNGKey(1), cfg)
+    s = 21
+    x = jnp.asarray(RNG.normal(size=(1, s, 32)), jnp.float32)
+    full, _ = attn_forward(params, x, cfg)
+
+    # build ring cache by decoding tokens one by one
+    cache = attn_init_cache(cfg, 1, max_len=64, dtype=jnp.float32)
+    for t in range(s):
+        dec, cache = attn_decode(params, x[:, t:t + 1], cache, cfg,
+                                 jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mla_decode_matches_prefill():
+    cfg = AttnConfig(d_model=48, n_heads=4, n_kv_heads=4, head_dim=16,
+                     q_lora_rank=24, kv_lora_rank=16, qk_nope_dim=8,
+                     qk_rope_dim=8, v_head_dim=8, q_chunk=8, kv_chunk=8)
+    params = attn_init(jax.random.PRNGKey(2), cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 10, 48)), jnp.float32)
+    full, _ = attn_forward(params, x, cfg)
+    _, pre = attn_forward(params, x[:, :9], cfg)
+    cache = {"latent": jnp.pad(pre["latent"], ((0, 0), (0, 3), (0, 0))),
+             "k_rope": jnp.pad(pre["k_rope"], ((0, 0), (0, 3), (0, 0)))}
+    dec, _ = attn_decode(params, x[:, 9:10], cache, cfg, jnp.int32(9))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, 9]),
+                               rtol=1e-3, atol=1e-3)
+
+
+# --- SSD -------------------------------------------------------------------------
+
+def test_ssd_scan_matches_naive_recurrence():
+    b, s, H, P, G, N = 2, 29, 4, 8, 2, 16
+    xs = jnp.asarray(RNG.normal(size=(b, s, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.1, size=(b, s, H)), jnp.float32)
+    A_log = jnp.asarray(RNG.uniform(-1, 1, size=(H,)), jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(b, s, G, N)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(b, s, G, N)), jnp.float32)
+    D = jnp.asarray(RNG.normal(size=(H,)), jnp.float32)
+    y, hf = ssd_scan(xs, dt, A_log, B, C, D, chunk=8)
+
+    A = -np.exp(np.asarray(A_log))
+    hg = H // G
+    h = np.zeros((b, H, P, N))
+    ys = np.zeros((b, s, H, P))
+    for t in range(s):
+        a = np.exp(np.asarray(dt)[:, t] * A)
+        Bh = np.repeat(np.asarray(B)[:, t], hg, axis=1)
+        Ch = np.repeat(np.asarray(C)[:, t], hg, axis=1)
+        xb = np.asarray(dt)[:, t][..., None] * np.asarray(xs)[:, t]
+        h = a[..., None, None] * h + xb[..., None] * Bh[:, :, None, :]
+        ys[:, t] = np.einsum("bhpn,bhn->bhp", h, Ch) + \
+            np.asarray(D)[None, :, None] * np.asarray(xs)[:, t]
+    np.testing.assert_allclose(np.asarray(y), ys, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), h, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_chunk_invariance():
+    b, s, H, P, G, N = 1, 40, 2, 4, 1, 8
+    args = (jnp.asarray(RNG.normal(size=(b, s, H, P)), jnp.float32),
+            jnp.asarray(RNG.uniform(0.01, 0.1, (b, s, H)), jnp.float32),
+            jnp.asarray(RNG.uniform(-1, 1, (H,)), jnp.float32),
+            jnp.asarray(RNG.normal(size=(b, s, G, N)), jnp.float32),
+            jnp.asarray(RNG.normal(size=(b, s, G, N)), jnp.float32),
+            jnp.asarray(RNG.normal(size=(H,)), jnp.float32))
+    y8, h8 = ssd_scan(*args, chunk=8)
+    y40, h40 = ssd_scan(*args, chunk=40)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y40),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h8), np.asarray(h40),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssm_block_decode_matches_forward():
+    cfg = SSMConfig(d_model=32, d_state=16, head_dim=8, n_groups=2,
+                    chunk=8)
+    params = ssm_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 14, 32)), jnp.float32)
+    out, _ = ssm_forward(params, x, cfg)
+    # replay token-by-token from scratch
+    cache = ssm_init_cache(cfg, 2, dtype=jnp.float32)
+    for t in range(14):
+        dec, cache = ssm_decode(params, x[:, t:t + 1], cache, cfg)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(out[:, -1]),
+                               rtol=1e-3, atol=1e-3)
+
+
+# --- MoE -------------------------------------------------------------------------
+
+def test_moe_routes_every_token_with_ample_capacity():
+    cfg = MoEConfig(d_model=16, d_ff=8, n_experts=4, top_k=2,
+                    capacity_factor=4.0)
+    params = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.normal(size=(3, 8, 16)), jnp.float32)
+    out, m = moe_forward(params, x, cfg)
+    assert out.shape == x.shape
+    assert float(m["dropped"]) == 0.0
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_moe_capacity_drops_counted():
+    cfg = MoEConfig(d_model=16, d_ff=8, n_experts=8, top_k=4,
+                    capacity_factor=0.25)
+    params = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 32, 16)), jnp.float32)
+    out, m = moe_forward(params, x, cfg)
+    assert float(m["dropped"]) > 0.0
+
+
+def test_moe_shared_experts_add_dense_path():
+    cfg = MoEConfig(d_model=16, d_ff=8, n_experts=4, top_k=1, n_shared=2,
+                    capacity_factor=4.0)
+    params = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.normal(size=(1, 4, 16)), jnp.float32)
+    out, _ = moe_forward(params, x, cfg)
+    # zeroing shared experts must change the output
+    params2 = jax.tree.map(lambda a: a, params)
+    params2["shared"] = jax.tree.map(jnp.zeros_like, params["shared"])
+    out2, _ = moe_forward(params2, x, cfg)
+    assert not np.allclose(np.asarray(out), np.asarray(out2))
+
+
+# --- positions --------------------------------------------------------------------
+
+def test_rope_preserves_norm_and_relativity():
+    x = jnp.asarray(RNG.normal(size=(1, 6, 2, 16)), jnp.float32)
+    pos = jnp.arange(6)[None, :]
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = np.asarray(RNG.normal(size=(16,)), np.float32)
+    k = np.asarray(RNG.normal(size=(16,)), np.float32)
+
+    def dot_at(p, d):
+        qk = jnp.stack([jnp.asarray(q), jnp.asarray(k)])[None, :, None, :]
+        rot = apply_rope(qk, jnp.asarray([[p, p + d]]))
+        r = np.asarray(rot)[0, :, 0, :]
+        return float((r[0] * r[1]).sum())
+    np.testing.assert_allclose(dot_at(0, 3), dot_at(7, 3), rtol=1e-4)
+
+
+def test_partial_rope_leaves_tail_unrotated():
+    x = jnp.asarray(RNG.normal(size=(1, 4, 1, 16)), jnp.float32)
+    y = apply_rope(x, jnp.arange(4)[None, :], rotary_fraction=0.5)
+    np.testing.assert_array_equal(np.asarray(y)[..., 8:],
+                                  np.asarray(x)[..., 8:])
+
+
+def test_mrope_matches_rope_when_positions_equal():
+    """With t=h=w ids equal, M-RoPE == standard RoPE."""
+    hd = 16
+    x = jnp.asarray(RNG.normal(size=(1, 5, 2, hd)), jnp.float32)
+    pos = jnp.arange(5)[None, :]
+    pos3 = jnp.broadcast_to(pos[:, None, :], (1, 3, 5))
+    a = apply_mrope(x, pos3, sections=(3, 3, 2))
+    # standard rope in the half-split convention used by mrope
+    inv = 1.0 / (10000.0 ** (np.arange(0, hd, 2) / hd))
+    ang = np.arange(5)[:, None] * inv[None, :]
+    sin, cos = np.sin(ang), np.cos(ang)
+    xr = np.asarray(x)
+    r1, r2 = xr[..., : hd // 2], xr[..., hd // 2:]
+    e1 = r1 * cos[None, :, None, :] - r2 * sin[None, :, None, :]
+    e2 = r2 * cos[None, :, None, :] + r1 * sin[None, :, None, :]
+    np.testing.assert_allclose(np.asarray(a),
+                               np.concatenate([e1, e2], -1),
+                               rtol=1e-5, atol=1e-5)

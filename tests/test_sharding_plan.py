@@ -1,0 +1,98 @@
+"""Hypothesis properties of the paper's shard partitioner (DESIGN.md §7)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sharding import (ShardPlan, assignment, block_assignment,
+                                 contiguous_rank_range, cyclic_assignment,
+                                 owner_of_shards)
+
+TS = st.integers(min_value=0, max_value=2**40)
+
+
+@settings(max_examples=50, deadline=None)
+@given(t0=TS, width=st.integers(1, 2**40), n=st.integers(1, 500))
+def test_boundaries_are_disjoint_cover(t0, width, n):
+    plan = ShardPlan(t0, t0 + width, n)
+    edges = plan.boundaries()
+    assert edges[0] == t0 and edges[-1] == t0 + width
+    assert np.all(np.diff(edges) >= 0)
+    assert len(edges) == n + 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(t0=TS, width=st.integers(100, 2**40), n=st.integers(1, 200),
+       data=st.data())
+def test_shard_of_maps_into_owning_shard(t0, width, n, data):
+    plan = ShardPlan(t0, t0 + width, n)
+    ts = data.draw(st.lists(
+        st.integers(t0, t0 + width - 1), min_size=1, max_size=50))
+    sid = plan.shard_of(np.asarray(ts, np.int64))
+    assert np.all((sid >= 0) & (sid < n))
+    edges = plan.boundaries()
+    # binning agrees with boundary membership up to float rounding at the
+    # shard rim (off-by-one max; binning itself is self-consistent)
+    true_s = np.clip(np.searchsorted(edges, np.asarray(ts), "right") - 1,
+                     0, n - 1)
+    assert np.all(np.abs(true_s - sid) <= 1)
+
+
+@settings(max_examples=100, deadline=None)
+@given(n_shards=st.integers(0, 300), n_ranks=st.integers(1, 64),
+       kind=st.sampled_from(["block", "cyclic"]))
+def test_assignment_is_balanced_partition(n_shards, n_ranks, kind):
+    sets = assignment(n_shards, n_ranks, kind)
+    assert len(sets) == n_ranks
+    sizes = [len(s) for s in sets]
+    assert max(sizes) - min(sizes) <= 1          # balance (|nᵢ−n̄|≤1)
+    allids = np.concatenate([s for s in sets]) if n_shards else \
+        np.zeros(0, np.int64)
+    assert len(allids) == n_shards
+    assert len(np.unique(allids)) == n_shards    # disjoint cover
+
+
+@settings(max_examples=50, deadline=None)
+@given(n_shards=st.integers(1, 300), n_ranks=st.integers(1, 64))
+def test_block_assignment_is_contiguous(n_shards, n_ranks):
+    for ids in block_assignment(n_shards, n_ranks):
+        if len(ids) > 1:
+            assert np.all(np.diff(ids) == 1)
+
+
+@settings(max_examples=50, deadline=None)
+@given(n_shards=st.integers(1, 300), n_ranks=st.integers(1, 64))
+def test_cyclic_assignment_stride(n_shards, n_ranks):
+    for r, ids in enumerate(cyclic_assignment(n_shards, n_ranks)):
+        if len(ids):
+            assert ids[0] == r
+            if len(ids) > 1:
+                assert np.all(np.diff(ids) == n_ranks)
+
+
+def test_owner_of_shards_consistent():
+    owner = owner_of_shards(10, 3, "block")
+    sets = assignment(10, 3, "block")
+    for r, ids in enumerate(sets):
+        assert np.all(owner[ids] == r)
+
+
+def test_contiguous_rank_range_covers_block():
+    plan = ShardPlan(0, 1000, 10)
+    sets = block_assignment(10, 3)
+    lo, hi = contiguous_rank_range(plan, sets[1])
+    e = plan.boundaries()
+    assert lo == e[sets[1][0]] and hi == e[sets[1][-1] + 1]
+
+
+def test_from_interval_covers_range():
+    plan = ShardPlan.from_interval(100, 1100, 300)
+    assert plan.t_start == 100 and plan.t_end >= 1100
+    assert plan.n_shards == 4
+
+
+def test_empty_range_rejected():
+    with pytest.raises(ValueError):
+        ShardPlan(5, 5, 1)
+    with pytest.raises(ValueError):
+        ShardPlan(0, 10, 0)
