@@ -1,0 +1,122 @@
+"""Multi-metric aggregation engine benchmark.
+
+Two comparisons, both on the same generated shard store:
+
+  1. one-pass-M-metrics vs M independent single-metric passes over the raw
+     shards (the tentpole claim: exploring another metric should not cost
+     another full scan);
+  2. cold re-analysis (shards scanned, summary written) vs warm re-analysis
+     (answered from the O(n_bins) ``summary_{key}.npz`` cache) — the PR's
+     acceptance bar is warm >= 5x faster than cold.
+
+Harness mode prints the usual CSV rows; standalone mode emits a JSON record
+for the bench trajectory:
+
+  PYTHONPATH=src python -m benchmarks.multimetric_bench [--scale medium]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List
+
+import numpy as np
+
+from repro.core import run_generation
+from repro.core.aggregation import run_aggregation
+from repro.core.tracestore import TraceStore
+
+from .common import Row, dataset, timeit
+
+METRICS = ["k_stall", "m_duration", "m_bytes"]
+GROUP_BY = "m_kind"
+
+
+def _measure(scale: str = "small") -> dict:
+    ds, paths, work = dataset(scale)
+    store_dir = os.path.join(work, "multimetric_store")
+    if not os.path.exists(os.path.join(store_dir, "manifest.json")):
+        run_generation(paths, store_dir, n_ranks=2)
+    store = TraceStore(store_dir)
+    store.clear_summaries()
+
+    # -- one pass, M metrics vs M single-metric passes (cache off) ----------
+    one_pass_us = timeit(lambda: run_aggregation(
+        store, metrics=METRICS, group_by=GROUP_BY, use_cache=False))
+    single_total_us = 0.0
+    for m in METRICS:
+        single_total_us += timeit(lambda m=m: run_aggregation(
+            store, metrics=[m], group_by=GROUP_BY, use_cache=False))
+
+    # -- cold vs warm re-analysis (cache on) --------------------------------
+    store.clear_summaries()
+    cold = {}
+
+    def go_cold():
+        store.clear_summaries()
+        cold["r"] = run_aggregation(store, metrics=METRICS,
+                                    group_by=GROUP_BY)
+    cold_us = timeit(go_cold)
+    warm = {}
+
+    def go_warm():
+        warm["r"] = run_aggregation(store, metrics=METRICS,
+                                    group_by=GROUP_BY)
+    warm_us = timeit(go_warm)
+    assert warm["r"].from_cache and not cold["r"].from_cache
+    for f in ("count", "sum", "sumsq", "min", "max"):
+        np.testing.assert_array_equal(getattr(cold["r"].grouped, f),
+                                      getattr(warm["r"].grouped, f))
+
+    return {
+        "bench": "multimetric",
+        "scale": scale,
+        "metrics": METRICS,
+        "group_by": GROUP_BY,
+        "n_bins": int(cold["r"].plan.n_shards),
+        "n_groups": int(len(cold["r"].group_keys)),
+        "one_pass_m_metrics_us": one_pass_us,
+        "m_single_passes_us": single_total_us,
+        "one_pass_speedup": single_total_us / max(one_pass_us, 1e-9),
+        "cold_us": cold_us,
+        "warm_cached_us": warm_us,
+        "cache_speedup": cold_us / max(warm_us, 1e-9),
+        "cache_speedup_ok": cold_us / max(warm_us, 1e-9) >= 5.0,
+    }
+
+
+def run() -> List[Row]:
+    r = _measure("small")
+    return [
+        Row("multimetric/one_pass_3metrics", r["one_pass_m_metrics_us"],
+            f"vs_3_passes=x{r['one_pass_speedup']:.2f}"),
+        Row("multimetric/3_single_passes", r["m_single_passes_us"],
+            f"groups={r['n_groups']};bins={r['n_bins']}"),
+        Row("multimetric/reanalyze_cold", r["cold_us"],
+            f"cache_speedup=x{r['cache_speedup']:.1f}"),
+        Row("multimetric/reanalyze_warm", r["warm_cached_us"],
+            f"ok_ge_5x={r['cache_speedup_ok']}"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="small",
+                    choices=["small", "medium"])
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON record to this path")
+    args = ap.parse_args()
+    rec = _measure(args.scale)
+    blob = json.dumps(rec, indent=2)
+    print(blob)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(blob + "\n")
+    if not rec["cache_speedup_ok"]:
+        raise SystemExit("warm re-analysis is < 5x faster than cold")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,20 @@
-"""Recompute roofline records from SAVED dry-run HLO (no recompilation).
+"""Re-analyze SAVED artifacts without redoing the expensive pass.
 
-The walker evolves (e.g. the promoted-bf16-all-reduce accounting fix);
-this keeps every recorded cell consistent with the CURRENT cost model:
+Two modes:
 
-  PYTHONPATH=src python -m benchmarks.reanalyze --dir experiments/dryrun
+  * roofline (default): recompute roofline records from saved dry-run HLO
+    (no recompilation). The walker evolves (e.g. the promoted-bf16
+    all-reduce accounting fix); this keeps every recorded cell consistent
+    with the CURRENT cost model:
+
+      PYTHONPATH=src python -m benchmarks.reanalyze --dir experiments/dryrun
+
+  * trace store: re-run a multi-metric group-by aggregation over an
+    existing shard store. Repeat queries are answered from the O(n_bins)
+    ``summary_*.npz`` cache instead of re-scanning raw shards:
+
+      PYTHONPATH=src python -m benchmarks.reanalyze --store /path/to/store \\
+          --metrics k_stall,m_duration --group-by k_device
 """
 
 from __future__ import annotations
@@ -13,19 +24,16 @@ import gzip
 import json
 import os
 
-from repro.roofline import Roofline
-from repro.roofline.hlo_cost import analyze_hlo
 
+def reanalyze_roofline(dirname: str) -> None:
+    from repro.roofline import Roofline
+    from repro.roofline.hlo_cost import analyze_hlo
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--dir", default="experiments/dryrun")
-    args = ap.parse_args()
     n = 0
-    for f in sorted(os.listdir(args.dir)):
+    for f in sorted(os.listdir(dirname)):
         if not f.endswith(".json"):
             continue
-        jpath = os.path.join(args.dir, f)
+        jpath = os.path.join(dirname, f)
         hpath = jpath.replace(".json", ".hlo.txt.gz")
         if not os.path.exists(hpath):
             continue
@@ -46,6 +54,45 @@ def main() -> None:
             json.dump(rec, fh, indent=2)
         n += 1
     print(f"re-analyzed {n} cells")
+
+
+def reanalyze_store(store_dir: str, metrics: list, group_by: str,
+                    no_cache: bool) -> None:
+    from repro.core.aggregation import run_aggregation
+
+    res = run_aggregation(store_dir, metrics=metrics, group_by=group_by,
+                          use_cache=not no_cache)
+    src = "summary cache" if res.from_cache else "raw shards"
+    print(f"aggregated {len(res.metrics)} metrics x "
+          f"{len(res.group_keys)} groups x {res.plan.n_shards} bins "
+          f"from {src} in {res.seconds*1e3:.1f}ms")
+    for m in res.metrics:
+        s = res.select(metric=m)
+        occ = s.count > 0
+        mean = s.mean[occ].mean() if occ.any() else 0.0
+        print(f"  {m}: occupied_bins={int(occ.sum())} mean={mean:.4g}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun",
+                    help="roofline dry-run records directory")
+    ap.add_argument("--store", default=None,
+                    help="TraceStore directory: re-run the aggregation "
+                         "(served from the summary cache when warm)")
+    ap.add_argument("--metrics", default="k_stall",
+                    help="comma-separated metric columns (--store mode)")
+    ap.add_argument("--group-by", default=None,
+                    help="group column, e.g. k_device (--store mode)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="force a cold re-scan of the raw shards")
+    args = ap.parse_args()
+
+    if args.store:
+        reanalyze_store(args.store, args.metrics.split(","),
+                        args.group_by, args.no_cache)
+    else:
+        reanalyze_roofline(args.dir)
 
 
 if __name__ == "__main__":

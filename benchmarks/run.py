@@ -11,7 +11,7 @@ import sys
 import traceback
 
 from . import (analyzer_scale, fig1a_stall_timeline, fig1b_variability,
-               fig1c_scaling, kernels_bench, table1_join)
+               fig1c_scaling, kernels_bench, multimetric_bench, table1_join)
 
 MODULES = {
     "table1": table1_join,
@@ -20,6 +20,7 @@ MODULES = {
     "fig1c": fig1c_scaling,
     "kernels": kernels_bench,
     "analyzer": analyzer_scale,
+    "multimetric": multimetric_bench,
 }
 
 

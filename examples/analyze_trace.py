@@ -1,11 +1,15 @@
 """Analyze GPU-profiler trace DBs with the sharded pipeline (any backend).
 
   PYTHONPATH=src python examples/analyze_trace.py --db rank0.sqlite \\
-      --db rank1.sqlite --ranks 4 --backend process --interval-ms 1000
+      --db rank1.sqlite --ranks 4 --backend process --interval-ms 1000 \\
+      --metric k_stall --metric m_duration --group-by k_device
 
 Without --db, a synthetic dataset is generated (useful demo mode). Prints
 the Fig-1a/1b analyses: per-bin stall stats, top-variability intervals and
-the transfer-direction byte breakdown.
+the transfer-direction byte breakdown — plus, with several --metric flags
+and/or --group-by, the one-pass multi-metric grouped summary. Repeat
+aggregations over the same store are answered from the summary cache
+(``summary_*.npz``) without re-reading shards.
 """
 
 import argparse
@@ -33,6 +37,10 @@ def main() -> None:
                     choices=["serial", "process", "jax"])
     ap.add_argument("--interval-ms", type=float, default=1000.0)
     ap.add_argument("--top-k", type=int, default=5)
+    ap.add_argument("--metric", action="append", default=[],
+                    help="metric column (repeatable; default k_stall)")
+    ap.add_argument("--group-by", default=None,
+                    help="group column, e.g. k_device, k_name, m_kind")
     args = ap.parse_args()
 
     tmp = tempfile.mkdtemp(prefix="repro_analyze_")
@@ -42,18 +50,21 @@ def main() -> None:
         ds = generate_synthetic(SyntheticSpec(n_ranks=2))
         db_paths = write_synthetic_dbs(ds, os.path.join(tmp, "dbs"))
 
+    metrics = args.metric or ["k_stall"]
     cfg = PipelineConfig(
         n_ranks=args.ranks, backend=args.backend, top_k=args.top_k,
+        metrics=metrics, group_by=args.group_by,
         generation=GenerationConfig(
             interval_ns=int(args.interval_ms * 1e6)))
-    res = VariabilityPipeline(cfg).run(db_paths, os.path.join(tmp, "store"))
+    pipe = VariabilityPipeline(cfg)
+    res = pipe.run(db_paths, os.path.join(tmp, "store"))
 
     stats = res.aggregation.stats
     occ = stats.count > 0
     print(f"\n=== {len(db_paths)} DBs, {res.generation.n_shards} shards, "
           f"{int(stats.count.sum()):,} samples ===")
     print(f"gen {res.gen_seconds:.2f}s | agg {res.agg_seconds:.2f}s")
-    print(f"stall mean={stats.mean[occ].mean():.3g} "
+    print(f"{metrics[0]} mean={stats.mean[occ].mean():.3g} "
           f"std={stats.std[occ].mean():.3g}")
 
     print(f"\ntop-{args.top_k} anomalous intervals (IQR fence "
@@ -68,6 +79,30 @@ def main() -> None:
     for kind, per_bin in sorted(res.aggregation.copy_kind_bytes.items()):
         name = COPY_KIND_NAMES.get(kind, str(kind))
         print(f"  {name:8s}: {np.sum(per_bin):.4g} bytes")
+
+    # -- one-pass multi-metric × group-by summary --------------------------
+    agg = res.aggregation
+    if len(metrics) > 1 or args.group_by:
+        print(f"\nmulti-metric summary "
+              f"({len(metrics)} metrics x "
+              f"{len(agg.group_keys)} groups of "
+              f"{args.group_by or '<all>'}):")
+        for g in agg.group_keys:
+            parts = []
+            for m in metrics:
+                s = agg.select(metric=m, group=float(g))
+                o = s.count > 0
+                mean = s.mean[o].mean() if o.any() else 0.0
+                parts.append(f"{m}={mean:.4g}")
+            print(f"  {args.group_by or 'all'}={g:g}: "
+                  f"n={int(agg.select(0, float(g)).count.sum()):8d}  "
+                  + "  ".join(parts))
+
+    # the second aggregate over the same store hits the summary cache
+    again = pipe.aggregate(os.path.join(tmp, "store"))
+    print(f"\nre-analysis: {again.seconds*1e3:.1f}ms "
+          f"(from_cache={again.from_cache}, "
+          f"first pass {agg.seconds*1e3:.1f}ms)")
 
 
 if __name__ == "__main__":

@@ -3,10 +3,11 @@ reduced GPU performance-variability analysis pipeline.
 
 Layout (one module per paper concept — see DESIGN.md §2/§3):
   events        CUPTI-shaped schema, SQLite I/O, synthetic generator
-  tracestore    columnar shard files + manifest ("parquet")
+  tracestore    columnar shard files + manifest ("parquet") + summary cache
   sharding      time partitioner, block/cyclic rank assignment
   generation    phase 1: extract -> window left-join -> shard files
-  aggregation   phase 2: bin -> partial moments -> round-robin merge
+  aggregation   phase 2: one-pass M-metrics x G-groups moment tensor ->
+                round-robin merge -> cached summary
   anomaly       IQR fences, top-k anomalous shards
   distributed   jax backend (shard_map + psum_scatter/all_gather)
   pipeline      end-to-end driver (serial | process | jax backends)
@@ -20,7 +21,9 @@ from .sharding import (ShardPlan, assignment, block_assignment,
 from .tracestore import StoreManifest, TraceStore
 from .generation import (GenerationConfig, GenerationReport,
                          run_generation, window_left_join)
-from .aggregation import (AggregationResult, BinStats, bin_samples,
-                          round_robin_merge, run_aggregation)
+from .aggregation import (AggregationResult, BinStats, GroupedPartial,
+                          bin_samples, bin_samples_grouped,
+                          load_rank_partials, round_robin_merge,
+                          run_aggregation, DEFAULT_METRIC)
 from .anomaly import IQRReport, anomalous_bins, iqr_detect, recovered
 from .pipeline import PipelineConfig, PipelineResult, VariabilityPipeline

@@ -74,10 +74,26 @@ def iqr_detect(scores: np.ndarray, k: float = 1.5, top_k: int = 5,
                      top_windows=wins)
 
 
+def _as_1d(stats: BinStats, metric_idx: int = 0) -> BinStats:
+    """Collapse a grouped (n_bins, n_groups, n_metrics) moment tensor to
+    the 1-D per-bin view the detectors operate on: merge the group axis
+    (every sample is in exactly one group, so this is the ungrouped
+    statistic) and select one metric."""
+    if stats.count.ndim == 3:
+        stats = stats.merge_groups()
+    if stats.count.ndim == 2:
+        stats = stats.select_metric(metric_idx)
+    return stats
+
+
 def anomalous_bins(stats: BinStats, k: float = 1.5, top_k: int = 5,
                    boundaries: Optional[np.ndarray] = None,
-                   score: str = "mean") -> IQRReport:
-    """Paper's detector: IQR over a per-bin summary of the stall metric."""
+                   score: str = "mean", metric_idx: int = 0) -> IQRReport:
+    """Paper's detector: IQR over a per-bin summary of the stall metric.
+
+    Accepts 1-D per-bin stats or the grouped multi-metric tensor
+    (``metric_idx`` selects which metric to fence)."""
+    stats = _as_1d(stats, metric_idx)
     if score == "mean":
         s = stats.mean
     elif score == "std":
@@ -92,8 +108,9 @@ def anomalous_bins(stats: BinStats, k: float = 1.5, top_k: int = 5,
 
 
 def top_variability_bins(stats: BinStats, quantile: float = 0.95,
-                         ) -> np.ndarray:
+                         metric_idx: int = 0) -> np.ndarray:
     """Fig-1b selection: indices of the top (1-quantile) bins by std."""
+    stats = _as_1d(stats, metric_idx)
     std = stats.std
     occ = stats.count > 0
     if not occ.any():

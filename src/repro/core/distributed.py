@@ -39,15 +39,35 @@ _NEG_CAP = -3.4e38   # sentinel instead of inf: survives bf16/psum paths
 _POS_CAP = 3.4e38
 
 
+def _shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map (>=0.6, check_vma) / experimental shard_map (older,
+    check_rep) compatibility — replication checking off in both."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, check_vma=False,
+                             in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as esm
+    return esm(f, mesh=mesh, check_rep=False,
+               in_specs=in_specs, out_specs=out_specs)
+
+
 def binstats_local(bin_ids: jnp.ndarray, values: jnp.ndarray,
                    n_bins: int, valid: Optional[jnp.ndarray] = None,
                    ) -> jnp.ndarray:
     """Per-bin partial moments (n_bins, 5) for one device's samples.
 
+    ``values`` may also be a batched (n_metrics, N) matrix sharing one
+    ``bin_ids``/``valid`` vector — the multi-metric single-pass case — in
+    which case the result is (n_metrics, n_bins, 5) (vmap over the leading
+    metric axis).
+
     `segment_*` ops lower to sorted-scatter on TPU; the Pallas `binstats`
     kernel replaces this with a one-hot MXU matmul formulation (see
     kernels/binstats) — both satisfy this exact contract.
     """
+    if values.ndim == 2:
+        return jax.vmap(
+            lambda v: binstats_local(bin_ids, v, n_bins, valid=valid)
+        )(values)
     v = values.astype(jnp.float32)
     if valid is None:
         valid = jnp.ones(v.shape, dtype=bool)
@@ -95,7 +115,8 @@ def derive(stats: jnp.ndarray) -> dict:
     }
 
 
-def _collaborative_reduce(local: jnp.ndarray, axis: str) -> jnp.ndarray:
+def _collaborative_reduce(local: jnp.ndarray, axis: str,
+                          axis_size: int) -> jnp.ndarray:
     """Round-robin collaborative merge on-mesh.
 
     `psum_scatter(tiled=False)` gives each device the reduced block of bins
@@ -103,22 +124,32 @@ def _collaborative_reduce(local: jnp.ndarray, axis: str) -> jnp.ndarray:
     full table on every device. min/max channels are made scatter-compatible
     by negation tricks NOT being valid for min (it's not additive) — so they
     take a `pmin`/`pmax` all-reduce instead.
+
+    ``local`` is (n_bins, 5) or, batched over a leading metric axis,
+    (n_metrics, n_bins, 5); the scatter/gather always runs along the bin
+    axis so all metrics ride one collective.
     """
     sums = local[..., :3]           # count, sum, sumsq — additive
     mn = local[..., 3]
     mx = local[..., 4]
+    bin_axis = local.ndim - 2
     # pad bins to a multiple of the axis size for the scatter
-    P_sz = jax.lax.axis_size(axis)
-    n = sums.shape[0]
+    # (the size is passed in statically: jax.lax.axis_size is not available
+    # on every supported jax version, and the pad must be static anyway)
+    P_sz = axis_size
+    n = sums.shape[bin_axis]
     pad = (-n) % P_sz
-    sums_p = jnp.pad(sums, ((0, pad), (0, 0)))
-    owned = jax.lax.psum_scatter(sums_p, axis, scatter_dimension=0,
+    pad_width = [(0, 0)] * sums.ndim
+    pad_width[bin_axis] = (0, pad)
+    sums_p = jnp.pad(sums, pad_width)
+    owned = jax.lax.psum_scatter(sums_p, axis, scatter_dimension=bin_axis,
                                  tiled=True)
-    sums_red = jax.lax.all_gather(owned, axis, axis=0, tiled=True)[:n]
+    gathered = jax.lax.all_gather(owned, axis, axis=bin_axis, tiled=True)
+    sums_red = jax.lax.slice_in_dim(gathered, 0, n, axis=bin_axis)
     mn_red = jax.lax.pmin(mn, axis)
     mx_red = jax.lax.pmax(mx, axis)
     return jnp.concatenate(
-        [sums_red, mn_red[:, None], mx_red[:, None]], axis=-1)
+        [sums_red, mn_red[..., None], mx_red[..., None]], axis=-1)
 
 
 def distributed_binstats_from_bins(bin_ids: jnp.ndarray,
@@ -136,14 +167,48 @@ def distributed_binstats_from_bins(bin_ids: jnp.ndarray,
     """
     def rank_fn(bins, vals, vld):
         local = binstats_local(bins, vals, n_bins, valid=vld)
-        return _collaborative_reduce(local, axis)
+        return _collaborative_reduce(local, axis, mesh.shape[axis])
 
     spec = P(axis)
-    fn = jax.shard_map(rank_fn, mesh=mesh, check_vma=False,
-                       in_specs=(spec, spec, spec), out_specs=P())
+    fn = _shard_map(rank_fn, mesh,
+                    in_specs=(spec, spec, spec), out_specs=P())
     if valid is None:
         valid = jnp.ones(values.shape, dtype=bool)
     return fn(bin_ids, values, valid)
+
+
+def distributed_binstats_grouped(bin_ids: jnp.ndarray,
+                                 group_ids: jnp.ndarray,
+                                 values: jnp.ndarray, n_bins: int,
+                                 n_groups: int, mesh: Mesh,
+                                 axis: str = "data",
+                                 valid: Optional[jnp.ndarray] = None,
+                                 ) -> jnp.ndarray:
+    """One-pass multi-metric × group-by collaborative moments.
+
+    bin_ids   : (N,) int32 precomputed time-bin ids (exact int64 binning
+                happens on host — CUPTI ns timestamps overflow int32)
+    group_ids : (N,) int32 in [0, n_groups) — global group-key index
+    values    : (n_metrics, N) float32 — all metrics share the bin/group ids
+
+    The (bin, group) pair is fused into one segment id, so the whole tensor
+    rides the same psum_scatter/all_gather collective as the 1-D path.
+    Returns replicated (n_metrics, n_bins, n_groups, 5) moments.
+    """
+    n_metrics = values.shape[0]
+    flat = bin_ids * n_groups + group_ids
+
+    def rank_fn(bins, vals, vld):
+        local = binstats_local(bins, vals, n_bins * n_groups, valid=vld)
+        return _collaborative_reduce(local, axis, mesh.shape[axis])
+
+    spec = P(axis)
+    fn = _shard_map(rank_fn, mesh,
+                    in_specs=(spec, P(None, axis), spec), out_specs=P())
+    if valid is None:
+        valid = jnp.ones(flat.shape, dtype=bool)
+    out = fn(flat, values, valid)
+    return out.reshape(n_metrics, n_bins, n_groups, STATS)
 
 
 def distributed_binstats(rel_timestamps: jnp.ndarray, values: jnp.ndarray,
@@ -163,11 +228,11 @@ def distributed_binstats(rel_timestamps: jnp.ndarray, values: jnp.ndarray,
     def rank_fn(ts, vals, vld):
         bins = jnp.clip((ts * inv_width).astype(jnp.int32), 0, n_bins - 1)
         local = binstats_local(bins, vals, n_bins, valid=vld)
-        return _collaborative_reduce(local, axis)
+        return _collaborative_reduce(local, axis, mesh.shape[axis])
 
     spec = P(axis)
-    fn = jax.shard_map(rank_fn, mesh=mesh, check_vma=False,
-                       in_specs=(spec, spec, spec), out_specs=P())
+    fn = _shard_map(rank_fn, mesh,
+                    in_specs=(spec, spec, spec), out_specs=P())
     if valid is None:
         valid = jnp.ones(values.shape, dtype=bool)
     return fn(rel_timestamps, values, valid)

@@ -56,6 +56,10 @@ class GenerationConfig:
 
 @dataclasses.dataclass
 class GenerationReport:
+    """``rows_per_table`` counts the raw rows the rank queries actually
+    extracted (the analyzed [t_start, t_end) range — for KERNEL that is
+    the whole table since kernels define the range)."""
+
     n_shards: int
     n_ranks: int
     t_start: int
@@ -158,47 +162,57 @@ def _concat_columns(parts: List[Dict[str, np.ndarray]]) -> Dict[str, np.ndarray]
 def generate_rank(rank: int, db_paths: Sequence[str], plan: ShardPlan,
                   shard_ids: np.ndarray, store: TraceStore,
                   cfg: GenerationConfig,
-                  contiguous: bool = True) -> int:
+                  contiguous: bool = True) -> Dict[str, int]:
     """One rank's generation work: query its shards, join, write shard files.
 
     With block partitioning the rank issues ONE contiguous range query per
     source DB (``contiguous=True``); with cyclic it issues one query per
     shard — the overhead difference the paper's Fig 1c measures.
 
-    Returns number of joined rows written.
+    Returns ``{"joined", "KERNEL", "MEMCPY", "GPU"}`` row counts for this
+    rank's time range. Rank queries are half-open ``[lo, hi)`` over disjoint
+    ranges, so KERNEL/MEMCPY counts sum exactly across ranks — the driver
+    builds its Table-1 inventory from these instead of re-reading every DB.
+    The GPU table is static and fully read by every query; it is counted
+    only once per rank (drivers take the max across ranks).
     """
+    counts = {"joined": 0, "KERNEL": 0, "MEMCPY": 0, "GPU": 0}
     if len(shard_ids) == 0:
-        return 0
-    total_rows = 0
+        return counts
+    first_query = True
 
-    def _process_range(t_lo: int, t_hi: int, ids: np.ndarray) -> int:
+    def _process_range(t_lo: int, t_hi: int, ids: np.ndarray) -> None:
+        nonlocal first_query
         parts = []
         for src, path in enumerate(db_paths):
             tr = read_rank_db(path, rank=src, start=t_lo, end=t_hi)
+            counts["KERNEL"] += len(tr.kernels)
+            counts["MEMCPY"] += len(tr.memcpys)
+            if first_query:
+                counts["GPU"] += len(tr.gpus)
             bw = {g.id: g.bandwidth for g in tr.gpus}
             sm = {g.id: g.sm_count for g in tr.gpus}
             parts.append(window_left_join(
                 tr.kernels, tr.memcpys, bw, sm,
                 cfg.join_window_ns, cfg.join_cap, src_rank=src))
+        first_query = False
         cols = _concat_columns(parts)
         # bin rows into shards by kernel start timestamp
         sid = plan.shard_of(cols["k_start"].astype(np.int64))
-        n = 0
         for s in ids:
             mask = sid == s
             shard_cols = {c: cols[c][mask] for c in SHARD_COLUMNS}
             store.write_shard(int(s), shard_cols)
-            n += int(mask.sum())
-        return n
+            counts["joined"] += int(mask.sum())
 
     if contiguous:
         t_lo, t_hi = contiguous_rank_range(plan, shard_ids)
-        total_rows += _process_range(t_lo, t_hi, shard_ids)
+        _process_range(t_lo, t_hi, shard_ids)
     else:
         for s in shard_ids:
             t_lo, t_hi = plan.shard_bounds(int(s))
-            total_rows += _process_range(t_lo, t_hi, np.asarray([s]))
-    return total_rows
+            _process_range(t_lo, t_hi, np.asarray([s]))
+    return counts
 
 
 def run_generation(db_paths: Sequence[str], out_dir: str,
@@ -216,11 +230,11 @@ def run_generation(db_paths: Sequence[str], out_dir: str,
 
     store = TraceStore(out_dir)
     ranks = assignment(plan.n_shards, n_ranks, cfg.partitioning)
-    joined = 0
-    for r in range(n_ranks):
-        joined += generate_rank(
-            r, db_paths, plan, ranks[r], store, cfg,
-            contiguous=(cfg.partitioning == "block"))
+    rank_counts = [generate_rank(
+        r, db_paths, plan, ranks[r], store, cfg,
+        contiguous=(cfg.partitioning == "block"))
+        for r in range(n_ranks)]
+    joined = sum(c["joined"] for c in rank_counts)
 
     owner = owner_of_shards(plan.n_shards, n_ranks, cfg.partitioning)
     store.write_manifest(StoreManifest(
@@ -232,13 +246,11 @@ def run_generation(db_paths: Sequence[str], out_dir: str,
                "join_cap": cfg.join_cap,
                "db_paths": list(db_paths)}))
 
-    # Table-1 style inventory
-    rows = {"KERNEL": 0, "MEMCPY": 0, "GPU": 0}
-    for p in db_paths:
-        tr = read_rank_db(p, rank=0)
-        rows["KERNEL"] += len(tr.kernels)
-        rows["MEMCPY"] += len(tr.memcpys)
-        rows["GPU"] += len(tr.gpus)
+    # Table-1 style inventory, assembled from the rank workers' own range
+    # queries (no second pass over the DBs).
+    rows = {"KERNEL": sum(c["KERNEL"] for c in rank_counts),
+            "MEMCPY": sum(c["MEMCPY"] for c in rank_counts),
+            "GPU": max((c["GPU"] for c in rank_counts), default=0)}
     return GenerationReport(
         n_shards=plan.n_shards, n_ranks=n_ranks,
         t_start=plan.t_start, t_end=plan.t_end,

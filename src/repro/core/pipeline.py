@@ -9,6 +9,12 @@ Backends:
   * ``jax``      — ranks are mesh devices; binning + collaborative stats run
     as shard_map collectives (see :mod:`repro.core.distributed`).
 
+All three backends run the one-pass multi-metric × group-by engine: set
+``PipelineConfig.metrics`` / ``group_by`` and a single scan of the shard
+store yields the (n_bins, n_groups, n_metrics) moment tensor. Merged
+summaries are cached in the TraceStore (``summary_{key}.npz``); repeat
+aggregations over an unchanged store are answered without touching shards.
+
 The phases and their timings are reported separately (the paper's Fig 1c
 plots Data Generation vs Data Aggregation duration vs #ranks).
 """
@@ -23,9 +29,9 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from .aggregation import (AggregationResult, BinStats, bin_samples,
-                          load_rank_partials, round_robin_merge,
-                          run_aggregation, DEFAULT_METRIC)
+from .aggregation import (AggregationResult, BinStats, densify_partials,
+                          finalize_aggregation, load_rank_grouped,
+                          lookup_summary, DEFAULT_METRIC)
 from .anomaly import IQRReport, anomalous_bins, top_variability_bins
 from .generation import (GenerationConfig, GenerationReport, generate_rank,
                          global_time_range, run_generation)
@@ -44,9 +50,16 @@ class PipelineConfig:
     generation: GenerationConfig = dataclasses.field(
         default_factory=GenerationConfig)
     metric: str = DEFAULT_METRIC
+    metrics: Optional[Sequence[str]] = None  # multi-metric single pass
+    group_by: Optional[str] = None           # shard column, e.g. "k_device"
+    use_summary_cache: bool = True
     agg_interval_ns: Optional[int] = None  # None -> reuse generation bins
     iqr_k: float = 1.5
     top_k: int = 5
+
+    @property
+    def metric_list(self) -> List[str]:
+        return list(self.metrics) if self.metrics else [self.metric]
 
 
 @dataclasses.dataclass
@@ -65,7 +78,7 @@ class PipelineResult:
 
 # --- process backend workers (module-level for picklability) ---------------
 
-def _gen_worker(args) -> int:
+def _gen_worker(args) -> Dict[str, int]:
     rank, db_paths, plan_tuple, shard_ids, out_dir, cfg_dict = args
     plan = ShardPlan(*plan_tuple)
     cfg = GenerationConfig(**cfg_dict)
@@ -75,11 +88,12 @@ def _gen_worker(args) -> int:
 
 
 def _agg_worker(args):
-    store_dir, shard_ids, plan_tuple, metric = args
+    store_dir, shard_ids, plan_tuple, metrics, group_by = args
     plan = ShardPlan(*plan_tuple)
     store = TraceStore(store_dir)
-    part, kinds = load_rank_partials(store, shard_ids, plan, metric)
-    return part.to_columns(), {int(k): v for k, v in kinds.items()}
+    part, kinds = load_rank_grouped(store, shard_ids, plan, metrics,
+                                    group_by)
+    return part, {int(k): v for k, v in kinds.items()}
 
 
 class VariabilityPipeline:
@@ -108,13 +122,12 @@ class VariabilityPipeline:
                     for r in range(cfg.n_ranks)]
             with mp.get_context(_MP_CONTEXT).Pool(
                     min(cfg.n_ranks, os.cpu_count() or 1)) as pool:
-                joined = sum(pool.map(_gen_worker, jobs))
+                rank_counts = pool.map(_gen_worker, jobs)
         else:
-            joined = 0
-            for r in range(cfg.n_ranks):
-                joined += generate_rank(
-                    r, db_paths, plan, rank_shards[r], store, gen,
-                    contiguous=(gen.partitioning == "block"))
+            rank_counts = [generate_rank(
+                r, db_paths, plan, rank_shards[r], store, gen,
+                contiguous=(gen.partitioning == "block"))
+                for r in range(cfg.n_ranks)]
 
         owner = owner_of_shards(plan.n_shards, cfg.n_ranks, gen.partitioning)
         from .generation import SHARD_COLUMNS
@@ -126,17 +139,17 @@ class VariabilityPipeline:
                    "join_window_ns": gen.join_window_ns,
                    "join_cap": gen.join_cap}))
 
-        rows = {"KERNEL": 0, "MEMCPY": 0, "GPU": 0}
-        from .events import read_rank_db
-        for p in db_paths:
-            tr = read_rank_db(p, rank=0)
-            rows["KERNEL"] += len(tr.kernels)
-            rows["MEMCPY"] += len(tr.memcpys)
-            rows["GPU"] += len(tr.gpus)
+        # Table-1 inventory straight from the rank workers — the rank range
+        # queries partition the kernel/memcpy tables, so their counts sum
+        # exactly; no second full read of every DB.
+        rows = {"KERNEL": sum(c["KERNEL"] for c in rank_counts),
+                "MEMCPY": sum(c["MEMCPY"] for c in rank_counts),
+                "GPU": max((c["GPU"] for c in rank_counts), default=0)}
         return GenerationReport(
             n_shards=plan.n_shards, n_ranks=cfg.n_ranks,
             t_start=plan.t_start, t_end=plan.t_end, rows_per_table=rows,
-            joined_rows=joined, seconds=time.perf_counter() - t0)
+            joined_rows=sum(c["joined"] for c in rank_counts),
+            seconds=time.perf_counter() - t0)
 
     # -- phase 2 -------------------------------------------------------------
     def aggregate(self, store_dir: str) -> AggregationResult:
@@ -148,48 +161,58 @@ class VariabilityPipeline:
                 if cfg.agg_interval_ns is None
                 else ShardPlan.from_interval(man.t_start, man.t_end,
                                              cfg.agg_interval_ns))
+        metrics = cfg.metric_list
+
+        # jax results come from float32 collectives — keyed separately so
+        # they are never served where exact float64 moments are expected.
+        precision = "float32" if cfg.backend == "jax" else "exact"
+        key = None
+        if cfg.use_summary_cache:
+            key, cached = lookup_summary(store, plan, metrics,
+                                         cfg.group_by, t0,
+                                         precision=precision)
+            if cached is not None:
+                return cached
+
         shard_sets = assignment(man.n_shards, cfg.n_ranks, "block")
 
-        if cfg.backend == "process":
-            jobs = [(store_dir, shard_sets[r].tolist(),
-                     (plan.t_start, plan.t_end, plan.n_shards), cfg.metric)
-                    for r in range(cfg.n_ranks)]
-            with mp.get_context(_MP_CONTEXT).Pool(
-                    min(cfg.n_ranks, os.cpu_count() or 1)) as pool:
-                results = pool.map(_agg_worker, jobs)
-            partials = [BinStats.from_columns(c) for c, _ in results]
-            kind_parts = [k for _, k in results]
-        elif cfg.backend == "jax":
-            partials, kind_parts = self._aggregate_jax(
-                store, shard_sets, plan)
+        if cfg.backend == "jax":
+            all_keys, dense, kind_parts = self._aggregate_jax(
+                store, shard_sets, plan, metrics)
         else:
-            partials, kind_parts = [], []
-            for r in range(cfg.n_ranks):
-                part, kinds = load_rank_partials(
-                    store, shard_sets[r], plan, cfg.metric)
-                partials.append(part)
-                kind_parts.append(kinds)
+            if cfg.backend == "process":
+                jobs = [(store_dir, shard_sets[r].tolist(),
+                         (plan.t_start, plan.t_end, plan.n_shards),
+                         metrics, cfg.group_by)
+                        for r in range(cfg.n_ranks)]
+                with mp.get_context(_MP_CONTEXT).Pool(
+                        min(cfg.n_ranks, os.cpu_count() or 1)) as pool:
+                    results = pool.map(_agg_worker, jobs)
+            else:
+                results = [load_rank_grouped(
+                    store, shard_sets[r], plan, metrics, cfg.group_by)
+                    for r in range(cfg.n_ranks)]
+            partials = [p for p, _ in results]
+            kind_parts = [k for _, k in results]
+            all_keys, dense = densify_partials(partials)
 
-        merged, _ = round_robin_merge(partials, plan.n_shards)
-        kind_bytes: Dict[int, np.ndarray] = {}
-        for kp in kind_parts:
-            for k, v in kp.items():
-                kind_bytes[k] = kind_bytes.get(k, 0) + v
-        return AggregationResult(
-            plan=plan, metric=cfg.metric, stats=merged,
-            per_rank_stats=partials, copy_kind_bytes=kind_bytes,
-            seconds=time.perf_counter() - t0)
+        return finalize_aggregation(store, plan, metrics, cfg.group_by,
+                                    all_keys, dense, kind_parts, key, t0)
 
-    def _aggregate_jax(self, store: TraceStore, shard_sets, plan: ShardPlan):
+    def _aggregate_jax(self, store: TraceStore, shard_sets,
+                       plan: ShardPlan, metrics: List[str]):
         """jax backend: concat all rank events, shard over devices, use the
-        collaborative collective reduction. Falls back to the device count
-        available (1 on this container, n on a pod)."""
+        collaborative collective reduction — all metrics and groups in one
+        fused segment reduction. Falls back to the device count available
+        (1 on this container, n on a pod)."""
         import jax
         import jax.numpy as jnp
         from jax.sharding import Mesh
-        from .distributed import distributed_binstats_from_bins
+        from .distributed import distributed_binstats_grouped
 
-        ts_all, val_all = [], []
+        from .aggregation import _shard_kind_bytes
+
+        ts_all, val_all, grp_all = [], [], []
         kind_parts = []
         for r in range(len(shard_sets)):
             kinds: Dict[int, np.ndarray] = {}
@@ -198,22 +221,29 @@ class VariabilityPipeline:
                     continue
                 cols = store.read_shard(int(s))
                 ts_all.append(cols["k_start"].astype(np.int64))
-                val_all.append(cols[self.cfg.metric])
-                joined = cols["joined"] > 0
-                if joined.any():
-                    kb = cols["m_bytes"][joined]
-                    kk = cols["m_kind"][joined].astype(np.int64)
-                    kt = cols["m_start"][joined].astype(np.int64)
-                    kbins = plan.shard_of(kt)
-                    for kind in np.unique(kk):
-                        m = kk == kind
-                        acc = kinds.setdefault(int(kind),
-                                               np.zeros(plan.n_shards))
-                        np.add.at(acc, kbins[m], kb[m])
+                val_all.append(np.stack(
+                    [np.asarray(cols[m], np.float64) for m in metrics],
+                    axis=0))
+                if self.cfg.group_by is not None:
+                    grp_all.append(np.asarray(cols[self.cfg.group_by],
+                                              np.float64))
+                _shard_kind_bytes(cols, plan, kinds)
             kind_parts.append(kinds)
 
-        ts = np.concatenate(ts_all) if ts_all else np.zeros(0, np.int64)
-        vals = np.concatenate(val_all) if val_all else np.zeros(0)
+        M = len(metrics)
+        ts = (np.concatenate(ts_all) if ts_all
+              else np.zeros(0, np.int64))
+        vals = (np.concatenate(val_all, axis=1) if val_all
+                else np.zeros((M, 0)))
+        if self.cfg.group_by is not None and grp_all:
+            keys, gids = np.unique(np.concatenate(grp_all),
+                                   return_inverse=True)
+            if keys.size == 0:
+                keys, gids = np.asarray([0.0]), np.zeros(len(ts), np.int64)
+        else:
+            keys, gids = np.asarray([0.0]), np.zeros(len(ts), np.int64)
+        n_groups = len(keys)
+
         # exact int64 binning on host (ns timestamps overflow device int32)
         bins = plan.shard_of(ts).astype(np.int32)
         dev = jax.devices()
@@ -221,19 +251,25 @@ class VariabilityPipeline:
         pad = (-len(ts)) % max(n_dev, 1)
         valid = np.concatenate([np.ones(len(ts), bool), np.zeros(pad, bool)])
         bins = np.concatenate([bins, np.zeros(pad, np.int32)])
-        vals = np.concatenate([vals, np.zeros(pad)])
+        gids = np.concatenate([gids.astype(np.int32),
+                               np.zeros(pad, np.int32)])
+        vals = np.concatenate([vals, np.zeros((M, pad))], axis=1)
 
         mesh = Mesh(np.asarray(dev), ("data",))
-        stats5 = np.asarray(distributed_binstats_from_bins(
-            jnp.asarray(bins), jnp.asarray(vals, jnp.float32),
-            plan.n_shards, mesh, valid=jnp.asarray(valid)))
+        stats = np.asarray(distributed_binstats_grouped(
+            jnp.asarray(bins), jnp.asarray(gids),
+            jnp.asarray(vals, jnp.float32), plan.n_shards, n_groups, mesh,
+            valid=jnp.asarray(valid)))       # (M, n_bins, n_groups, 5)
+        count = np.moveaxis(stats[..., 0], 0, -1).astype(np.float64)
         part = BinStats(
-            count=stats5[:, 0].astype(np.float64),
-            sum=stats5[:, 1].astype(np.float64),
-            sumsq=stats5[:, 2].astype(np.float64),
-            min=np.where(stats5[:, 0] > 0, stats5[:, 3], np.inf),
-            max=np.where(stats5[:, 0] > 0, stats5[:, 4], -np.inf))
-        return [part], kind_parts
+            count=count,
+            sum=np.moveaxis(stats[..., 1], 0, -1).astype(np.float64),
+            sumsq=np.moveaxis(stats[..., 2], 0, -1).astype(np.float64),
+            min=np.where(count > 0,
+                         np.moveaxis(stats[..., 3], 0, -1), np.inf),
+            max=np.where(count > 0,
+                         np.moveaxis(stats[..., 4], 0, -1), -np.inf))
+        return [float(k) for k in keys], [part], kind_parts
 
     # -- end to end ----------------------------------------------------------
     def run(self, db_paths: Sequence[str], work_dir: str) -> PipelineResult:

@@ -11,21 +11,54 @@ self-contained columnar store with the same contract:
 
 Files are written atomically (tmp + rename) so a crashed writer never leaves
 a torn shard — part of the fault-tolerance story.
+
+Summary cache
+-------------
+Aggregation results are memoized as ``summary_{key}.npz`` files next to the
+shards. The 16-hex ``key`` is a sha256 over a canonical JSON blob of
+
+  (SUMMARY_VERSION, (t_start, t_end, n_shards), metrics, group_by,
+   precision, shard fingerprint)
+
+where the fingerprint is the sorted list of ``(shard_idx, size, mtime_ns)``
+stat triples — so rewriting ANY shard (or re-binning, or asking for a
+different metric set / group column) changes the key and the stale summary
+is simply never read again. The payload is a flat dict of numpy arrays:
+
+  ``version``                     scalar int — SUMMARY_VERSION at write time
+  ``t_start, t_end, n_shards``    scalar int64 — the plan the moments use
+  ``metrics``                     (M,) unicode — metric column names
+  ``group_by``                    scalar unicode ("" = no grouping)
+  ``group_keys``                  (G,) float64 — group column values
+  ``count,sum,sumsq,min,max``     (n_bins, G, M) float64 — the moment tensor
+  ``kind_keys``                   (K,) int64 — memcpy copyKind codes
+  ``kind_bytes``                  (K, n_bins) float64 — per-kind byte bins
+
+Summaries are O(n_bins) — repeat queries are answered without touching the
+raw shards (see :func:`repro.core.aggregation.run_aggregation`).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import tempfile
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+# Bump when the summary payload layout changes; old caches then miss.
+SUMMARY_VERSION = 1
 
 
 def shard_filename(idx: int) -> str:
     return f"shard_{idx:06d}.npz"
+
+
+def summary_filename(key: str) -> str:
+    return f"summary_{key}.npz"
 
 
 @dataclasses.dataclass
@@ -48,7 +81,7 @@ class StoreManifest:
 
 
 class TraceStore:
-    """Directory of columnar shard files + manifest."""
+    """Directory of columnar shard files + manifest + summary cache."""
 
     MANIFEST = "manifest.json"
 
@@ -67,17 +100,15 @@ class TraceStore:
 
     # -- shards ------------------------------------------------------------
     def write_shard(self, idx: int, columns: Dict[str, np.ndarray]) -> str:
-        """Atomically write one shard's columns."""
+        """Atomically write one shard's columns.
+
+        Writing any shard changes the store fingerprint, so every existing
+        summary key becomes unreachable — prune them here (best-effort;
+        concurrent rank writers may race on the same stale files) so
+        repeated regenerations don't accumulate dead cache entries."""
         path = os.path.join(self.root, shard_filename(idx))
-        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "wb") as f:
-                np.savez(f, **columns)
-            os.replace(tmp, path)
-        except BaseException:
-            if os.path.exists(tmp):
-                os.remove(tmp)
-            raise
+        self._atomic_savez(path, columns)
+        self.clear_summaries()
         return path
 
     def read_shard(self, idx: int) -> Dict[str, np.ndarray]:
@@ -95,7 +126,84 @@ class TraceStore:
                 out.append(int(name[len("shard_"):-len(".npz")]))
         return out
 
+    # -- summary cache -----------------------------------------------------
+    def shard_fingerprint(self) -> List[Tuple[int, int, int]]:
+        """Sorted (idx, size, mtime_ns) for every shard file — cheap O(n)
+        stat pass; any shard rewrite changes the fingerprint."""
+        out = []
+        for idx in self.shard_indices():
+            st = os.stat(os.path.join(self.root, shard_filename(idx)))
+            out.append((idx, int(st.st_size), int(st.st_mtime_ns)))
+        return out
+
+    def summary_key(self, plan_key: Sequence[int], metrics: Sequence[str],
+                    group_by: Optional[str],
+                    precision: str = "exact") -> str:
+        """Cache key over (plan, metrics, group_by, precision, shard
+        fingerprint). ``precision`` keeps numerically distinct producers
+        apart: the float64 host paths (serial/process — bit-identical to
+        each other) share ``"exact"`` entries, while the jax backend's
+        float32 collective results are keyed ``"float32"`` so they are
+        never served to a caller expecting exact moments."""
+        blob = json.dumps({
+            "version": SUMMARY_VERSION,
+            "plan": [int(x) for x in plan_key],
+            "metrics": list(metrics),
+            "group_by": group_by,
+            "precision": precision,
+            "shards": self.shard_fingerprint(),
+        }, sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    def has_summary(self, key: str) -> bool:
+        return os.path.exists(os.path.join(self.root, summary_filename(key)))
+
+    def write_summary(self, key: str,
+                      arrays: Dict[str, np.ndarray]) -> str:
+        """Atomically persist one summary payload (see module docstring)."""
+        path = os.path.join(self.root, summary_filename(key))
+        self._atomic_savez(path, arrays)
+        return path
+
+    def read_summary(self, key: str) -> Optional[Dict[str, np.ndarray]]:
+        """Summary payload for ``key``, or None on a cache miss."""
+        path = os.path.join(self.root, summary_filename(key))
+        if not os.path.exists(path):
+            return None
+        with np.load(path) as z:
+            return {k: z[k] for k in z.files}
+
+    def summary_keys(self) -> List[str]:
+        out = []
+        for name in sorted(os.listdir(self.root)):
+            if name.startswith("summary_") and name.endswith(".npz"):
+                out.append(name[len("summary_"):-len(".npz")])
+        return out
+
+    def clear_summaries(self) -> int:
+        """Drop every cached summary (pure derived data; tolerant of a
+        concurrent writer pruning the same files)."""
+        n = 0
+        for key in self.summary_keys():
+            try:
+                os.remove(os.path.join(self.root, summary_filename(key)))
+                n += 1
+            except FileNotFoundError:
+                pass
+        return n
+
     # -- util ----------------------------------------------------------------
+    def _atomic_savez(self, path: str, arrays: Dict[str, np.ndarray]) -> None:
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, **arrays)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+            raise
+
     @staticmethod
     def _atomic_write(path: str, data: bytes) -> None:
         d = os.path.dirname(path)

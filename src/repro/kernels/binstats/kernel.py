@@ -18,14 +18,22 @@ VPU hates data-dependent scatter — the TPU-native rethink (DESIGN.md §5) is
     additive moments for the whole tile in one 128-aligned matmul;
   * min/max ride masked VPU reductions over the same one-hot mask.
 
+Multi-metric contract: ``values`` is a (n_metrics, N) matrix — all metrics
+share one timestamp/valid vector, so the one-hot tile is built ONCE per
+grid cell and the additive moments for every metric ride a single
+``(T_BIN, T_EV) @ (T_EV, 3·M)`` matmul. This is what makes one pass over
+the events cost ~the same as a single-metric pass (the MXU contraction is
+bandwidth-bound on the one-hot operand, which is metric-independent).
+
 Binning is fused: the kernel receives float32 timestamps RELATIVE to the
 dataset start (int64 ns -> relative conversion is exact on host; see
 core.distributed for the contract) and computes
 ``bin = clip(floor(ts * inv_width), 0, n_bins-1)`` in-register.
 
 Block shapes: T_EV=1024 events x T_BIN=128 bins -> one-hot tile is 512 KB
-fp32, the (T_BIN, 8) accumulator a few KB; both fit VMEM comfortably and
-the matmul contraction dim (1024) and output dim (128) are MXU-aligned.
+fp32, the (M, T_BIN, 8) accumulator a few KB per metric; both fit VMEM
+comfortably and the matmul contraction dim (1024) and output dim (128) are
+MXU-aligned.
 """
 
 from __future__ import annotations
@@ -49,49 +57,61 @@ DEFAULT_BIN_TILE = 128
 
 def _binstats_kernel(ts_ref, val_ref, valid_ref, out_ref, *,
                      inv_width: float, n_bins: int, bin_tile: int):
-    """One (bin_tile, event_tile) grid cell."""
+    """One (bin_tile, event_tile) grid cell, all metrics at once."""
     e = pl.program_id(1)
     b = pl.program_id(0)
 
     ts = ts_ref[...]                      # (T_EV,) f32 relative ns
-    v = val_ref[...].astype(jnp.float32)  # (T_EV,)
+    v = val_ref[...].astype(jnp.float32)  # (M, T_EV)
     valid = valid_ref[...]                # (T_EV,) bool
+    n_metrics = v.shape[0]
+    t_ev = ts.shape[0]
 
     bins = jnp.clip((ts * inv_width).astype(jnp.int32), 0, n_bins - 1)
     local = bins - b * bin_tile           # bin id within this tile
-    lane = jax.lax.broadcasted_iota(jnp.int32, (ts.shape[0], bin_tile), 1)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (t_ev, bin_tile), 1)
     onehot_b = (local[:, None] == lane) & valid[:, None]  # (T_EV, T_BIN)
     onehot = onehot_b.astype(jnp.float32)
 
-    w = valid.astype(jnp.float32)
-    vals3 = jnp.stack([w, w * v, w * v * v], axis=1)      # (T_EV, 3)
-    # MXU: (T_BIN, T_EV) @ (T_EV, 3) — the scatter-as-matmul step.
+    w = valid.astype(jnp.float32)                         # (T_EV,)
+    wv = w[None, :] * v                                   # (M, T_EV)
+    triples = jnp.stack(
+        [jnp.broadcast_to(w[None, :], v.shape), wv, wv * v],
+        axis=-1)                                          # (M, T_EV, 3)
+    rhs = jnp.moveaxis(triples, 0, 1).reshape(t_ev, 3 * n_metrics)
+    # MXU: (T_BIN, T_EV) @ (T_EV, 3·M) — scatter-as-matmul, all metrics.
     sums = jax.lax.dot_general(
-        onehot, vals3, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)               # (T_BIN, 3)
+        onehot, rhs, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (T_BIN, 3·M)
+    sums = jnp.transpose(
+        sums.reshape(bin_tile, n_metrics, 3), (1, 0, 2))  # (M, T_BIN, 3)
 
-    big_min = jnp.where(onehot_b, v[:, None], POS_CAP).min(axis=0)
-    big_max = jnp.where(onehot_b, v[:, None], NEG_CAP).max(axis=0)
+    big_min = jnp.where(onehot_b[None, :, :], v[:, :, None],
+                        POS_CAP).min(axis=1)              # (M, T_BIN)
+    big_max = jnp.where(onehot_b[None, :, :], v[:, :, None],
+                        NEG_CAP).max(axis=1)
 
     tile = jnp.concatenate(
         [sums,
-         big_min[:, None], big_max[:, None],
-         jnp.zeros((bin_tile, N_STATS - 5), jnp.float32)], axis=1)
+         big_min[..., None], big_max[..., None],
+         jnp.zeros((n_metrics, bin_tile, N_STATS - 5), jnp.float32)],
+        axis=-1)                                          # (M, T_BIN, 8)
 
     @pl.when(e == 0)
     def _init():
         out_ref[...] = jnp.concatenate(
-            [jnp.zeros((bin_tile, 3), jnp.float32),
-             jnp.full((bin_tile, 1), POS_CAP, jnp.float32),
-             jnp.full((bin_tile, 1), NEG_CAP, jnp.float32),
-             jnp.zeros((bin_tile, N_STATS - 5), jnp.float32)], axis=1)
+            [jnp.zeros((n_metrics, bin_tile, 3), jnp.float32),
+             jnp.full((n_metrics, bin_tile, 1), POS_CAP, jnp.float32),
+             jnp.full((n_metrics, bin_tile, 1), NEG_CAP, jnp.float32),
+             jnp.zeros((n_metrics, bin_tile, N_STATS - 5), jnp.float32)],
+            axis=-1)
 
     acc = out_ref[...]
     out_ref[...] = jnp.concatenate(
-        [acc[:, :3] + tile[:, :3],
-         jnp.minimum(acc[:, 3:4], tile[:, 3:4]),
-         jnp.maximum(acc[:, 4:5], tile[:, 4:5]),
-         acc[:, 5:]], axis=1)
+        [acc[..., :3] + tile[..., :3],
+         jnp.minimum(acc[..., 3:4], tile[..., 3:4]),
+         jnp.maximum(acc[..., 4:5], tile[..., 4:5]),
+         acc[..., 5:]], axis=-1)
 
 
 def binstats_pallas(rel_ts: jnp.ndarray, values: jnp.ndarray,
@@ -100,12 +120,13 @@ def binstats_pallas(rel_ts: jnp.ndarray, values: jnp.ndarray,
                     ev_tile: int = DEFAULT_EV_TILE,
                     bin_tile: int = DEFAULT_BIN_TILE,
                     interpret: bool = True) -> jnp.ndarray:
-    """(N,) events -> (n_bins_padded, 8) padded moments.
+    """(M, N) events -> (M, n_bins_padded, 8) padded moments.
 
     ``n_bins`` is the LOGICAL bin count (defines the bin width and the clip
     range); ``n_bins_padded`` only rounds the output allocation up to the
     bin tile. Inputs must be pre-padded: N % ev_tile == 0 (ops.py pads)."""
-    n = rel_ts.shape[0]
+    n_metrics, n = values.shape
+    assert rel_ts.shape[0] == n and valid.shape[0] == n
     assert n % ev_tile == 0 and n_bins_padded % bin_tile == 0
     assert n_bins_padded >= n_bins
     grid = (n_bins_padded // bin_tile, n // ev_tile)
@@ -118,11 +139,12 @@ def binstats_pallas(rel_ts: jnp.ndarray, values: jnp.ndarray,
         grid=grid,
         in_specs=[
             pl.BlockSpec((ev_tile,), lambda b, e: (e,)),
-            pl.BlockSpec((ev_tile,), lambda b, e: (e,)),
+            pl.BlockSpec((n_metrics, ev_tile), lambda b, e: (0, e)),
             pl.BlockSpec((ev_tile,), lambda b, e: (e,)),
         ],
-        out_specs=pl.BlockSpec((bin_tile, N_STATS), lambda b, e: (b, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_bins_padded, N_STATS),
+        out_specs=pl.BlockSpec((n_metrics, bin_tile, N_STATS),
+                               lambda b, e: (0, b, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_metrics, n_bins_padded, N_STATS),
                                        jnp.float32),
         interpret=interpret,
     )(rel_ts, values, valid)

@@ -2,8 +2,10 @@
 
 ``binstats(...)`` pads events to the tile size and bins to the bin tile,
 then calls the Pallas kernel (interpret=True on CPU, compiled on TPU) or
-the jnp reference. Returns the UNPADDED (n_bins, 5) moment table matching
-:class:`repro.core.aggregation.BinStats` field order.
+the jnp reference. ``values`` may be a single (N,) metric — returning the
+UNPADDED (n_bins, 5) moment table as before — or a batched (M, N) metric
+matrix sharing one timestamp/valid vector, returning (M, n_bins, 5). Field
+order matches :class:`repro.core.aggregation.BinStats`.
 """
 
 from __future__ import annotations
@@ -18,12 +20,13 @@ from .kernel import (DEFAULT_BIN_TILE, DEFAULT_EV_TILE, binstats_pallas)
 from .ref import binstats_ref
 
 
-def _pad_to(x: jnp.ndarray, mult: int, fill=0):
-    pad = (-x.shape[0]) % mult
+def _pad_events(x: jnp.ndarray, mult: int, fill=0):
+    """Pad the trailing (event) axis to a multiple of ``mult``."""
+    pad = (-x.shape[-1]) % mult
     if pad == 0:
         return x
-    return jnp.concatenate(
-        [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths, constant_values=fill)
 
 
 @functools.partial(
@@ -37,24 +40,27 @@ def binstats(rel_ts: jnp.ndarray, values: jnp.ndarray,
     """Fused binning + per-bin (count, sum, sumsq, min, max) moments.
 
     rel_ts : (N,) float32 ns relative to dataset start
-    values : (N,) float32 metric samples
+    values : (N,) or (M, N) float32 metric samples (shared timestamps)
     valid  : (N,) bool
     """
-    rel_ts = _pad_to(rel_ts.astype(jnp.float32), ev_tile)
-    values = _pad_to(values.astype(jnp.float32), ev_tile)
-    valid = _pad_to(valid.astype(bool), ev_tile, fill=False)
+    squeeze = values.ndim == 1
+    vals = values[None, :] if squeeze else values
+    rel_ts = _pad_events(rel_ts.astype(jnp.float32), ev_tile)
+    vals = _pad_events(vals.astype(jnp.float32), ev_tile)
+    valid = _pad_events(valid.astype(bool), ev_tile, fill=False)
 
     if use_kernel:
         n_bins_p = int(np.ceil(n_bins / bin_tile) * bin_tile)
-        out = binstats_pallas(rel_ts, values, valid,
+        out = binstats_pallas(rel_ts, vals, valid,
                               total_ns=total_ns, n_bins=n_bins,
                               n_bins_padded=n_bins_p,
                               ev_tile=ev_tile, bin_tile=bin_tile,
                               interpret=interpret)
         # events were clipped to n_bins-1 < n_bins_p, so padding bins are
         # empty by construction; drop them.
-        out = out[:n_bins]
+        out = out[:, :n_bins]
     else:
-        out = binstats_ref(rel_ts, values, valid,
+        out = binstats_ref(rel_ts, vals, valid,
                            total_ns=total_ns, n_bins=n_bins)
-    return out[:, :5]
+    out = out[..., :5]
+    return out[0] if squeeze else out

@@ -8,16 +8,9 @@ import jax.numpy as jnp
 from .kernel import N_STATS, NEG_CAP, POS_CAP
 
 
-def binstats_ref(rel_ts: jnp.ndarray, values: jnp.ndarray,
-                 valid: jnp.ndarray, *, total_ns: float, n_bins: int,
-                 ) -> jnp.ndarray:
-    """(N,) events -> (n_bins, 8): count,sum,sumsq,min,max,0,0,0.
-
-    Bin contract identical to the kernel: float32 relative timestamps,
-    bin = clip(floor(ts * n_bins/total), 0, n_bins-1); invalid rows are
-    weightless and neutral for min/max. Empty bins report min=POS_CAP,
-    max=NEG_CAP (the merge identity), exactly like the kernel.
-    """
+def _binstats_ref_1d(rel_ts: jnp.ndarray, values: jnp.ndarray,
+                     valid: jnp.ndarray, *, total_ns: float, n_bins: int,
+                     ) -> jnp.ndarray:
     inv_width = jnp.float32(n_bins / total_ns)
     v = values.astype(jnp.float32)
     bins = jnp.clip((rel_ts * inv_width).astype(jnp.int32), 0, n_bins - 1)
@@ -33,3 +26,24 @@ def binstats_ref(rel_ts: jnp.ndarray, values: jnp.ndarray,
     return jnp.concatenate(
         [count[:, None], s[:, None], ss[:, None],
          mn[:, None], mx[:, None], pad], axis=1)
+
+
+def binstats_ref(rel_ts: jnp.ndarray, values: jnp.ndarray,
+                 valid: jnp.ndarray, *, total_ns: float, n_bins: int,
+                 ) -> jnp.ndarray:
+    """(M, N) events -> (M, n_bins, 8): count,sum,sumsq,min,max,0,0,0.
+
+    Bin contract identical to the kernel: float32 relative timestamps,
+    bin = clip(floor(ts * n_bins/total), 0, n_bins-1); invalid rows are
+    weightless and neutral for min/max; all metric rows share one
+    timestamp/valid vector. Empty bins report min=POS_CAP, max=NEG_CAP
+    (the merge identity), exactly like the kernel. A 1-D ``values`` input
+    yields the legacy (n_bins, 8) table.
+    """
+    if values.ndim == 1:
+        return _binstats_ref_1d(rel_ts, values, valid,
+                                total_ns=total_ns, n_bins=n_bins)
+    return jax.vmap(
+        lambda v: _binstats_ref_1d(rel_ts, v, valid,
+                                   total_ns=total_ns, n_bins=n_bins)
+    )(values)

@@ -1,0 +1,215 @@
+"""The multi-metric × group-by engine's correctness core:
+
+  * one pass over M metrics is BIT-IDENTICAL, per metric, to M independent
+    single-metric passes (same np.add.at order per (bin, group) cell);
+  * the grouped tensor, merged over groups, equals the ungrouped statistic;
+  * serial / process backends agree exactly and the jax collective backend
+    agrees to float32 tolerance, on the same grouped tensor.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (GenerationConfig, PipelineConfig,
+                        VariabilityPipeline, run_generation)
+from repro.core.aggregation import (BinStats, bin_samples,
+                                    bin_samples_grouped, run_aggregation)
+from repro.core.anomaly import anomalous_bins, top_variability_bins
+from repro.core.sharding import ShardPlan
+from repro.core.tracestore import TraceStore
+
+METRICS = ["k_stall", "m_duration"]
+
+
+@pytest.fixture(scope="module")
+def store_dir(small_dataset, tmp_path_factory):
+    ds, paths = small_dataset
+    out = str(tmp_path_factory.mktemp("mm_store"))
+    run_generation(paths, out, n_ranks=2)
+    return out
+
+
+def test_grouped_binning_matches_manual_groupby():
+    rng = np.random.default_rng(0)
+    plan = ShardPlan(0, 10_000, 17)
+    ts = rng.integers(0, 10_000, 800)
+    vals = rng.normal(50, 20, (800, 2))
+    gid = rng.integers(0, 3, 800)
+    t = bin_samples_grouped(ts, vals, gid, 3, plan)
+    assert t.count.shape == (17, 3, 2)
+    for g in range(3):
+        for j in range(2):
+            ref = bin_samples(ts[gid == g], vals[gid == g, j], plan)
+            np.testing.assert_array_equal(t.count[:, g, j], ref.count)
+            np.testing.assert_array_equal(t.sum[:, g, j], ref.sum)
+            np.testing.assert_array_equal(t.sumsq[:, g, j], ref.sumsq)
+            np.testing.assert_array_equal(t.min[:, g, j], ref.min)
+            np.testing.assert_array_equal(t.max[:, g, j], ref.max)
+
+
+def test_group_merge_equals_ungrouped():
+    rng = np.random.default_rng(1)
+    plan = ShardPlan(0, 5_000, 11)
+    ts = rng.integers(0, 5_000, 500)
+    vals = rng.normal(10, 4, (500, 1))
+    gid = rng.integers(0, 4, 500)
+    t = bin_samples_grouped(ts, vals, gid, 4, plan).merge_groups()
+    ref = bin_samples(ts, vals[:, 0], plan)
+    np.testing.assert_array_equal(t.count[:, 0], ref.count)
+    np.testing.assert_allclose(t.sum[:, 0], ref.sum, rtol=1e-12)
+    np.testing.assert_array_equal(t.min[:, 0], ref.min)
+    np.testing.assert_array_equal(t.max[:, 0], ref.max)
+
+
+def test_multimetric_run_bit_identical_to_single_runs(store_dir):
+    """The PR's acceptance criterion, on the sequential driver."""
+    multi = run_aggregation(store_dir, metrics=METRICS, group_by="m_kind",
+                            use_cache=False)
+    assert multi.grouped.count.shape[2] == len(METRICS)
+    for j, m in enumerate(METRICS):
+        single = run_aggregation(store_dir, metrics=[m], group_by="m_kind",
+                                 use_cache=False)
+        np.testing.assert_array_equal(multi.group_keys, single.group_keys)
+        for f in ("count", "sum", "sumsq", "min", "max"):
+            np.testing.assert_array_equal(
+                getattr(multi.grouped, f)[:, :, j],
+                getattr(single.grouped, f)[:, :, 0])
+
+
+def test_legacy_single_metric_api_unchanged(store_dir):
+    """Positional legacy call still yields 1-D stats equal to the direct
+    per-shard accumulation (bit-for-bit)."""
+    res = run_aggregation(store_dir, use_cache=False)
+    store = TraceStore(store_dir)
+    plan = res.plan
+    ref = BinStats.zeros(plan.n_shards)
+    for s in store.shard_indices():
+        cols = store.read_shard(s)
+        ref = ref.merge(bin_samples(cols["k_start"].astype(np.int64),
+                                    cols["k_stall"], plan))
+    assert res.stats.count.ndim == 1
+    np.testing.assert_array_equal(res.stats.count, ref.count)
+    np.testing.assert_array_equal(res.stats.sum, ref.sum)
+    np.testing.assert_array_equal(res.stats.min, ref.min)
+
+
+def test_empty_shards_contribute_no_group_keys(store_dir):
+    """Regression: an empty shard must not inject a phantom 0.0 group key
+    (which would also desync serial/process group_keys from the jax
+    backend's np.unique-over-data keys under the same cache key)."""
+    store = TraceStore(store_dir)
+    empty_idx = max(store.shard_indices()) + 1
+    cols = store.read_shard(store.shard_indices()[0])
+    store.write_shard(empty_idx, {k: v[:0] for k, v in cols.items()})
+    try:
+        # m_kind values are copyKind codes {-1, 1, 2, 8} — 0.0 is never a
+        # real key, so a phantom empty-shard group is unambiguous.
+        res = run_aggregation(store_dir, metrics=["k_stall"],
+                              group_by="m_kind", use_cache=False)
+        data_keys = set()
+        for s in store.shard_indices():
+            c = store.read_shard(s)
+            if len(c["m_kind"]):
+                data_keys.update(np.unique(c["m_kind"]).tolist())
+        assert 0.0 not in data_keys
+        np.testing.assert_array_equal(res.group_keys,
+                                      np.asarray(sorted(data_keys)))
+    finally:
+        os.remove(os.path.join(store_dir, f"shard_{empty_idx:06d}.npz"))
+
+
+def test_rank_count_invariance_grouped(store_dir):
+    a = run_aggregation(store_dir, n_ranks=1, metrics=METRICS,
+                        group_by="k_device", use_cache=False)
+    b = run_aggregation(store_dir, n_ranks=4, metrics=METRICS,
+                        group_by="k_device", use_cache=False)
+    for f in ("count", "sum", "sumsq", "min", "max"):
+        np.testing.assert_array_equal(getattr(a.grouped, f),
+                                      getattr(b.grouped, f))
+
+
+def test_result_select_and_anomaly_on_tensor(store_dir):
+    res = run_aggregation(store_dir, metrics=METRICS, group_by="m_kind",
+                          use_cache=False)
+    sel = res.select(metric="k_stall")
+    assert sel.count.ndim == 1
+    np.testing.assert_array_equal(sel.count, res.stats.count)
+    one = res.select(metric="m_duration", group=float(res.group_keys[0]))
+    assert one.count.ndim == 1
+    with pytest.raises(KeyError):
+        res.select(metric=0, group=-1234.5)
+    # detectors accept the tensor directly
+    rep = anomalous_bins(res.grouped, boundaries=res.plan.boundaries())
+    assert rep.scores.ndim == 1
+    idx = top_variability_bins(res.grouped)
+    assert idx.ndim == 1
+
+
+def _run_backend(paths, workdir, backend, **kw):
+    cfg = PipelineConfig(
+        n_ranks=2, backend=backend, metrics=METRICS, group_by="k_device",
+        use_summary_cache=False,
+        generation=GenerationConfig(), **kw)
+    return VariabilityPipeline(cfg).run(
+        paths, os.path.join(workdir, f"mm_{backend}"))
+
+
+def test_backends_agree_on_multimetric_tensor(small_dataset, tmp_path):
+    """Satellite criterion: serial == process exactly; jax (float32
+    collectives) to tolerance — on the full grouped moment tensor."""
+    ds, paths = small_dataset
+    a = _run_backend(paths, str(tmp_path), "serial")
+    b = _run_backend(paths, str(tmp_path), "process")
+    c = _run_backend(paths, str(tmp_path), "jax")
+    ga, gb, gc = (r.aggregation.grouped for r in (a, b, c))
+    for f in ("count", "sum", "sumsq", "min", "max"):
+        np.testing.assert_array_equal(getattr(ga, f), getattr(gb, f))
+    np.testing.assert_array_equal(a.aggregation.group_keys,
+                                  c.aggregation.group_keys)
+    np.testing.assert_allclose(gc.count, ga.count, rtol=1e-5)
+    occ = ga.count > 0
+    np.testing.assert_allclose(gc.mean[occ], ga.mean[occ],
+                               rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(np.where(occ, gc.min, 0.0),
+                               np.where(occ, ga.min, 0.0),
+                               rtol=1e-5, atol=1e-2)
+    np.testing.assert_array_equal(a.anomalies.top_idx, b.anomalies.top_idx)
+
+
+def test_jax_cache_entries_never_served_to_exact_backends(small_dataset,
+                                                          tmp_path):
+    """Regression: jax summaries derive from float32 collectives and are
+    keyed precision='float32' — a later serial aggregation over the same
+    store/query must recompute exactly, not read the jax entry."""
+    ds, paths = small_dataset
+    work = str(tmp_path / "store")
+    jax_cfg = PipelineConfig(n_ranks=2, backend="jax", metrics=METRICS,
+                             group_by="m_kind")
+    VariabilityPipeline(jax_cfg).run(paths, work)
+    ser_cfg = PipelineConfig(n_ranks=2, backend="serial", metrics=METRICS,
+                             group_by="m_kind")
+    warm_jax = VariabilityPipeline(jax_cfg).aggregate(work)
+    assert warm_jax.from_cache                  # jax reuses its own entry
+    serial = VariabilityPipeline(ser_cfg).aggregate(work)
+    assert not serial.from_cache                # but serial recomputes
+    cold = run_aggregation(work, metrics=METRICS, group_by="m_kind",
+                           use_cache=False)
+    for f in ("count", "sum", "sumsq", "min", "max"):
+        np.testing.assert_array_equal(getattr(serial.grouped, f),
+                                      getattr(cold.grouped, f))
+
+
+def test_pipeline_summary_cache_round_trip(small_dataset, tmp_path):
+    ds, paths = small_dataset
+    cfg = PipelineConfig(n_ranks=2, backend="serial", metrics=METRICS,
+                         group_by="m_kind")
+    pipe = VariabilityPipeline(cfg)
+    res = pipe.run(paths, str(tmp_path / "store"))
+    assert not res.aggregation.from_cache
+    again = pipe.aggregate(str(tmp_path / "store"))
+    assert again.from_cache
+    for f in ("count", "sum", "sumsq", "min", "max"):
+        np.testing.assert_array_equal(getattr(res.aggregation.grouped, f),
+                                      getattr(again.grouped, f))

@@ -2,6 +2,8 @@
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property-test module; skips without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.sharding import (ShardPlan, assignment, block_assignment,

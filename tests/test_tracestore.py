@@ -1,0 +1,142 @@
+"""TraceStore contract tests: atomic-write crash safety (a dying writer
+never leaves a torn shard or a stray tmp file) and the summary cache
+(hit / miss / invalidation keyed on plan × metrics × group_by × shard
+fingerprint)."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.aggregation import run_aggregation
+from repro.core.sharding import ShardPlan
+from repro.core.tracestore import (StoreManifest, TraceStore,
+                                   shard_filename, summary_filename)
+
+
+class _Exploding:
+    """Array-like that detonates when np.savez materializes it."""
+
+    def __array__(self, dtype=None):
+        raise RuntimeError("simulated writer crash")
+
+
+def _tmp_files(root):
+    return [f for f in os.listdir(root) if f.endswith(".tmp")]
+
+
+def _mini_store(root, n_shards=6, n_rows=400, seed=0):
+    """Small synthetic store written directly (no SQLite round trip)."""
+    rng = np.random.default_rng(seed)
+    store = TraceStore(root)
+    plan = ShardPlan(0, 60_000, n_shards)
+    cols_all = {
+        "k_start": rng.integers(0, 60_000, n_rows).astype(np.float64),
+        "k_stall": rng.normal(100, 25, n_rows),
+        "m_bytes": rng.integers(0, 1 << 20, n_rows).astype(np.float64),
+        "m_kind": rng.choice([1.0, 2.0, 8.0], n_rows),
+        "m_start": rng.integers(0, 60_000, n_rows).astype(np.float64),
+        "joined": rng.integers(0, 2, n_rows).astype(np.float64),
+        "k_device": rng.integers(0, 4, n_rows).astype(np.float64),
+    }
+    sid = plan.shard_of(cols_all["k_start"].astype(np.int64))
+    for s in range(n_shards):
+        m = sid == s
+        store.write_shard(s, {k: v[m] for k, v in cols_all.items()})
+    store.write_manifest(StoreManifest(
+        t_start=0, t_end=60_000, n_shards=n_shards, n_ranks=2,
+        partitioning="block", columns=sorted(cols_all),
+        shard_owner=[0] * n_shards))
+    return store, plan
+
+
+# --- atomic writes ---------------------------------------------------------
+
+def test_crashed_shard_write_leaves_no_tmp_and_keeps_old_data(tmp_path):
+    store = TraceStore(str(tmp_path))
+    good = {"k_start": np.arange(5.0), "k_stall": np.ones(5)}
+    store.write_shard(3, good)
+    with pytest.raises(RuntimeError, match="simulated writer crash"):
+        store.write_shard(3, {"k_start": _Exploding()})
+    assert _tmp_files(store.root) == []          # torn tmp cleaned up
+    cols = store.read_shard(3)                   # old shard intact
+    np.testing.assert_array_equal(cols["k_start"], good["k_start"])
+
+
+def test_crashed_fresh_shard_write_leaves_nothing(tmp_path):
+    store = TraceStore(str(tmp_path))
+    with pytest.raises(RuntimeError):
+        store.write_shard(0, {"x": _Exploding()})
+    assert _tmp_files(store.root) == []
+    assert not store.has_shard(0)
+    assert not os.path.exists(os.path.join(store.root, shard_filename(0)))
+
+
+def test_crashed_summary_write_leaves_no_tmp(tmp_path):
+    store = TraceStore(str(tmp_path))
+    with pytest.raises(RuntimeError):
+        store.write_summary("deadbeefdeadbeef", {"x": _Exploding()})
+    assert _tmp_files(store.root) == []
+    assert store.read_summary("deadbeefdeadbeef") is None
+
+
+# --- summary cache ---------------------------------------------------------
+
+def test_summary_cache_hit_returns_identical_moments(tmp_path):
+    store, plan = _mini_store(str(tmp_path))
+    cold = run_aggregation(store, metrics=["k_stall", "m_bytes"],
+                           group_by="m_kind")
+    assert not cold.from_cache
+    warm = run_aggregation(store, metrics=["k_stall", "m_bytes"],
+                           group_by="m_kind")
+    assert warm.from_cache
+    for f in ("count", "sum", "sumsq", "min", "max"):
+        np.testing.assert_array_equal(getattr(cold.grouped, f),
+                                      getattr(warm.grouped, f))
+    np.testing.assert_array_equal(cold.group_keys, warm.group_keys)
+    assert warm.metrics == ["k_stall", "m_bytes"]
+    assert warm.group_by == "m_kind"
+    for k in cold.copy_kind_bytes:
+        np.testing.assert_array_equal(cold.copy_kind_bytes[k],
+                                      warm.copy_kind_bytes[k])
+
+
+def test_summary_cache_misses_on_different_query(tmp_path):
+    store, _ = _mini_store(str(tmp_path))
+    run_aggregation(store, metrics=["k_stall"])
+    assert len(store.summary_keys()) == 1
+    # different metric set, group column, or binning -> distinct entries
+    r2 = run_aggregation(store, metrics=["k_stall", "m_bytes"])
+    r3 = run_aggregation(store, metrics=["k_stall"], group_by="k_device")
+    r4 = run_aggregation(store, metrics=["k_stall"], interval_ns=5_000)
+    assert not any(r.from_cache for r in (r2, r3, r4))
+    assert len(store.summary_keys()) == 4
+
+
+def test_summary_cache_invalidated_by_shard_rewrite(tmp_path):
+    store, _ = _mini_store(str(tmp_path))
+    warm_key = store.summary_key((0, 60_000, 6), ["k_stall"], None)
+    first = run_aggregation(store, metrics=["k_stall"])
+    assert store.has_summary(warm_key)
+    cols = store.read_shard(2)
+    cols["k_stall"] = cols["k_stall"] + 1e6
+    store.write_shard(2, cols)                   # fingerprint changes
+    again = run_aggregation(store, metrics=["k_stall"])
+    assert not again.from_cache
+    assert again.stats.sum.sum() > first.stats.sum.sum()
+
+
+def test_clear_summaries_drops_only_cache_files(tmp_path):
+    store, _ = _mini_store(str(tmp_path))
+    run_aggregation(store, metrics=["k_stall"])
+    key = store.summary_keys()[0]
+    assert os.path.exists(os.path.join(store.root, summary_filename(key)))
+    n = store.clear_summaries()
+    assert n == 1 and store.summary_keys() == []
+    assert store.shard_indices() == list(range(6))  # shards untouched
+
+
+def test_use_cache_false_never_writes(tmp_path):
+    store, _ = _mini_store(str(tmp_path))
+    run_aggregation(store, metrics=["k_stall"], use_cache=False)
+    assert store.summary_keys() == []
