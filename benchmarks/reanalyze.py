@@ -11,10 +11,13 @@ Two modes:
 
   * trace store: re-run a multi-metric group-by aggregation over an
     existing shard store. Repeat queries are answered from the O(n_bins)
-    ``summary_*.npz`` cache instead of re-scanning raw shards:
+    ``summary_*.npz`` cache instead of re-scanning raw shards — the
+    reported time is labeled with ``from_cache`` so a warm probe is never
+    mistaken for a cold scan. ``--quantile`` adds the quantile-sketch
+    reducer and prints per-metric P50/P95/P99:
 
       PYTHONPATH=src python -m benchmarks.reanalyze --store /path/to/store \\
-          --metrics k_stall,m_duration --group-by k_device
+          --metrics k_stall,m_duration --group-by k_device --quantile
 """
 
 from __future__ import annotations
@@ -57,20 +60,32 @@ def reanalyze_roofline(dirname: str) -> None:
 
 
 def reanalyze_store(store_dir: str, metrics: list, group_by: str,
-                    no_cache: bool) -> None:
+                    no_cache: bool, quantile: bool = False) -> None:
     from repro.core.aggregation import run_aggregation
 
+    reducers = ("moments", "quantile") if quantile else ("moments",)
     res = run_aggregation(store_dir, metrics=metrics, group_by=group_by,
-                          use_cache=not no_cache)
+                          use_cache=not no_cache, reducers=reducers)
     src = "summary cache" if res.from_cache else "raw shards"
+    # from_cache is surfaced explicitly: on a hit, `seconds` is the cache
+    # probe + decode time, NOT a shard scan — label it as such.
     print(f"aggregated {len(res.metrics)} metrics x "
           f"{len(res.group_keys)} groups x {res.plan.n_shards} bins "
-          f"from {src} in {res.seconds*1e3:.1f}ms")
+          f"from {src} in {res.seconds*1e3:.1f}ms "
+          f"(from_cache={res.from_cache})")
     for m in res.metrics:
         s = res.select(metric=m)
         occ = s.count > 0
         mean = s.mean[occ].mean() if occ.any() else 0.0
-        print(f"  {m}: occupied_bins={int(occ.sum())} mean={mean:.4g}")
+        line = f"  {m}: occupied_bins={int(occ.sum())} mean={mean:.4g}"
+        if quantile:
+            sk = res.sketch(metric=m)
+            if occ.any():
+                p50, p95, p99 = (sk.quantile(q)[occ].mean()
+                                 for q in (0.5, 0.95, 0.99))
+                line += (f" p50~{p50:.4g} p95~{p95:.4g} p99~{p99:.4g}"
+                         " (sketch)")
+        print(line)
 
 
 def main() -> None:
@@ -86,11 +101,14 @@ def main() -> None:
                     help="group column, e.g. k_device (--store mode)")
     ap.add_argument("--no-cache", action="store_true",
                     help="force a cold re-scan of the raw shards")
+    ap.add_argument("--quantile", action="store_true",
+                    help="add the quantile-sketch reducer and print "
+                         "per-metric P50/P95/P99 (--store mode)")
     args = ap.parse_args()
 
     if args.store:
         reanalyze_store(args.store, args.metrics.split(","),
-                        args.group_by, args.no_cache)
+                        args.group_by, args.no_cache, args.quantile)
     else:
         reanalyze_roofline(args.dir)
 

@@ -2,14 +2,17 @@
 
   PYTHONPATH=src python examples/analyze_trace.py --db rank0.sqlite \\
       --db rank1.sqlite --ranks 4 --backend process --interval-ms 1000 \\
-      --metric k_stall --metric m_duration --group-by k_device
+      --metric k_stall --metric m_duration --group-by k_device \\
+      --score p99
 
 Without --db, a synthetic dataset is generated (useful demo mode). Prints
 the Fig-1a/1b analyses: per-bin stall stats, top-variability intervals and
 the transfer-direction byte breakdown — plus, with several --metric flags
-and/or --group-by, the one-pass multi-metric grouped summary. Repeat
-aggregations over the same store are answered from the summary cache
-(``summary_*.npz``) without re-reading shards.
+and/or --group-by, the one-pass multi-metric grouped summary. A quantile
+score (``--score p99`` / ``p95`` / ``iqr``) adds the quantile-sketch
+reducer and fences on the within-bin duration distribution instead of the
+bin mean. Repeat aggregations over the same store are answered from the
+summary cache (``summary_*.npz``) without re-reading shards.
 """
 
 import argparse
@@ -41,6 +44,9 @@ def main() -> None:
                     help="metric column (repeatable; default k_stall)")
     ap.add_argument("--group-by", default=None,
                     help="group column, e.g. k_device, k_name, m_kind")
+    ap.add_argument("--score", default="mean",
+                    help="anomaly score: mean/std/max/sum (moments) or "
+                         "p50/p95/p99/iqr (quantile sketch)")
     args = ap.parse_args()
 
     tmp = tempfile.mkdtemp(prefix="repro_analyze_")
@@ -51,9 +57,12 @@ def main() -> None:
         db_paths = write_synthetic_dbs(ds, os.path.join(tmp, "dbs"))
 
     metrics = args.metric or ["k_stall"]
+    # a quantile-family score pulls the "quantile" reducer into the suite
+    # automatically (PipelineConfig.reducer_suite)
     cfg = PipelineConfig(
         n_ranks=args.ranks, backend=args.backend, top_k=args.top_k,
         metrics=metrics, group_by=args.group_by,
+        anomaly_score=args.score,
         generation=GenerationConfig(
             interval_ns=int(args.interval_ms * 1e6)))
     pipe = VariabilityPipeline(cfg)

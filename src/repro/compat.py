@@ -1,0 +1,74 @@
+"""jax version-compatibility shims (supported floor jax>=0.4.30).
+
+The model/train/roofline stack targets jax>=0.6 surface APIs that older
+jax spells differently. Every site that needs one of these goes through
+this module instead of sniffing ``jax.__version__`` locally:
+
+  * :func:`make_mesh` — ``jax.make_mesh(..., axis_types=(AxisType.Auto,))``
+    on modern jax; plain ``jax.make_mesh`` / ``mesh_utils`` fallback where
+    ``jax.sharding.AxisType`` does not exist yet.
+  * :func:`set_mesh` — ``jax.set_mesh(mesh)`` context on modern jax; the
+    ``Mesh.__enter__`` resource-env context on older jax (same semantics
+    for the in-context sharding resolution these tests rely on).
+  * :func:`shard_map` — ``jax.shard_map`` (>=0.6, ``check_vma``) vs the
+    experimental module (older, ``check_rep``); used by the collective
+    analyzer path (core/distributed.py) and the model TP/MoE blocks.
+  * :func:`cost_analysis_dict` — ``Compiled.cost_analysis()`` returns a
+    dict on modern jax but a one-element list of dicts on jax<0.5.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Sequence, Tuple
+
+import jax
+
+
+def make_mesh(shape: Sequence[int], axis_names: Sequence[str]):
+    """A device mesh with Auto axis types on every jax we support."""
+    axis_type = getattr(getattr(jax, "sharding"), "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(tuple(shape), tuple(axis_names),
+                             axis_types=(axis_type.Auto,) * len(shape))
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(tuple(shape), tuple(axis_names))
+    from jax.experimental import mesh_utils
+    from jax.sharding import Mesh
+    return Mesh(mesh_utils.create_device_mesh(tuple(shape)),
+                tuple(axis_names))
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """``jax.set_mesh`` where it exists, else the Mesh resource-env
+    context manager (pre-0.6 spelling of "make this the ambient mesh")."""
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` (>=0.6, ``check_vma``) / experimental shard_map
+    (older, ``check_rep``) — replication checking off in both."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, check_vma=False,
+                             in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as esm
+    return esm(f, mesh=mesh, check_rep=False,
+               in_specs=in_specs, out_specs=out_specs)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every jax version."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return ca[0] if ca else {}
+    return dict(ca or {})
+
+
+def jax_version() -> Tuple[int, ...]:
+    return tuple(int(x) for x in jax.__version__.split(".")[:2])

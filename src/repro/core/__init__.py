@@ -6,9 +6,13 @@ Layout (one module per paper concept — see DESIGN.md §2/§3):
   tracestore    columnar shard files + manifest ("parquet") + summary cache
   sharding      time partitioner, block/cyclic rank assignment
   generation    phase 1: extract -> window left-join -> shard files
-  aggregation   phase 2: one-pass M-metrics x G-groups moment tensor ->
+  reducers      pluggable mergeable statistics: "moments" (BinStats) and
+                "quantile" (log-bucket QuantileSketch) per (bin, group,
+                metric) cell
+  aggregation   phase 2: one-pass M-metrics x G-groups reducer tensors ->
                 round-robin merge -> cached summary
-  anomaly       IQR fences, top-k anomalous shards
+  anomaly       IQR fences (mean/std/max/sum + p50/p95/p99/iqr scores),
+                top-k anomalous shards
   distributed   jax backend (shard_map + psum_scatter/all_gather)
   pipeline      end-to-end driver (serial | process | jax backends)
 """
@@ -21,6 +25,9 @@ from .sharding import (ShardPlan, assignment, block_assignment,
 from .tracestore import StoreManifest, TraceStore
 from .generation import (GenerationConfig, GenerationReport,
                          run_generation, window_left_join)
+from .reducers import (MergeableReducer, QuantileSketch, get_reducer,
+                       normalize_reducers, register_reducer,
+                       REDUCER_REGISTRY, QUANTILE_REL_ERR)
 from .aggregation import (AggregationResult, BinStats, GroupedPartial,
                           bin_samples, bin_samples_grouped,
                           load_rank_partials, round_robin_merge,

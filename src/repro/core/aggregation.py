@@ -7,130 +7,73 @@ corresponding time shards. Subsequently, P ranks collaboratively compute
 statistical metrics (minimum, maximum, standard deviation) in a round-robin
 manner, balancing workload evenly and minimizing contention."
 
-The statistics kernel is expressed as *mergeable partial moments* per bin:
+Reducer framework
+-----------------
+The per-shard statistic is *pluggable*: every driver below is generic over
+a suite of mergeable reducers (see :mod:`repro.core.reducers` for the
+``zeros / bin_grouped / merge / take_bins / stack_groups / to_payload /
+from_payload`` contract). Two reducers ship today:
 
-    (count, sum, sumsq, min, max)
+  * ``"moments"`` — :class:`BinStats` partial moments
+    (count, sum, sumsq, min, max); Chan et al.'s pairwise-merge
+    formulation, which makes the distributed result EXACTLY equal to the
+    serial one (tested). mean/std/var derive from the moments at the end.
+  * ``"quantile"`` — :class:`~repro.core.reducers.QuantileSketch`
+    log-bucket histograms, merged by pure addition, answering per-bin
+    P50/P95/P99 and within-bin IQR with bounded relative error.
 
-which merge associatively across ranks — the property the round-robin
-collaborative reduction (and the jax `psum`/`pmin`/`pmax` backend, and the
-Pallas binstats kernel) all rely on.  mean/std/variance derive from the
-moments at the end.  This is Chan et al.'s pairwise-merge formulation and is
-what makes the distributed result EXACTLY equal to the serial one (tested).
+Because every merge is associative and commutative, the same round-robin
+collaborative reduction (and the jax ``psum``/``pmin``/``pmax`` backend,
+and the Pallas binstats/histbin kernels) serves any suite member; adding a
+reducer never forces a second scan of the raw shards.
 
 Multi-metric × group-by engine
 ------------------------------
-One pass over the shards now yields a ``(n_bins, n_groups, n_metrics)``
-moment tensor: every :class:`BinStats` field may carry trailing
-(group, metric) axes and all merges/derived stats are elementwise, so the
-same round-robin reduction serves one metric or M metrics × G group keys
-(kernel id ``k_name``, device ``k_device``, transfer kind ``m_kind``, ...).
-Per-metric accumulation order is unchanged whether a metric rides alone or
-in a batch, so a multi-metric run is bit-identical to M single-metric runs.
+One pass over the shards yields a ``(n_bins, n_groups, n_metrics)`` tensor
+per reducer: state arrays carry trailing (group, metric) axes and all
+merges/derived stats are elementwise, so the same reduction serves one
+metric or M metrics × G group keys (kernel id ``k_name``, device
+``k_device``, transfer kind ``m_kind``, ...). Per-metric accumulation
+order is unchanged whether a metric rides alone or in a batch, so a
+multi-metric run is bit-identical to M single-metric runs.
 
-Merged summaries are memoized as ``summary_{key}.npz`` in the
-:class:`TraceStore` (see its module docstring for the payload format), so a
-repeat query over an unchanged store is answered from the O(n_bins) cache
-instead of re-scanning raw shards.
+Merged suites are memoized as ``summary_{key}.npz`` in the
+:class:`TraceStore` (see its module docstring for the payload format) with
+the reducer suite part of the cache key — a repeat query over an unchanged
+store is answered from the O(n_bins) cache instead of re-scanning raw
+shards, and a payload written by an older engine version is treated as a
+miss, never a crash.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from .reducers import (BinStats, QuantileSketch, get_reducer,
+                       normalize_reducers)
 from .sharding import ShardPlan, assignment, cyclic_assignment
 from .tracestore import SUMMARY_VERSION, TraceStore
+
+__all__ = [
+    "AggregationResult", "BinStats", "QuantileSketch", "GroupedPartial",
+    "bin_samples", "bin_samples_grouped", "load_rank_grouped",
+    "load_rank_partials", "round_robin_merge", "run_aggregation",
+    "DEFAULT_METRIC", "STAT_FIELDS",
+]
 
 # Metrics the analyzer computes per time bin. Each is (what column, weight).
 DEFAULT_METRIC = "k_stall"            # memory-stall ns — the Fig-1a metric
 
-STAT_FIELDS = ("count", "sum", "sumsq", "min", "max")
+STAT_FIELDS = BinStats.fields
+
+DEFAULT_REDUCERS = ("moments",)
 
 # Pseudo group key used when no group_by column is requested.
 _NO_GROUP_KEY = 0.0
-
-
-@dataclasses.dataclass
-class BinStats:
-    """Per-bin partial moments. Shapes all (n_bins,) in the single-metric
-    case, or (n_bins, n_groups, n_metrics) for the grouped tensor — every
-    operation below is elementwise over the trailing axes."""
-
-    count: np.ndarray     # float64
-    sum: np.ndarray       # float64
-    sumsq: np.ndarray     # float64
-    min: np.ndarray       # float64 (+inf where empty)
-    max: np.ndarray       # float64 (-inf where empty)
-
-    @staticmethod
-    def zeros(n_bins: int, trailing: Tuple[int, ...] = ()) -> "BinStats":
-        shape = (n_bins, *trailing)
-        return BinStats(
-            count=np.zeros(shape), sum=np.zeros(shape),
-            sumsq=np.zeros(shape),
-            min=np.full(shape, np.inf), max=np.full(shape, -np.inf))
-
-    @property
-    def n_bins(self) -> int:
-        return int(self.count.shape[0])
-
-    def merge(self, other: "BinStats") -> "BinStats":
-        """Associative, commutative merge — the collaborative-reduce op."""
-        return BinStats(
-            count=self.count + other.count,
-            sum=self.sum + other.sum,
-            sumsq=self.sumsq + other.sumsq,
-            min=np.minimum(self.min, other.min),
-            max=np.maximum(self.max, other.max))
-
-    def take_bins(self, idx: np.ndarray) -> "BinStats":
-        """Slice along the bin axis (keeps any trailing axes)."""
-        return BinStats(count=self.count[idx], sum=self.sum[idx],
-                        sumsq=self.sumsq[idx], min=self.min[idx],
-                        max=self.max[idx])
-
-    def merge_groups(self) -> "BinStats":
-        """Reduce the group axis of a (n_bins, G, M) tensor — every sample
-        belongs to exactly one group, so this IS the ungrouped statistic."""
-        if self.count.ndim < 3:
-            return self
-        return BinStats(
-            count=self.count.sum(axis=1), sum=self.sum.sum(axis=1),
-            sumsq=self.sumsq.sum(axis=1),
-            min=self.min.min(axis=1), max=self.max.max(axis=1))
-
-    def select_metric(self, j: int) -> "BinStats":
-        """1-D view of metric ``j`` from a (..., n_metrics) tensor."""
-        if self.count.ndim == 1:
-            return self
-        return BinStats(count=self.count[..., j], sum=self.sum[..., j],
-                        sumsq=self.sumsq[..., j], min=self.min[..., j],
-                        max=self.max[..., j])
-
-    # -- derived statistics (paper reports min / max / std) -----------------
-    @property
-    def mean(self) -> np.ndarray:
-        c = np.maximum(self.count, 1.0)
-        return self.sum / c
-
-    @property
-    def var(self) -> np.ndarray:
-        c = np.maximum(self.count, 1.0)
-        v = self.sumsq / c - (self.sum / c) ** 2
-        return np.maximum(v, 0.0)
-
-    @property
-    def std(self) -> np.ndarray:
-        return np.sqrt(self.var)
-
-    def finite_min(self) -> np.ndarray:
-        return np.where(np.isfinite(self.min), self.min, 0.0)
-
-    def finite_max(self) -> np.ndarray:
-        return np.where(np.isfinite(self.max), self.max, 0.0)
 
 
 def bin_samples(timestamps: np.ndarray, values: np.ndarray,
@@ -157,75 +100,47 @@ def bin_samples(timestamps: np.ndarray, values: np.ndarray,
 def bin_samples_grouped(timestamps: np.ndarray, values: np.ndarray,
                         group_ids: np.ndarray, n_groups: int,
                         plan: ShardPlan) -> BinStats:
-    """Single-pass grouped multi-metric binning (numpy path).
+    """Single-pass grouped multi-metric moment binning (numpy path).
 
-    values   : (n_events, n_metrics) float64
-    group_ids: (n_events,) int in [0, n_groups)
-
-    Returns BinStats with (n_bins, n_groups, n_metrics) arrays. Each metric
-    column is accumulated with its own ``np.add.at`` over the same flat
-    (bin, group) index, so per-metric results are bit-identical to a
-    single-metric run over the same rows.
+    Kept as the public moments entry point; the generic per-reducer
+    accumulate lives on each reducer class (``bin_grouped``).
     """
-    n_bins = plan.n_shards
-    values = np.asarray(values, np.float64)
-    if values.ndim == 1:
-        values = values[:, None]
-    n_metrics = values.shape[1]
-    out = BinStats.zeros(n_bins, (n_groups, n_metrics))
-    if timestamps.size == 0:
-        return out
-    flat = plan.shard_of(timestamps) * n_groups + np.asarray(group_ids)
-    nbg = n_bins * n_groups
-    cnt = np.zeros(nbg)
-    np.add.at(cnt, flat, 1.0)
-    out.count[...] = np.broadcast_to(
-        cnt.reshape(n_bins, n_groups, 1), out.count.shape)
-    for j in range(n_metrics):
-        v = values[:, j]
-        s = np.zeros(nbg)
-        ss = np.zeros(nbg)
-        mn = np.full(nbg, np.inf)
-        mx = np.full(nbg, -np.inf)
-        np.add.at(s, flat, v)
-        np.add.at(ss, flat, v * v)
-        np.minimum.at(mn, flat, v)
-        np.maximum.at(mx, flat, v)
-        out.sum[:, :, j] = s.reshape(n_bins, n_groups)
-        out.sumsq[:, :, j] = ss.reshape(n_bins, n_groups)
-        out.min[:, :, j] = mn.reshape(n_bins, n_groups)
-        out.max[:, :, j] = mx.reshape(n_bins, n_groups)
-    return out
+    return BinStats.bin_grouped(timestamps, values, group_ids, n_groups,
+                                plan)
 
 
 @dataclasses.dataclass
 class GroupedPartial:
-    """One rank's pre-merge partial: group key -> (n_bins, n_metrics)
-    moments. Keys are discovered locally while streaming shards; ranks
-    agree on the global key -> index mapping only at densify time, so the
-    raw data is still read exactly once."""
+    """One rank's pre-merge partial: group key -> per-reducer
+    (n_bins, n_metrics) states. Keys are discovered locally while
+    streaming shards; ranks agree on the global key -> index mapping only
+    at densify time, so the raw data is still read exactly once."""
 
     n_bins: int
     n_metrics: int
-    groups: Dict[float, BinStats] = dataclasses.field(default_factory=dict)
+    reducers: Tuple[str, ...] = DEFAULT_REDUCERS
+    groups: Dict[float, Dict[str, Any]] = dataclasses.field(
+        default_factory=dict)
 
-    def add(self, key: float, stats: BinStats) -> None:
+    def add(self, key: float, states: Dict[str, Any]) -> None:
         prev = self.groups.get(key)
-        self.groups[key] = stats if prev is None else prev.merge(stats)
+        if prev is None:
+            self.groups[key] = dict(states)
+        else:
+            self.groups[key] = {name: prev[name].merge(st)
+                                for name, st in states.items()}
 
-    def densify(self, all_keys: Sequence[float]) -> BinStats:
-        """Expand into the dense (n_bins, n_groups, n_metrics) tensor under
-        a global key ordering; absent groups hold the merge identity."""
-        parts = []
-        empty = BinStats.zeros(self.n_bins, (self.n_metrics,))
-        for k in all_keys:
-            parts.append(self.groups.get(k, empty))
-        return BinStats(
-            count=np.stack([p.count for p in parts], axis=1),
-            sum=np.stack([p.sum for p in parts], axis=1),
-            sumsq=np.stack([p.sumsq for p in parts], axis=1),
-            min=np.stack([p.min for p in parts], axis=1),
-            max=np.stack([p.max for p in parts], axis=1))
+    def densify(self, all_keys: Sequence[float]) -> Dict[str, Any]:
+        """Expand into dense (n_bins, n_groups, n_metrics) tensors under a
+        global key ordering; absent groups hold the merge identity."""
+        out: Dict[str, Any] = {}
+        for name in self.reducers:
+            cls = get_reducer(name)
+            empty = cls.zeros(self.n_bins, (self.n_metrics,))
+            parts = [self.groups.get(k, {}).get(name, empty)
+                     for k in all_keys]
+            out[name] = cls.stack_groups(parts)
+        return out
 
 
 @dataclasses.dataclass
@@ -233,9 +148,9 @@ class AggregationResult:
     plan: ShardPlan
     metric: str                         # first metric (legacy accessor)
     stats: BinStats                     # 1-D group-merged view, metric 0
-    # Pre-merge partials for tests/plots. COLD RUNS ONLY: a summary-cache
-    # hit (from_cache=True) stores just the merged tensor, so this is empty
-    # there — pass use_cache=False when the partials matter.
+    # Pre-merge moment partials for tests/plots. COLD RUNS ONLY: a
+    # summary-cache hit (from_cache=True) stores just the merged tensors,
+    # so this is empty there — pass use_cache=False when they matter.
     per_rank_stats: List[BinStats]
     copy_kind_bytes: Dict[int, np.ndarray]   # per-bin bytes by memcpy kind
     seconds: float
@@ -245,27 +160,42 @@ class AggregationResult:
         default_factory=lambda: np.zeros(1))
     grouped: Optional[BinStats] = None  # (n_bins, n_groups, n_metrics)
     from_cache: bool = False
+    reducers: Tuple[str, ...] = DEFAULT_REDUCERS
+    # merged grouped state per reducer; reduced["moments"] is `grouped`
+    reduced: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def select(self, metric: Union[int, str] = 0,
                group: Optional[float] = None) -> BinStats:
         """1-D per-bin moments for one metric, optionally one group key."""
         if self.grouped is None:
             return self.stats
+        sel = self._select_state(self.grouped, metric, group)
+        return sel
+
+    def sketch(self, metric: Union[int, str] = 0,
+               group: Optional[float] = None) -> QuantileSketch:
+        """1-D per-bin quantile sketch for one metric / optional group.
+
+        Requires ``"quantile"`` in the reducer suite (pass
+        ``reducers=("moments", "quantile")`` to the aggregation)."""
+        sk = self.reduced.get("quantile")
+        if sk is None:
+            raise KeyError(
+                "no quantile sketch in this result — aggregate with "
+                "reducers=('moments', 'quantile')")
+        return self._select_state(sk, metric, group)
+
+    def _select_state(self, state, metric: Union[int, str],
+                      group: Optional[float]):
         j = (self.metrics.index(metric) if isinstance(metric, str)
              else int(metric))
         if group is None:
-            return self.grouped.merge_groups().select_metric(j)
+            return state.merge_groups().select_metric(j)
         keys = np.asarray(self.group_keys)
         hit = np.nonzero(keys == group)[0]
         if hit.size == 0:
             raise KeyError(f"group key {group!r} not in {keys.tolist()}")
-        gi = int(hit[0])
-        return BinStats(
-            count=self.grouped.count[:, gi, j],
-            sum=self.grouped.sum[:, gi, j],
-            sumsq=self.grouped.sumsq[:, gi, j],
-            min=self.grouped.min[:, gi, j],
-            max=self.grouped.max[:, gi, j])
+        return state.take_group(int(hit[0])).select_metric(j)
 
 
 def _shard_kind_bytes(cols: Dict[str, np.ndarray], plan: ShardPlan,
@@ -287,11 +217,14 @@ def _shard_kind_bytes(cols: Dict[str, np.ndarray], plan: ShardPlan,
 def load_rank_grouped(store: TraceStore, shard_ids: Sequence[int],
                       plan: ShardPlan, metrics: Sequence[str],
                       group_by: Optional[str] = None,
+                      reducers: Sequence[str] = DEFAULT_REDUCERS,
                       ) -> Tuple[GroupedPartial, Dict[int, np.ndarray]]:
     """One rank's aggregation work, generalized: load its N/P shard files
-    once, bin every metric and group in that single pass."""
+    once, accumulate every reducer, metric and group in that single pass."""
     metrics = list(metrics)
-    partial = GroupedPartial(n_bins=plan.n_shards, n_metrics=len(metrics))
+    suite = normalize_reducers(reducers)
+    partial = GroupedPartial(n_bins=plan.n_shards, n_metrics=len(metrics),
+                             reducers=suite)
     kind_bytes: Dict[int, np.ndarray] = {}
     for s in shard_ids:
         if not store.has_shard(int(s)):
@@ -315,12 +248,12 @@ def load_rank_grouped(store: TraceStore, shard_ids: Sequence[int],
         else:
             keys, gids = np.unique(np.asarray(cols[group_by], np.float64),
                                    return_inverse=True)
-        tensor = bin_samples_grouped(ts, vals, gids, len(keys), plan)
+        tensors = {name: get_reducer(name).bin_grouped(
+                       ts, vals, gids, len(keys), plan)
+                   for name in suite}
         for gi, key in enumerate(keys):
-            partial.add(float(key), BinStats(
-                count=tensor.count[:, gi], sum=tensor.sum[:, gi],
-                sumsq=tensor.sumsq[:, gi], min=tensor.min[:, gi],
-                max=tensor.max[:, gi]))
+            partial.add(float(key), {name: t.take_group(gi)
+                                     for name, t in tensors.items()})
         _shard_kind_bytes(cols, plan, kind_bytes)
     return partial, kind_bytes
 
@@ -339,11 +272,8 @@ def load_rank_partials(store: TraceStore, shard_ids: Sequence[int],
     if metrics is None and group_by is None:
         partial, kind_bytes = load_rank_grouped(
             store, shard_ids, plan, [metric], None)
-        dense = partial.densify([_NO_GROUP_KEY])
-        return BinStats(
-            count=dense.count[:, 0, 0], sum=dense.sum[:, 0, 0],
-            sumsq=dense.sumsq[:, 0, 0], min=dense.min[:, 0, 0],
-            max=dense.max[:, 0, 0]), kind_bytes
+        dense = partial.densify([_NO_GROUP_KEY])["moments"]
+        return dense.take_group(0).select_metric(0), kind_bytes
     return load_rank_grouped(store, shard_ids, plan,
                              metrics if metrics is not None else [metric],
                              group_by)
@@ -357,52 +287,57 @@ def union_group_keys(partials: Sequence[GroupedPartial]) -> List[float]:
     return sorted(keys) if keys else [_NO_GROUP_KEY]
 
 
-def round_robin_merge(partials: List[BinStats], n_bins: int,
-                      ) -> Tuple[BinStats, List[np.ndarray]]:
+def round_robin_merge(partials: List[Any], n_bins: int,
+                      ) -> Tuple[Any, List[np.ndarray]]:
     """The paper's collaborative round-robin statistic computation.
 
     Bin ownership is cyclic: rank r owns bins r, r+P, r+2P, ... Every rank
     merges ALL partials for ITS bins only (balanced, contention-free), then
     owned segments are concatenated back into the global result — the
-    MPI/file analogue of `psum_scatter` followed by `all_gather`. Works for
-    1-D partials and for (n_bins, n_groups, n_metrics) tensors alike.
+    MPI/file analogue of `psum_scatter` followed by `all_gather`. Generic
+    over any registered reducer state (all partials must share one type),
+    for 1-D and (n_bins, n_groups, n_metrics) tensors alike.
     """
     P = max(len(partials), 1)
     owned = cyclic_assignment(n_bins, P)
-    trailing = tuple(partials[0].count.shape[1:]) if partials else ()
-    merged = BinStats.zeros(n_bins, trailing)
+    cls = type(partials[0]) if partials else BinStats
+    trailing = partials[0].trailing if partials else ()
+    merged = cls.zeros(n_bins, trailing)
     for r in range(P):
         idx = owned[r]
         if idx.size == 0:
             continue
-        seg = BinStats.zeros(idx.size, trailing)
+        seg = cls.zeros(idx.size, trailing)
         for p in partials:
             seg = seg.merge(p.take_bins(idx))
-        merged.count[idx] = seg.count
-        merged.sum[idx] = seg.sum
-        merged.sumsq[idx] = seg.sumsq
-        merged.min[idx] = seg.min
-        merged.max[idx] = seg.max
+        merged.assign_bins(idx, seg)
     return merged, owned
 
 
 def lookup_summary(store: TraceStore, plan: ShardPlan,
                    metrics: Sequence[str], group_by: Optional[str],
                    t0: float, precision: str = "exact",
+                   reducers: Sequence[str] = DEFAULT_REDUCERS,
                    ) -> Tuple[str, Optional["AggregationResult"]]:
     """One cache probe shared by every aggregation driver: returns the
-    summary key for this (plan, metrics, group_by, precision, shard
-    fingerprint) and the decoded cached result on a hit (None on a miss)."""
+    summary key for this (plan, metrics, group_by, precision, reducer
+    suite, shard fingerprint) and the decoded cached result on a hit
+    (None on a miss). A payload whose embedded version differs from the
+    running SUMMARY_VERSION — e.g. a file written by an older engine —
+    is a miss, not a crash."""
+    suite = normalize_reducers(reducers)
     key = store.summary_key((plan.t_start, plan.t_end, plan.n_shards),
-                            metrics, group_by, precision=precision)
+                            metrics, group_by, precision=precision,
+                            reducers=suite)
     payload = store.read_summary(key)
-    if payload is not None:
+    if payload is not None and int(payload.get(
+            "version", np.asarray(-1))) == SUMMARY_VERSION:
         return key, result_from_summary(payload, time.perf_counter() - t0)
     return key, None
 
 
 def densify_partials(partials: Sequence[GroupedPartial],
-                     ) -> Tuple[List[float], List[BinStats]]:
+                     ) -> Tuple[List[float], List[Dict[str, Any]]]:
     """Global key union + per-rank dense tensors (the pre-merge step)."""
     all_keys = union_group_keys(partials)
     return all_keys, [p.densify(all_keys) for p in partials]
@@ -411,17 +346,23 @@ def densify_partials(partials: Sequence[GroupedPartial],
 def finalize_aggregation(store: TraceStore, plan: ShardPlan,
                          metrics: Sequence[str], group_by: Optional[str],
                          all_keys: Sequence[float],
-                         dense: List[BinStats],
+                         dense: List[Dict[str, Any]],
                          kind_parts: Sequence[Dict[int, np.ndarray]],
                          key: Optional[str], t0: float,
+                         reducers: Sequence[str] = DEFAULT_REDUCERS,
                          ) -> "AggregationResult":
     """Shared tail of every aggregation driver: round-robin merge the
-    dense per-rank tensors, fold the transfer-kind breakdown, build the
-    result, and (when ``key`` is set) persist the summary."""
-    merged, _ = round_robin_merge(dense, plan.n_shards)
+    dense per-rank tensors (per reducer), fold the transfer-kind
+    breakdown, build the result, and (when ``key`` is set) persist the
+    summary."""
+    suite = normalize_reducers(reducers)
+    merged = {name: round_robin_merge([d[name] for d in dense],
+                                      plan.n_shards)[0]
+              for name in suite}
     kind_bytes = merge_kind_parts(kind_parts)
-    result = build_result(plan, metrics, group_by, all_keys, merged, dense,
-                          kind_bytes, time.perf_counter() - t0)
+    result = build_result(plan, metrics, group_by, all_keys, merged,
+                          [d["moments"] for d in dense], kind_bytes,
+                          time.perf_counter() - t0)
     if key is not None:
         store.write_summary(key, summary_payload(
             plan, metrics, group_by, result.group_keys, merged,
@@ -433,11 +374,11 @@ def finalize_aggregation(store: TraceStore, plan: ShardPlan,
 
 def summary_payload(plan: ShardPlan, metrics: Sequence[str],
                     group_by: Optional[str], group_keys: np.ndarray,
-                    merged: BinStats,
+                    merged: Dict[str, Any],
                     kind_bytes: Dict[int, np.ndarray],
                     ) -> Dict[str, np.ndarray]:
     kinds = sorted(kind_bytes)
-    return {
+    payload = {
         "version": np.asarray(SUMMARY_VERSION, np.int64),
         "t_start": np.asarray(plan.t_start, np.int64),
         "t_end": np.asarray(plan.t_end, np.int64),
@@ -445,29 +386,35 @@ def summary_payload(plan: ShardPlan, metrics: Sequence[str],
         "metrics": np.asarray(list(metrics)),
         "group_by": np.asarray(group_by or ""),
         "group_keys": np.asarray(group_keys, np.float64),
-        **{f: getattr(merged, f) for f in STAT_FIELDS},
+        "reducers": np.asarray(list(merged)),
         "kind_keys": np.asarray(kinds, np.int64),
         "kind_bytes": (np.stack([kind_bytes[k] for k in kinds])
                        if kinds else np.zeros((0, plan.n_shards))),
     }
+    for state in merged.values():
+        payload.update(state.to_payload())
+    return payload
 
 
 def result_from_summary(payload: Dict[str, np.ndarray], seconds: float,
                         ) -> AggregationResult:
     plan = ShardPlan(int(payload["t_start"]), int(payload["t_end"]),
                      int(payload["n_shards"]))
-    merged = BinStats(**{f: payload[f] for f in STAT_FIELDS})
+    suite = tuple(str(r) for r in payload["reducers"])
+    merged = {name: get_reducer(name).from_payload(payload)
+              for name in suite}
     metrics = [str(m) for m in payload["metrics"]]
     group_by = str(payload["group_by"]) or None
     kind_bytes = {int(k): payload["kind_bytes"][i]
                   for i, k in enumerate(payload["kind_keys"])}
+    grouped = merged["moments"]
     return AggregationResult(
         plan=plan, metric=metrics[0],
-        stats=merged.merge_groups().select_metric(0),
+        stats=grouped.merge_groups().select_metric(0),
         per_rank_stats=[], copy_kind_bytes=kind_bytes, seconds=seconds,
         metrics=metrics, group_by=group_by,
-        group_keys=np.asarray(payload["group_keys"]), grouped=merged,
-        from_cache=True)
+        group_keys=np.asarray(payload["group_keys"]), grouped=grouped,
+        from_cache=True, reducers=suite, reduced=merged)
 
 
 def merge_kind_parts(kind_parts: Sequence[Dict[int, np.ndarray]],
@@ -481,16 +428,18 @@ def merge_kind_parts(kind_parts: Sequence[Dict[int, np.ndarray]],
 
 def build_result(plan: ShardPlan, metrics: Sequence[str],
                  group_by: Optional[str], group_keys: Sequence[float],
-                 merged: BinStats, per_rank: List[BinStats],
+                 merged: Dict[str, Any], per_rank: List[BinStats],
                  kind_bytes: Dict[int, np.ndarray], seconds: float,
                  ) -> AggregationResult:
     metrics = list(metrics)
+    grouped = merged["moments"]
     return AggregationResult(
         plan=plan, metric=metrics[0],
-        stats=merged.merge_groups().select_metric(0),
+        stats=grouped.merge_groups().select_metric(0),
         per_rank_stats=per_rank, copy_kind_bytes=kind_bytes,
         seconds=seconds, metrics=metrics, group_by=group_by,
-        group_keys=np.asarray(group_keys, np.float64), grouped=merged)
+        group_keys=np.asarray(group_keys, np.float64), grouped=grouped,
+        reducers=tuple(merged), reduced=merged)
 
 
 def run_aggregation(store: Union[str, TraceStore],
@@ -499,7 +448,9 @@ def run_aggregation(store: Union[str, TraceStore],
                     interval_ns: Optional[int] = None,
                     metrics: Optional[Sequence[str]] = None,
                     group_by: Optional[str] = None,
-                    use_cache: bool = True) -> AggregationResult:
+                    use_cache: bool = True,
+                    reducers: Sequence[str] = DEFAULT_REDUCERS,
+                    ) -> AggregationResult:
     """Full phase-2 driver (sequential rank loop; pipeline.py parallelizes).
 
     ``interval_ns`` may re-bin at a different granularity than generation —
@@ -508,8 +459,10 @@ def run_aggregation(store: Union[str, TraceStore],
 
     ``metrics`` (list) and ``group_by`` (a shard column such as ``k_name``,
     ``k_device`` or ``m_kind``) select the one-pass multi-metric grouped
-    tensor; the merged summary is cached in the store (``use_cache``) and
-    repeat queries never touch the raw shards.
+    tensors; ``reducers`` picks the statistic suite (``"moments"`` is
+    always included; add ``"quantile"`` for per-bin P50/P95/P99/IQR). The
+    merged suite is cached in the store (``use_cache``) and repeat queries
+    never touch the raw shards.
     """
     t0 = time.perf_counter()
     store = store if isinstance(store, TraceStore) else TraceStore(store)
@@ -523,10 +476,12 @@ def run_aggregation(store: Union[str, TraceStore],
     mlist = list(metrics) if metrics is not None else [metric]
     if not mlist:
         raise ValueError("metrics must name at least one shard column")
+    suite = normalize_reducers(reducers)
 
     key = None
     if use_cache:
-        key, cached = lookup_summary(store, plan, mlist, group_by, t0)
+        key, cached = lookup_summary(store, plan, mlist, group_by, t0,
+                                     reducers=suite)
         if cached is not None:
             return cached
 
@@ -534,10 +489,11 @@ def run_aggregation(store: Union[str, TraceStore],
     partials, kind_parts = [], []
     for r in range(P):
         part, kinds = load_rank_grouped(store, shard_sets[r], plan, mlist,
-                                        group_by)
+                                        group_by, reducers=suite)
         partials.append(part)
         kind_parts.append(kinds)
 
     all_keys, dense = densify_partials(partials)
     return finalize_aggregation(store, plan, mlist, group_by, all_keys,
-                                dense, kind_parts, key, t0)
+                                dense, kind_parts, key, t0,
+                                reducers=suite)

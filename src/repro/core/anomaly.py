@@ -6,16 +6,41 @@ Tukey upper fence  Q3 + k·IQR  (k = 1.5 by default).  The paper reports the
 top-5 anomalous shards; we rank flagged bins by their fence exceedance and
 return the top-k.  Also provides the Fig-1b selection: top q% of bins by
 variability (std).
+
+Scores come from the aggregation's reducer suite (see
+:mod:`repro.core.reducers`):
+
+  * moment scores  — ``"mean" | "std" | "max" | "sum"`` derive from the
+    :class:`BinStats` moment tensor (any suite);
+  * quantile scores — ``"p50" | "p95" | "p99"`` (any ``"pNN"``) and
+    ``"iqr"`` (within-bin Q3-Q1) derive from the
+    :class:`~repro.core.reducers.QuantileSketch` log-bucket histograms,
+    so they need ``"quantile"`` in the suite. Fencing on ``"p99"`` flags
+    bins whose duration *tail* blew up even when the bin mean stayed flat
+    — the paper's headline within-bin variability diagnostic.
+
+The detectors accept a 1-D per-bin state, the grouped tensor, or a whole
+:class:`~repro.core.aggregation.AggregationResult` (from which the right
+reducer state is picked automatically).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-from .aggregation import BinStats
+from .aggregation import AggregationResult, BinStats
+from .reducers import QuantileSketch
+
+_PCT_RE = re.compile(r"^p(\d{1,2}(?:\.\d+)?)$")
+
+
+def is_quantile_score(score: str) -> bool:
+    """True for scores answered by the quantile sketch ("pNN" / "iqr")."""
+    return score == "iqr" or _PCT_RE.match(score) is not None
 
 
 def quartiles(x: np.ndarray) -> Tuple[float, float, float]:
@@ -86,24 +111,70 @@ def _as_1d(stats: BinStats, metric_idx: int = 0) -> BinStats:
     return stats
 
 
-def anomalous_bins(stats: BinStats, k: float = 1.5, top_k: int = 5,
-                   boundaries: Optional[np.ndarray] = None,
-                   score: str = "mean", metric_idx: int = 0) -> IQRReport:
-    """Paper's detector: IQR over a per-bin summary of the stall metric.
+def _sketch_1d(sk: QuantileSketch, metric_idx: int = 0) -> QuantileSketch:
+    """Same collapse for the quantile sketch: group-merge + one metric."""
+    sk = sk.merge_groups()
+    if sk.counts.ndim == 3:
+        sk = sk.select_metric(metric_idx)
+    return sk
 
-    Accepts 1-D per-bin stats or the grouped multi-metric tensor
-    (``metric_idx`` selects which metric to fence)."""
+
+def score_values(stats, score: str = "mean",
+                 metric_idx: int = 0) -> np.ndarray:
+    """Per-bin score vector for any supported score name.
+
+    ``stats`` may be a :class:`BinStats` (1-D or grouped tensor), a
+    :class:`QuantileSketch`, or an :class:`AggregationResult` — the last
+    carries the whole reducer suite, so both score families work on it.
+    """
+    m = _PCT_RE.match(score)
+    if m or score == "iqr":
+        if isinstance(stats, AggregationResult):
+            sk = stats.reduced.get("quantile")
+            if sk is None:
+                raise ValueError(
+                    f"score {score!r} needs the quantile sketch — "
+                    "aggregate with reducers=('moments', 'quantile')")
+        elif isinstance(stats, QuantileSketch):
+            sk = stats
+        else:
+            raise ValueError(
+                f"score {score!r} needs a QuantileSketch or an "
+                "AggregationResult carrying one, got "
+                f"{type(stats).__name__}")
+        sk = _sketch_1d(sk, metric_idx)
+        return sk.iqr() if score == "iqr" else sk.quantile(
+            float(m.group(1)) / 100.0)
+
+    if isinstance(stats, AggregationResult):
+        stats = (stats.grouped if stats.grouped is not None
+                 else stats.stats)
+    if isinstance(stats, QuantileSketch):
+        raise ValueError(f"moment score {score!r} cannot be computed "
+                         "from a quantile sketch")
     stats = _as_1d(stats, metric_idx)
     if score == "mean":
-        s = stats.mean
-    elif score == "std":
-        s = stats.std
-    elif score == "max":
-        s = stats.finite_max()
-    elif score == "sum":
-        s = stats.sum
-    else:
-        raise ValueError(f"unknown score {score!r}")
+        return stats.mean
+    if score == "std":
+        return stats.std
+    if score == "max":
+        return stats.finite_max()
+    if score == "sum":
+        return stats.sum
+    raise ValueError(f"unknown score {score!r}")
+
+
+def anomalous_bins(stats, k: float = 1.5, top_k: int = 5,
+                   boundaries: Optional[np.ndarray] = None,
+                   score: str = "mean", metric_idx: int = 0) -> IQRReport:
+    """Paper's detector: IQR fences over a per-bin summary of the metric.
+
+    Accepts 1-D per-bin stats, the grouped multi-metric tensor, a
+    quantile sketch, or a whole AggregationResult (``metric_idx`` selects
+    which metric to fence). Quantile-family scores (``"p99"``, ``"iqr"``,
+    ...) fence on the within-bin duration distribution instead of the bin
+    mean — see :func:`score_values` for the full score list."""
+    s = score_values(stats, score, metric_idx)
     return iqr_detect(s, k=k, top_k=top_k, boundaries=boundaries)
 
 

@@ -15,12 +15,15 @@ statistics become mesh devices exchanging via ICI collectives:
     `pmax` (these are latency-bound; the heavy sum/sumsq take the scatter
     path).
 
-Two public entry points:
+Public entry points:
 
   * :func:`binstats_local` — pure-jnp per-device moments (also the oracle
     for the Pallas binstats kernel),
   * :func:`distributed_binstats` — full shard_map pipeline over a 1-D mesh
-    axis; exactly equal to the serial result (property-tested).
+    axis; exactly equal to the serial result (property-tested),
+  * :func:`distributed_histogram_grouped` — the quantile reducer's
+    log-bucket histogram counts; purely additive, so they ride the same
+    psum_scatter/all_gather round-robin path as count/sum/sumsq.
 """
 
 from __future__ import annotations
@@ -33,21 +36,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map as _shard_map
+from .reducers import N_BUCKETS, SUBDIV, V_FLOOR
+
 STATS = 5   # count, sum, sumsq, min, max
 
 _NEG_CAP = -3.4e38   # sentinel instead of inf: survives bf16/psum paths
 _POS_CAP = 3.4e38
-
-
-def _shard_map(f, mesh, in_specs, out_specs):
-    """jax.shard_map (>=0.6, check_vma) / experimental shard_map (older,
-    check_rep) compatibility — replication checking off in both."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, check_vma=False,
-                             in_specs=in_specs, out_specs=out_specs)
-    from jax.experimental.shard_map import shard_map as esm
-    return esm(f, mesh=mesh, check_rep=False,
-               in_specs=in_specs, out_specs=out_specs)
 
 
 def binstats_local(bin_ids: jnp.ndarray, values: jnp.ndarray,
@@ -115,39 +110,49 @@ def derive(stats: jnp.ndarray) -> dict:
     }
 
 
+def _collaborative_sum(vals: jnp.ndarray, axis: str, axis_size: int,
+                       dim: int) -> jnp.ndarray:
+    """Round-robin additive merge on-mesh along ``dim``.
+
+    `psum_scatter(tiled=True)` gives each device the reduced block of the
+    segments it owns (the paper's round-robin ownership); `all_gather`
+    rebuilds the full table on every device. On TPU this is strictly
+    cheaper than all-devices-all-segments `psum` for large tables: each
+    link carries 1/P of the table instead of all of it.
+
+    Pads ``dim`` to a multiple of the axis size for the scatter (the size
+    is passed in statically: jax.lax.axis_size is not available on every
+    supported jax version, and the pad must be static anyway)."""
+    n = vals.shape[dim]
+    pad = (-n) % axis_size
+    pad_width = [(0, 0)] * vals.ndim
+    pad_width[dim] = (0, pad)
+    padded = jnp.pad(vals, pad_width)
+    owned = jax.lax.psum_scatter(padded, axis, scatter_dimension=dim,
+                                 tiled=True)
+    gathered = jax.lax.all_gather(owned, axis, axis=dim, tiled=True)
+    return jax.lax.slice_in_dim(gathered, 0, n, axis=dim)
+
+
 def _collaborative_reduce(local: jnp.ndarray, axis: str,
                           axis_size: int) -> jnp.ndarray:
     """Round-robin collaborative merge on-mesh.
 
-    `psum_scatter(tiled=False)` gives each device the reduced block of bins
-    it owns (the paper's round-robin ownership); `all_gather` rebuilds the
-    full table on every device. min/max channels are made scatter-compatible
-    by negation tricks NOT being valid for min (it's not additive) — so they
-    take a `pmin`/`pmax` all-reduce instead.
+    The additive channels (count, sum, sumsq) ride
+    :func:`_collaborative_sum` along the bin axis. min/max channels are
+    made scatter-compatible by negation tricks NOT being valid for min
+    (it's not additive) — so they take a `pmin`/`pmax` all-reduce instead
+    (these are latency-bound; the heavy sums take the scatter path).
 
     ``local`` is (n_bins, 5) or, batched over a leading metric axis,
     (n_metrics, n_bins, 5); the scatter/gather always runs along the bin
     axis so all metrics ride one collective.
     """
-    sums = local[..., :3]           # count, sum, sumsq — additive
-    mn = local[..., 3]
-    mx = local[..., 4]
     bin_axis = local.ndim - 2
-    # pad bins to a multiple of the axis size for the scatter
-    # (the size is passed in statically: jax.lax.axis_size is not available
-    # on every supported jax version, and the pad must be static anyway)
-    P_sz = axis_size
-    n = sums.shape[bin_axis]
-    pad = (-n) % P_sz
-    pad_width = [(0, 0)] * sums.ndim
-    pad_width[bin_axis] = (0, pad)
-    sums_p = jnp.pad(sums, pad_width)
-    owned = jax.lax.psum_scatter(sums_p, axis, scatter_dimension=bin_axis,
-                                 tiled=True)
-    gathered = jax.lax.all_gather(owned, axis, axis=bin_axis, tiled=True)
-    sums_red = jax.lax.slice_in_dim(gathered, 0, n, axis=bin_axis)
-    mn_red = jax.lax.pmin(mn, axis)
-    mx_red = jax.lax.pmax(mx, axis)
+    sums_red = _collaborative_sum(local[..., :3], axis, axis_size,
+                                  bin_axis)
+    mn_red = jax.lax.pmin(local[..., 3], axis)
+    mx_red = jax.lax.pmax(local[..., 4], axis)
     return jnp.concatenate(
         [sums_red, mn_red[..., None], mx_red[..., None]], axis=-1)
 
@@ -209,6 +214,62 @@ def distributed_binstats_grouped(bin_ids: jnp.ndarray,
         valid = jnp.ones(flat.shape, dtype=bool)
     out = fn(flat, values, valid)
     return out.reshape(n_metrics, n_bins, n_groups, STATS)
+
+
+def bucketize(values: jnp.ndarray) -> jnp.ndarray:
+    """Quantile-sketch log2-bucket index, device-side (float32).
+
+    Same contract as :func:`repro.core.reducers.bucket_of`; float32 log2
+    may disagree with the float64 host path on exact bucket boundaries,
+    which is within the sketch's stated error bound (the host backends
+    stay bit-identical to each other — they share the float64 path).
+    """
+    v = jnp.maximum(values.astype(jnp.float32), jnp.float32(V_FLOOR))
+    idx = jnp.floor(jnp.log2(v) * SUBDIV).astype(jnp.int32)
+    return jnp.clip(idx, 0, N_BUCKETS - 1)
+
+
+def distributed_histogram_grouped(bin_ids: jnp.ndarray,
+                                  group_ids: jnp.ndarray,
+                                  values: jnp.ndarray, n_bins: int,
+                                  n_groups: int, mesh: Mesh,
+                                  axis: str = "data",
+                                  valid: Optional[jnp.ndarray] = None,
+                                  ) -> jnp.ndarray:
+    """One-pass multi-metric × group-by collaborative quantile-sketch
+    histogram (the ``"quantile"`` reducer's collective path).
+
+    bin_ids   : (N,) int32 precomputed time-bin ids (host int64 binning)
+    group_ids : (N,) int32 in [0, n_groups)
+    values    : (n_metrics, N) float32 — all metrics share bin/group ids
+
+    Each metric's (bin, group, bucket) triple is fused into one segment id
+    and the counts — additive, like count/sum/sumsq — ride the SAME
+    psum_scatter/all_gather round-robin path as the moments
+    (:func:`_collaborative_sum`). Returns replicated
+    (n_metrics, n_bins, n_groups, N_BUCKETS) counts.
+    """
+    n_metrics = values.shape[0]
+    n_seg = n_bins * n_groups * N_BUCKETS
+    flat_bg = bin_ids * n_groups + group_ids
+
+    def rank_fn(bg, vals, vld):
+        w = vld.astype(jnp.float32)
+
+        def one_metric(v):
+            seg = bg * N_BUCKETS + bucketize(v)
+            return jax.ops.segment_sum(w, seg, n_seg)
+
+        local = jax.vmap(one_metric)(vals)        # (M, n_seg)
+        return _collaborative_sum(local, axis, mesh.shape[axis], dim=1)
+
+    spec = P(axis)
+    fn = _shard_map(rank_fn, mesh,
+                    in_specs=(spec, P(None, axis), spec), out_specs=P())
+    if valid is None:
+        valid = jnp.ones(flat_bg.shape, dtype=bool)
+    out = fn(flat_bg, values, valid)
+    return out.reshape(n_metrics, n_bins, n_groups, N_BUCKETS)
 
 
 def distributed_binstats(rel_timestamps: jnp.ndarray, values: jnp.ndarray,

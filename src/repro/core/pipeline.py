@@ -10,9 +10,13 @@ Backends:
     as shard_map collectives (see :mod:`repro.core.distributed`).
 
 All three backends run the one-pass multi-metric × group-by engine: set
-``PipelineConfig.metrics`` / ``group_by`` and a single scan of the shard
-store yields the (n_bins, n_groups, n_metrics) moment tensor. Merged
-summaries are cached in the TraceStore (``summary_{key}.npz``); repeat
+``PipelineConfig.metrics`` / ``group_by`` / ``reducers`` and a single scan
+of the shard store yields a (n_bins, n_groups, n_metrics) tensor per
+reducer — moments always, plus the quantile sketch when requested (whose
+additive histogram counts ride the same psum collective on the jax
+backend). ``anomaly_score`` picks what the IQR fences run on: a moment
+score ("mean"/"std"/...) or a distribution score ("p99"/"iqr"/...).
+Merged suites are cached in the TraceStore (``summary_{key}.npz``); repeat
 aggregations over an unchanged store are answered without touching shards.
 
 The phases and their timings are reported separately (the paper's Fig 1c
@@ -31,8 +35,11 @@ import numpy as np
 
 from .aggregation import (AggregationResult, BinStats, densify_partials,
                           finalize_aggregation, load_rank_grouped,
-                          lookup_summary, DEFAULT_METRIC)
-from .anomaly import IQRReport, anomalous_bins, top_variability_bins
+                          lookup_summary, DEFAULT_METRIC,
+                          DEFAULT_REDUCERS)
+from .reducers import QuantileSketch, normalize_reducers
+from .anomaly import (IQRReport, anomalous_bins, is_quantile_score,
+                      top_variability_bins)
 from .generation import (GenerationConfig, GenerationReport, generate_rank,
                          global_time_range, run_generation)
 from .sharding import ShardPlan, assignment, owner_of_shards
@@ -52,14 +59,27 @@ class PipelineConfig:
     metric: str = DEFAULT_METRIC
     metrics: Optional[Sequence[str]] = None  # multi-metric single pass
     group_by: Optional[str] = None           # shard column, e.g. "k_device"
+    reducers: Sequence[str] = DEFAULT_REDUCERS  # statistic suite
     use_summary_cache: bool = True
     agg_interval_ns: Optional[int] = None  # None -> reuse generation bins
     iqr_k: float = 1.5
     top_k: int = 5
+    # per-bin score the IQR fences run on: "mean"/"std"/"max"/"sum"
+    # (moments) or "p50"/"p95"/"p99"/"iqr" (needs "quantile" in reducers)
+    anomaly_score: str = "mean"
 
     @property
     def metric_list(self) -> List[str]:
         return list(self.metrics) if self.metrics else [self.metric]
+
+    @property
+    def reducer_suite(self) -> tuple:
+        """Normalized suite; a quantile-family ``anomaly_score`` pulls the
+        "quantile" reducer in automatically so a self-inconsistent config
+        cannot burn a full generate+aggregate before failing in run()."""
+        extra = (("quantile",) if is_quantile_score(self.anomaly_score)
+                 else ())
+        return normalize_reducers(tuple(self.reducers) + extra)
 
 
 @dataclasses.dataclass
@@ -88,11 +108,11 @@ def _gen_worker(args) -> Dict[str, int]:
 
 
 def _agg_worker(args):
-    store_dir, shard_ids, plan_tuple, metrics, group_by = args
+    store_dir, shard_ids, plan_tuple, metrics, group_by, reducers = args
     plan = ShardPlan(*plan_tuple)
     store = TraceStore(store_dir)
     part, kinds = load_rank_grouped(store, shard_ids, plan, metrics,
-                                    group_by)
+                                    group_by, reducers=reducers)
     return part, {int(k): v for k, v in kinds.items()}
 
 
@@ -162,6 +182,7 @@ class VariabilityPipeline:
                 else ShardPlan.from_interval(man.t_start, man.t_end,
                                              cfg.agg_interval_ns))
         metrics = cfg.metric_list
+        suite = cfg.reducer_suite
 
         # jax results come from float32 collectives — keyed separately so
         # they are never served where exact float64 moments are expected.
@@ -170,7 +191,8 @@ class VariabilityPipeline:
         if cfg.use_summary_cache:
             key, cached = lookup_summary(store, plan, metrics,
                                          cfg.group_by, t0,
-                                         precision=precision)
+                                         precision=precision,
+                                         reducers=suite)
             if cached is not None:
                 return cached
 
@@ -178,37 +200,43 @@ class VariabilityPipeline:
 
         if cfg.backend == "jax":
             all_keys, dense, kind_parts = self._aggregate_jax(
-                store, shard_sets, plan, metrics)
+                store, shard_sets, plan, metrics, suite)
         else:
             if cfg.backend == "process":
                 jobs = [(store_dir, shard_sets[r].tolist(),
                          (plan.t_start, plan.t_end, plan.n_shards),
-                         metrics, cfg.group_by)
+                         metrics, cfg.group_by, suite)
                         for r in range(cfg.n_ranks)]
                 with mp.get_context(_MP_CONTEXT).Pool(
                         min(cfg.n_ranks, os.cpu_count() or 1)) as pool:
                     results = pool.map(_agg_worker, jobs)
             else:
                 results = [load_rank_grouped(
-                    store, shard_sets[r], plan, metrics, cfg.group_by)
+                    store, shard_sets[r], plan, metrics, cfg.group_by,
+                    reducers=suite)
                     for r in range(cfg.n_ranks)]
             partials = [p for p, _ in results]
             kind_parts = [k for _, k in results]
             all_keys, dense = densify_partials(partials)
 
         return finalize_aggregation(store, plan, metrics, cfg.group_by,
-                                    all_keys, dense, kind_parts, key, t0)
+                                    all_keys, dense, kind_parts, key, t0,
+                                    reducers=suite)
 
     def _aggregate_jax(self, store: TraceStore, shard_sets,
-                       plan: ShardPlan, metrics: List[str]):
+                       plan: ShardPlan, metrics: List[str],
+                       reducers: Sequence[str] = DEFAULT_REDUCERS):
         """jax backend: concat all rank events, shard over devices, use the
         collaborative collective reduction — all metrics and groups in one
-        fused segment reduction. Falls back to the device count available
+        fused segment reduction per reducer (moments ride the
+        psum_scatter/pmin/pmax path, quantile histogram counts the same
+        additive psum path). Falls back to the device count available
         (1 on this container, n on a pod)."""
         import jax
         import jax.numpy as jnp
         from jax.sharding import Mesh
-        from .distributed import distributed_binstats_grouped
+        from .distributed import (distributed_binstats_grouped,
+                                  distributed_histogram_grouped)
 
         from .aggregation import _shard_kind_bytes
 
@@ -256,28 +284,38 @@ class VariabilityPipeline:
         vals = np.concatenate([vals, np.zeros((M, pad))], axis=1)
 
         mesh = Mesh(np.asarray(dev), ("data",))
+        # one host->device upload serves every reducer's collective
+        jbins, jgids = jnp.asarray(bins), jnp.asarray(gids)
+        jvals, jvalid = jnp.asarray(vals, jnp.float32), jnp.asarray(valid)
         stats = np.asarray(distributed_binstats_grouped(
-            jnp.asarray(bins), jnp.asarray(gids),
-            jnp.asarray(vals, jnp.float32), plan.n_shards, n_groups, mesh,
-            valid=jnp.asarray(valid)))       # (M, n_bins, n_groups, 5)
+            jbins, jgids, jvals, plan.n_shards, n_groups, mesh,
+            valid=jvalid))                   # (M, n_bins, n_groups, 5)
         count = np.moveaxis(stats[..., 0], 0, -1).astype(np.float64)
-        part = BinStats(
+        states = {"moments": BinStats(
             count=count,
             sum=np.moveaxis(stats[..., 1], 0, -1).astype(np.float64),
             sumsq=np.moveaxis(stats[..., 2], 0, -1).astype(np.float64),
             min=np.where(count > 0,
                          np.moveaxis(stats[..., 3], 0, -1), np.inf),
             max=np.where(count > 0,
-                         np.moveaxis(stats[..., 4], 0, -1), -np.inf))
-        return [float(k) for k in keys], [part], kind_parts
+                         np.moveaxis(stats[..., 4], 0, -1), -np.inf))}
+        if "quantile" in reducers:
+            hist = np.asarray(distributed_histogram_grouped(
+                jbins, jgids, jvals, plan.n_shards, n_groups,
+                mesh, valid=jvalid))
+            # (M, n_bins, G, B) -> (n_bins, G, M, B); bucket axis last
+            states["quantile"] = QuantileSketch(
+                counts=np.moveaxis(hist, 0, 2).astype(np.float64))
+        return [float(k) for k in keys], [states], kind_parts
 
     # -- end to end ----------------------------------------------------------
     def run(self, db_paths: Sequence[str], work_dir: str) -> PipelineResult:
         gen = self.generate(db_paths, work_dir)
         agg = self.aggregate(work_dir)
         bounds = agg.plan.boundaries()
-        report = anomalous_bins(agg.stats, k=self.cfg.iqr_k,
-                                top_k=self.cfg.top_k, boundaries=bounds)
+        report = anomalous_bins(agg, k=self.cfg.iqr_k,
+                                top_k=self.cfg.top_k, boundaries=bounds,
+                                score=self.cfg.anomaly_score)
         topvar = top_variability_bins(agg.stats)
         return PipelineResult(
             generation=gen, aggregation=agg, anomalies=report,

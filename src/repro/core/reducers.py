@@ -1,0 +1,373 @@
+"""Pluggable mergeable-reducer suite for per-(bin, group, metric) stats.
+
+The aggregation engine (see :mod:`repro.core.aggregation`) streams shard
+files once and reduces each sample into per-time-bin statistics. This
+module defines WHAT is reduced: a registry of *mergeable reducers*, each a
+small dataclass of numpy arrays satisfying a common contract so every
+layer of the engine — per-rank accumulation, group densify, round-robin
+merge, the jax collective backend, the versioned summary cache — is
+generic over the statistic being computed:
+
+  zeros(n_bins, trailing)   merge identity, shape (n_bins, *trailing, ...)
+  bin_grouped(...)          accumulate raw samples (numpy reference path)
+  merge(other)              associative + commutative combine
+  take_bins(idx)            slice the bin axis (round-robin ownership)
+  take_group(gi)            slice one group off a dense tensor
+  stack_groups(parts)       densify: stack per-group states on axis 1
+  merge_groups()            reduce the group axis (== ungrouped statistic)
+  select_metric(j)          1-D view of one metric
+  to_payload()/from_payload()  flat dict of arrays for the summary cache
+
+Registered reducers:
+
+  ``"moments"``   :class:`BinStats` — count/sum/sumsq/min/max partial
+    moments (Chan et al. pairwise merge; EXACT across any partitioning).
+  ``"quantile"``  :class:`QuantileSketch` — fixed-width log2-bucket
+    histogram, mergeable by pure addition, answering P50/P95/P99 and
+    within-bin IQR with bounded relative error (:data:`QUANTILE_REL_ERR`).
+
+The merge for every reducer is associative and commutative elementwise
+array arithmetic, which is exactly the property the round-robin
+collaborative reduction, the process backend, and the jax ``psum``
+collective path all rely on (property-tested in tests/test_reducers.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Dict, List, Sequence, Tuple, Type
+
+import numpy as np
+
+# --- quantile sketch bucketization constants -------------------------------
+# Fixed log2 buckets: bucket(v) = clip(floor(log2(max(v, V_FLOOR)) *
+# SUBDIV), 0, N_BUCKETS-1). SUBDIV buckets per octave; N_BUCKETS covers
+# [V_FLOOR, V_FLOOR * 2^(N_BUCKETS/SUBDIV)) — 48 octaves ≈ [1ns, 78h] for
+# duration metrics. N_BUCKETS is a multiple of 128 so the histbin Pallas
+# kernel's bucket one-hot tile is lane-aligned.
+N_BUCKETS = 384
+SUBDIV = 8
+V_FLOOR = 1.0
+
+# In-range values are estimated by the geometric midpoint of their bucket,
+# so the worst-case relative error is 2^(1/(2*SUBDIV)) - 1 (~4.4%).
+QUANTILE_REL_ERR = float(2.0 ** (1.0 / (2 * SUBDIV)) - 1.0)
+
+# Representative (estimate) value per bucket: geometric bucket midpoint.
+BUCKET_VALUES = V_FLOOR * np.exp2((np.arange(N_BUCKETS) + 0.5) / SUBDIV)
+
+REDUCER_REGISTRY: Dict[str, Type["MergeableReducer"]] = {}
+
+
+def register_reducer(cls: Type["MergeableReducer"]):
+    """Class decorator: register ``cls`` under ``cls.name``."""
+    REDUCER_REGISTRY[cls.name] = cls
+    return cls
+
+
+def get_reducer(name: str) -> Type["MergeableReducer"]:
+    try:
+        return REDUCER_REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown reducer {name!r}; registered: "
+                       f"{sorted(REDUCER_REGISTRY)}") from None
+
+
+def normalize_reducers(reducers: Sequence[str]) -> Tuple[str, ...]:
+    """Validated, de-duplicated suite with ``"moments"`` always first.
+
+    Moments are mandatory: the legacy 1-D result view, the anomaly mean/
+    std scores and the Fig-1b byte breakdown all derive from them, and
+    they are cheap next to any additional reducer.
+    """
+    out: List[str] = ["moments"]
+    for name in reducers:
+        get_reducer(name)
+        if name not in out:
+            out.append(name)
+    return tuple(out)
+
+
+class MergeableReducer:
+    """Shared generic machinery; subclasses are dataclasses of ndarrays.
+
+    ``fields`` names the array attributes. Array layout contract: axis 0
+    is the time bin; a dense grouped tensor carries (group, metric) as
+    axes 1 and 2; a reducer may append private trailing axes after those
+    (the quantile sketch appends its bucket axis last).
+    """
+
+    name: ClassVar[str]
+    fields: ClassVar[Tuple[str, ...]]
+
+    def _map(self, fn, *others):
+        cls = type(self)
+        return cls(**{f: fn(getattr(self, f),
+                             *(getattr(o, f) for o in others))
+                      for f in self.fields})
+
+    @property
+    def n_bins(self) -> int:
+        return int(getattr(self, self.fields[0]).shape[0])
+
+    @property
+    def trailing(self) -> Tuple[int, ...]:
+        """Public trailing shape between the bin axis and any private
+        reducer axes — () for 1-D, (G, M) for a dense grouped tensor.
+        Subclasses with private trailing axes (bucket axis) override."""
+        return tuple(getattr(self, self.fields[0]).shape[1:])
+
+    def take_bins(self, idx: np.ndarray):
+        """Slice along the bin axis (keeps any trailing axes)."""
+        return self._map(lambda a: a[idx])
+
+    def take_group(self, gi: int):
+        """Slice group ``gi`` off a dense (n_bins, G, ...) tensor."""
+        return self._map(lambda a: a[:, gi])
+
+    @classmethod
+    def stack_groups(cls, parts: Sequence["MergeableReducer"]):
+        """Densify: stack per-group states into the (n_bins, G, ...)
+        tensor (inverse of :meth:`take_group`)."""
+        return cls(**{f: np.stack([getattr(p, f) for p in parts], axis=1)
+                      for f in cls.fields})
+
+    def assign_bins(self, idx: np.ndarray, seg: "MergeableReducer") -> None:
+        """Write ``seg`` into this state at bin rows ``idx`` (round-robin
+        merge writeback)."""
+        for f in self.fields:
+            getattr(self, f)[idx] = getattr(seg, f)
+
+    # -- summary-cache (de)serialization ------------------------------------
+    @classmethod
+    def payload_prefix(cls) -> str:
+        # moments keep their historical bare key names (count/sum/...)
+        return "" if cls.name == "moments" else f"{cls.name}__"
+
+    def to_payload(self) -> Dict[str, np.ndarray]:
+        p = self.payload_prefix()
+        return {p + f: getattr(self, f) for f in self.fields}
+
+    @classmethod
+    def from_payload(cls, payload: Dict[str, np.ndarray]):
+        p = cls.payload_prefix()
+        return cls(**{f: payload[p + f] for f in cls.fields})
+
+
+@register_reducer
+@dataclasses.dataclass
+class BinStats(MergeableReducer):
+    """Per-bin partial moments. Shapes all (n_bins,) in the single-metric
+    case, or (n_bins, n_groups, n_metrics) for the grouped tensor — every
+    operation below is elementwise over the trailing axes."""
+
+    count: np.ndarray     # float64
+    sum: np.ndarray       # float64
+    sumsq: np.ndarray     # float64
+    min: np.ndarray       # float64 (+inf where empty)
+    max: np.ndarray       # float64 (-inf where empty)
+
+    name: ClassVar[str] = "moments"
+    fields: ClassVar[Tuple[str, ...]] = ("count", "sum", "sumsq",
+                                         "min", "max")
+
+    @staticmethod
+    def zeros(n_bins: int, trailing: Tuple[int, ...] = ()) -> "BinStats":
+        shape = (n_bins, *trailing)
+        return BinStats(
+            count=np.zeros(shape), sum=np.zeros(shape),
+            sumsq=np.zeros(shape),
+            min=np.full(shape, np.inf), max=np.full(shape, -np.inf))
+
+    def merge(self, other: "BinStats") -> "BinStats":
+        """Associative, commutative merge — the collaborative-reduce op."""
+        return BinStats(
+            count=self.count + other.count,
+            sum=self.sum + other.sum,
+            sumsq=self.sumsq + other.sumsq,
+            min=np.minimum(self.min, other.min),
+            max=np.maximum(self.max, other.max))
+
+    def merge_groups(self) -> "BinStats":
+        """Reduce the group axis of a (n_bins, G, M) tensor — every sample
+        belongs to exactly one group, so this IS the ungrouped statistic."""
+        if self.count.ndim < 3:
+            return self
+        return BinStats(
+            count=self.count.sum(axis=1), sum=self.sum.sum(axis=1),
+            sumsq=self.sumsq.sum(axis=1),
+            min=self.min.min(axis=1), max=self.max.max(axis=1))
+
+    def select_metric(self, j: int) -> "BinStats":
+        """1-D view of metric ``j`` from a (..., n_metrics) tensor."""
+        if self.count.ndim == 1:
+            return self
+        return self._map(lambda a: a[..., j])
+
+    @classmethod
+    def bin_grouped(cls, timestamps: np.ndarray, values: np.ndarray,
+                    group_ids: np.ndarray, n_groups: int,
+                    plan) -> "BinStats":
+        """Single-pass grouped multi-metric moment accumulation (numpy).
+
+        values   : (n_events, n_metrics) float64
+        group_ids: (n_events,) int in [0, n_groups)
+
+        Each metric column is accumulated with its own ``np.add.at`` over
+        the same flat (bin, group) index, so per-metric results are
+        bit-identical to a single-metric run over the same rows.
+        """
+        n_bins = plan.n_shards
+        values = np.asarray(values, np.float64)
+        if values.ndim == 1:
+            values = values[:, None]
+        n_metrics = values.shape[1]
+        out = cls.zeros(n_bins, (n_groups, n_metrics))
+        if np.asarray(timestamps).size == 0:
+            return out
+        flat = plan.shard_of(timestamps) * n_groups + np.asarray(group_ids)
+        nbg = n_bins * n_groups
+        cnt = np.zeros(nbg)
+        np.add.at(cnt, flat, 1.0)
+        out.count[...] = np.broadcast_to(
+            cnt.reshape(n_bins, n_groups, 1), out.count.shape)
+        for j in range(n_metrics):
+            v = values[:, j]
+            s = np.zeros(nbg)
+            ss = np.zeros(nbg)
+            mn = np.full(nbg, np.inf)
+            mx = np.full(nbg, -np.inf)
+            np.add.at(s, flat, v)
+            np.add.at(ss, flat, v * v)
+            np.minimum.at(mn, flat, v)
+            np.maximum.at(mx, flat, v)
+            out.sum[:, :, j] = s.reshape(n_bins, n_groups)
+            out.sumsq[:, :, j] = ss.reshape(n_bins, n_groups)
+            out.min[:, :, j] = mn.reshape(n_bins, n_groups)
+            out.max[:, :, j] = mx.reshape(n_bins, n_groups)
+        return out
+
+    # -- derived statistics (paper reports min / max / std) -----------------
+    @property
+    def mean(self) -> np.ndarray:
+        c = np.maximum(self.count, 1.0)
+        return self.sum / c
+
+    @property
+    def var(self) -> np.ndarray:
+        c = np.maximum(self.count, 1.0)
+        v = self.sumsq / c - (self.sum / c) ** 2
+        return np.maximum(v, 0.0)
+
+    @property
+    def std(self) -> np.ndarray:
+        return np.sqrt(self.var)
+
+    def finite_min(self) -> np.ndarray:
+        return np.where(np.isfinite(self.min), self.min, 0.0)
+
+    def finite_max(self) -> np.ndarray:
+        return np.where(np.isfinite(self.max), self.max, 0.0)
+
+
+def bucket_of(values: np.ndarray) -> np.ndarray:
+    """Quantile-sketch bucket index per value (numpy float64 host path).
+
+    Non-positive / sub-floor values land in the underflow bucket 0; values
+    beyond the covered range clip into the top bucket — both keep counts
+    conserved, at the cost of the error bound for those samples.
+    """
+    v = np.maximum(np.asarray(values, np.float64), V_FLOOR)
+    idx = np.floor(np.log2(v) * SUBDIV).astype(np.int64)
+    return np.clip(idx, 0, N_BUCKETS - 1)
+
+
+@register_reducer
+@dataclasses.dataclass
+class QuantileSketch(MergeableReducer):
+    """Fixed-width log2-bucket histogram sketch of per-bin distributions.
+
+    ``counts`` is (n_bins, N_BUCKETS) in the 1-D case or
+    (n_bins, n_groups, n_metrics, N_BUCKETS) for the grouped tensor — the
+    bucket axis is always LAST. Merging is pure elementwise addition,
+    which makes the sketch exact under any partitioning/merge order (the
+    process backend is bit-identical to serial) and lets the jax backend
+    reduce it with the same ``psum`` collective as the additive moments.
+
+    Quantile answers carry bounded relative error
+    :data:`QUANTILE_REL_ERR` for values within the covered range (the
+    type-1 / inverted-CDF order statistic is located exactly; only the
+    within-bucket position is approximated by the geometric midpoint).
+    """
+
+    counts: np.ndarray    # float64, bucket axis last
+
+    name: ClassVar[str] = "quantile"
+    fields: ClassVar[Tuple[str, ...]] = ("counts",)
+
+    @staticmethod
+    def zeros(n_bins: int,
+              trailing: Tuple[int, ...] = ()) -> "QuantileSketch":
+        return QuantileSketch(
+            counts=np.zeros((n_bins, *trailing, N_BUCKETS)))
+
+    @property
+    def trailing(self) -> Tuple[int, ...]:
+        return tuple(self.counts.shape[1:-1])   # bucket axis is private
+
+    def merge(self, other: "QuantileSketch") -> "QuantileSketch":
+        return QuantileSketch(counts=self.counts + other.counts)
+
+    def merge_groups(self) -> "QuantileSketch":
+        if self.counts.ndim < 4:
+            return self
+        return QuantileSketch(counts=self.counts.sum(axis=1))
+
+    def select_metric(self, j: int) -> "QuantileSketch":
+        if self.counts.ndim == 2:
+            return self
+        return QuantileSketch(counts=self.counts[..., j, :])
+
+    @classmethod
+    def bin_grouped(cls, timestamps: np.ndarray, values: np.ndarray,
+                    group_ids: np.ndarray, n_groups: int,
+                    plan) -> "QuantileSketch":
+        """Single-pass grouped multi-metric histogram accumulation."""
+        n_bins = plan.n_shards
+        values = np.asarray(values, np.float64)
+        if values.ndim == 1:
+            values = values[:, None]
+        n_metrics = values.shape[1]
+        out = cls.zeros(n_bins, (n_groups, n_metrics))
+        if np.asarray(timestamps).size == 0:
+            return out
+        bg = plan.shard_of(timestamps) * n_groups + np.asarray(group_ids)
+        size = n_bins * n_groups * N_BUCKETS
+        for j in range(n_metrics):
+            flat = bg * N_BUCKETS + bucket_of(values[:, j])
+            c = np.zeros(size)
+            np.add.at(c, flat, 1.0)
+            out.counts[:, :, j, :] = c.reshape(n_bins, n_groups,
+                                               N_BUCKETS)
+        return out
+
+    # -- queries ------------------------------------------------------------
+    def total(self) -> np.ndarray:
+        """Per-bin sample count (leading shape of ``counts``)."""
+        return self.counts.sum(axis=-1)
+
+    def quantile(self, q: float) -> np.ndarray:
+        """Per-bin q-quantile estimate; 0.0 for empty bins.
+
+        Locates the type-1 (inverted-CDF) order statistic in the bucket
+        cumsum, then estimates it by the bucket's geometric midpoint."""
+        c = self.counts
+        n = c.sum(axis=-1)
+        rank = np.maximum(np.ceil(q * n), 1.0)
+        cdf = np.cumsum(c, axis=-1)
+        idx = np.argmax(cdf >= rank[..., None], axis=-1)
+        return np.where(n > 0, BUCKET_VALUES[idx], 0.0)
+
+    def iqr(self) -> np.ndarray:
+        """Per-bin within-bin interquartile range (Q3 - Q1) estimate."""
+        return np.maximum(self.quantile(0.75) - self.quantile(0.25), 0.0)

@@ -18,22 +18,31 @@ Aggregation results are memoized as ``summary_{key}.npz`` files next to the
 shards. The 16-hex ``key`` is a sha256 over a canonical JSON blob of
 
   (SUMMARY_VERSION, (t_start, t_end, n_shards), metrics, group_by,
-   precision, shard fingerprint)
+   precision, reducer suite, shard fingerprint)
 
 where the fingerprint is the sorted list of ``(shard_idx, size, mtime_ns)``
 stat triples — so rewriting ANY shard (or re-binning, or asking for a
-different metric set / group column) changes the key and the stale summary
-is simply never read again. The payload is a flat dict of numpy arrays:
+different metric set / group column / reducer suite) changes the key and
+the stale summary is simply never read again. The payload is a flat dict
+of numpy arrays:
 
   ``version``                     scalar int — SUMMARY_VERSION at write time
   ``t_start, t_end, n_shards``    scalar int64 — the plan the moments use
   ``metrics``                     (M,) unicode — metric column names
   ``group_by``                    scalar unicode ("" = no grouping)
   ``group_keys``                  (G,) float64 — group column values
-  ``count,sum,sumsq,min,max``     (n_bins, G, M) float64 — the moment tensor
+  ``reducers``                    (R,) unicode — reducer suite in order
+  ``count,sum,sumsq,min,max``     (n_bins, G, M) float64 — moments tensor
+  ``quantile__counts``            (n_bins, G, M, B) float64 — log-bucket
+                                  histogram (only when "quantile" is in
+                                  the suite; each extra reducer writes its
+                                  arrays under a ``{name}__`` prefix)
   ``kind_keys``                   (K,) int64 — memcpy copyKind codes
   ``kind_bytes``                  (K, n_bins) float64 — per-kind byte bins
 
+A payload whose embedded ``version`` differs from the running
+SUMMARY_VERSION (a file written by an older engine) is treated as a cache
+miss by :func:`repro.core.aggregation.lookup_summary` — never a crash.
 Summaries are O(n_bins) — repeat queries are answered without touching the
 raw shards (see :func:`repro.core.aggregation.run_aggregation`).
 """
@@ -50,7 +59,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 # Bump when the summary payload layout changes; old caches then miss.
-SUMMARY_VERSION = 1
+# v2: pluggable reducer suite — "reducers" array + per-reducer prefixed
+#     payload arrays joined the v1 moment tensor.
+SUMMARY_VERSION = 2
 
 
 def shard_filename(idx: int) -> str:
@@ -138,19 +149,23 @@ class TraceStore:
 
     def summary_key(self, plan_key: Sequence[int], metrics: Sequence[str],
                     group_by: Optional[str],
-                    precision: str = "exact") -> str:
-        """Cache key over (plan, metrics, group_by, precision, shard
-        fingerprint). ``precision`` keeps numerically distinct producers
-        apart: the float64 host paths (serial/process — bit-identical to
-        each other) share ``"exact"`` entries, while the jax backend's
-        float32 collective results are keyed ``"float32"`` so they are
-        never served to a caller expecting exact moments."""
+                    precision: str = "exact",
+                    reducers: Sequence[str] = ("moments",)) -> str:
+        """Cache key over (plan, metrics, group_by, precision, reducer
+        suite, shard fingerprint). ``precision`` keeps numerically
+        distinct producers apart: the float64 host paths (serial/process —
+        bit-identical to each other) share ``"exact"`` entries, while the
+        jax backend's float32 collective results are keyed ``"float32"``
+        so they are never served to a caller expecting exact moments.
+        ``reducers`` is part of the key so a moments-only summary is never
+        served to a caller that also needs the quantile sketch."""
         blob = json.dumps({
             "version": SUMMARY_VERSION,
             "plan": [int(x) for x in plan_key],
             "metrics": list(metrics),
             "group_by": group_by,
             "precision": precision,
+            "reducers": list(reducers),
             "shards": self.shard_fingerprint(),
         }, sort_keys=True)
         return hashlib.sha256(blob.encode()).hexdigest()[:16]

@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the analyzer's compute hot spots (DESIGN.md §5).
 
   binstats  fused timestamp-binning + per-bin moments (scatter-as-matmul)
+  histbin   fused binning + log-bucket quantile-sketch histogram (double
+            one-hot scatter-as-matmul; feeds reducers.QuantileSketch)
   iqr       in-VMEM bitonic sort + quantiles + Tukey fences
   rolling   rolling mean/std with overlapped block views
 
@@ -9,6 +11,7 @@ with use_kernel/interpret switches) and ref.py (pure-jnp oracle). Validated
 in interpret mode on CPU; compiled path targets TPU VMEM/MXU.
 """
 from .binstats import binstats, binstats_ref
+from .histbin import histbin, histbin_ref
 from .iqr import iqr_fences, iqr_ref
 from .rolling import rolling_stats, rolling_ref
 from .ssd import ssd_fused, ssd_ref

@@ -16,17 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..padding import pad_events
 from .kernel import (DEFAULT_BIN_TILE, DEFAULT_EV_TILE, binstats_pallas)
 from .ref import binstats_ref
-
-
-def _pad_events(x: jnp.ndarray, mult: int, fill=0):
-    """Pad the trailing (event) axis to a multiple of ``mult``."""
-    pad = (-x.shape[-1]) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
-    return jnp.pad(x, widths, constant_values=fill)
 
 
 @functools.partial(
@@ -45,9 +37,9 @@ def binstats(rel_ts: jnp.ndarray, values: jnp.ndarray,
     """
     squeeze = values.ndim == 1
     vals = values[None, :] if squeeze else values
-    rel_ts = _pad_events(rel_ts.astype(jnp.float32), ev_tile)
-    vals = _pad_events(vals.astype(jnp.float32), ev_tile)
-    valid = _pad_events(valid.astype(bool), ev_tile, fill=False)
+    rel_ts = pad_events(rel_ts.astype(jnp.float32), ev_tile)
+    vals = pad_events(vals.astype(jnp.float32), ev_tile)
+    valid = pad_events(valid.astype(bool), ev_tile, fill=False)
 
     if use_kernel:
         n_bins_p = int(np.ceil(n_bins / bin_tile) * bin_tile)

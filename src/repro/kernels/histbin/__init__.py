@@ -1,0 +1,4 @@
+from .ops import histbin
+from .ref import histbin_ref
+
+__all__ = ["histbin", "histbin_ref"]

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: fused timestamp-binning + per-bin log-bucket
+histogram (the ``"quantile"`` reducer's accumulate, see
+:mod:`repro.core.reducers`).
+
+The aggregation hot loop for the quantile sketch is, per rank:
+
+    for each sample (t, v):
+        bin    = floor((t - t0)/interval)
+        bucket = clip(floor(log2(max(v, 1)) * SUBDIV), 0, B-1)
+        counts[bin, bucket] += 1
+
+Like `binstats`, the TPU-native rethink is **scatter-as-matmul on the
+MXU** — but here BOTH indices are data-dependent, so the kernel builds two
+one-hot operands and contracts them over the event axis:
+
+  * grid = (bin_tiles, event_tiles); the event axis is the INNER,
+    sequential dimension, so each bin tile's (M, T_BIN, B) count
+    accumulator stays resident in VMEM across all event tiles;
+  * per (bin_tile, event_tile): one-hot(local_bin) is (T_EV, T_BIN) fp32
+    (masked by ``valid``) and one-hot(bucket) is (M, T_EV, B) fp32;
+    ``bucket_onehot^T_ev @ bin_onehot`` is one MXU contraction per metric
+    yielding the whole tile's counts — no atomics, no scatter.
+
+The bin one-hot is metric-independent and built ONCE per grid cell; the
+bucket one-hot is per metric because the bucket depends on the value.
+Bucketization is fused in-register: ``log2`` on the VPU, then the same
+clip contract as the numpy/jnp paths (float32 log2 may disagree with the
+host float64 path on exact bucket edges — within the sketch error bound).
+
+Block shapes: T_EV=1024 events x T_BIN=128 bins; with B=384 buckets the
+bucket one-hot tile is (M, 1024, 384) fp32 = 1.5 MB/metric and the count
+accumulator (M, 128, 384) = 192 KB/metric — VMEM-resident for the small
+metric batches the analyzer uses, and both matmul dims are 128-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.reducers import N_BUCKETS, SUBDIV, V_FLOOR
+
+DEFAULT_EV_TILE = 1024
+DEFAULT_BIN_TILE = 128
+
+
+def _histbin_kernel(ts_ref, val_ref, valid_ref, out_ref, *,
+                    inv_width: float, n_bins: int, bin_tile: int,
+                    n_buckets: int):
+    """One (bin_tile, event_tile) grid cell, all metrics at once."""
+    e = pl.program_id(1)
+    b = pl.program_id(0)
+
+    ts = ts_ref[...]                      # (T_EV,) f32 relative ns
+    v = val_ref[...].astype(jnp.float32)  # (M, T_EV)
+    valid = valid_ref[...]                # (T_EV,) bool
+    n_metrics, t_ev = v.shape
+
+    bins = jnp.clip((ts * inv_width).astype(jnp.int32), 0, n_bins - 1)
+    local = bins - b * bin_tile           # bin id within this tile
+    lane = jax.lax.broadcasted_iota(jnp.int32, (t_ev, bin_tile), 1)
+    onehot_bin = ((local[:, None] == lane)
+                  & valid[:, None]).astype(jnp.float32)  # (T_EV, T_BIN)
+
+    vc = jnp.maximum(v, jnp.float32(V_FLOOR))
+    buckets = jnp.clip(
+        jnp.floor(jnp.log2(vc) * SUBDIV).astype(jnp.int32),
+        0, n_buckets - 1)                                # (M, T_EV)
+    blane = jax.lax.broadcasted_iota(
+        jnp.int32, (n_metrics, t_ev, n_buckets), 2)
+    onehot_bk = (buckets[:, :, None] == blane).astype(jnp.float32)
+
+    # MXU: per metric, (B, T_EV) @ (T_EV, T_BIN) — scatter-as-matmul on
+    # both data-dependent axes; the valid mask rides the bin one-hot.
+    tile = jax.lax.dot_general(
+        onehot_bk, onehot_bin, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (M, B, T_BIN)
+    tile = jnp.swapaxes(tile, 1, 2)                      # (M, T_BIN, B)
+
+    @pl.when(e == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(
+            (n_metrics, bin_tile, n_buckets), jnp.float32)
+
+    out_ref[...] += tile
+
+
+def histbin_pallas(rel_ts: jnp.ndarray, values: jnp.ndarray,
+                   valid: jnp.ndarray, *, total_ns: float, n_bins: int,
+                   n_bins_padded: int, n_buckets: int = N_BUCKETS,
+                   ev_tile: int = DEFAULT_EV_TILE,
+                   bin_tile: int = DEFAULT_BIN_TILE,
+                   interpret: bool = True) -> jnp.ndarray:
+    """(M, N) events -> (M, n_bins_padded, n_buckets) histogram counts.
+
+    ``n_bins`` is the LOGICAL bin count (defines the bin width and the
+    clip range); ``n_bins_padded`` only rounds the output allocation up to
+    the bin tile. Inputs must be pre-padded: N % ev_tile == 0 (ops.py
+    pads)."""
+    n_metrics, n = values.shape
+    assert rel_ts.shape[0] == n and valid.shape[0] == n
+    assert n % ev_tile == 0 and n_bins_padded % bin_tile == 0
+    assert n_bins_padded >= n_bins
+    grid = (n_bins_padded // bin_tile, n // ev_tile)
+    inv_width = float(n_bins / total_ns)
+
+    kern = functools.partial(_histbin_kernel, inv_width=inv_width,
+                             n_bins=n_bins, bin_tile=bin_tile,
+                             n_buckets=n_buckets)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ev_tile,), lambda b, e: (e,)),
+            pl.BlockSpec((n_metrics, ev_tile), lambda b, e: (0, e)),
+            pl.BlockSpec((ev_tile,), lambda b, e: (e,)),
+        ],
+        out_specs=pl.BlockSpec((n_metrics, bin_tile, n_buckets),
+                               lambda b, e: (0, b, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n_metrics, n_bins_padded, n_buckets), jnp.float32),
+        interpret=interpret,
+    )(rel_ts, values, valid)

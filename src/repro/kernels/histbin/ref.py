@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the histbin kernel (same contract, no Pallas)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reducers import N_BUCKETS, SUBDIV, V_FLOOR
+
+
+def _histbin_ref_1d(rel_ts: jnp.ndarray, values: jnp.ndarray,
+                    valid: jnp.ndarray, *, total_ns: float, n_bins: int,
+                    n_buckets: int) -> jnp.ndarray:
+    inv_width = jnp.float32(n_bins / total_ns)
+    v = values.astype(jnp.float32)
+    bins = jnp.clip((rel_ts * inv_width).astype(jnp.int32), 0, n_bins - 1)
+    buckets = jnp.clip(
+        jnp.floor(jnp.log2(jnp.maximum(v, jnp.float32(V_FLOOR)))
+                  * SUBDIV).astype(jnp.int32),
+        0, n_buckets - 1)
+    seg = bins * n_buckets + buckets
+    counts = jax.ops.segment_sum(valid.astype(jnp.float32), seg,
+                                 n_bins * n_buckets)
+    return counts.reshape(n_bins, n_buckets)
+
+
+def histbin_ref(rel_ts: jnp.ndarray, values: jnp.ndarray,
+                valid: jnp.ndarray, *, total_ns: float, n_bins: int,
+                n_buckets: int = N_BUCKETS) -> jnp.ndarray:
+    """(M, N) events -> (M, n_bins, n_buckets) histogram counts.
+
+    Bin/bucket contract identical to the kernel: float32 relative
+    timestamps, bin = clip(floor(ts * n_bins/total), 0, n_bins-1),
+    bucket = clip(floor(log2(max(v, V_FLOOR)) * SUBDIV), 0, B-1); invalid
+    rows are weightless; all metric rows share one timestamp/valid
+    vector. A 1-D ``values`` input yields a (n_bins, n_buckets) table.
+    """
+    if values.ndim == 1:
+        return _histbin_ref_1d(rel_ts, values, valid, total_ns=total_ns,
+                               n_bins=n_bins, n_buckets=n_buckets)
+    return jax.vmap(
+        lambda v: _histbin_ref_1d(rel_ts, v, valid, total_ns=total_ns,
+                                  n_bins=n_bins, n_buckets=n_buckets)
+    )(values)

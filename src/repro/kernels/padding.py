@@ -1,0 +1,14 @@
+"""Shared event-padding helper for the binning kernels' ops wrappers."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pad_events(x: jnp.ndarray, mult: int, fill=0) -> jnp.ndarray:
+    """Pad the trailing (event) axis to a multiple of ``mult``."""
+    pad = (-x.shape[-1]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths, constant_values=fill)

@@ -28,6 +28,8 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from ..compat import shard_map
 import numpy as np
 
 from .layers import dense_init
@@ -255,8 +257,8 @@ def moe_forward(params, x, cfg: MoEConfig,
                 o, a, dr = _moe_ep_body(p, tk.reshape(-1, d), cfg=cfg,
                                         tensor_axis=ax, tp=tp)
                 return finalize(o, tk, a, dr)
-            fn = jax.shard_map(
-                ep, mesh=mesh, check_vma=False,
+            fn = shard_map(
+                ep, mesh=mesh,
                 in_specs=(pspec, P(ctx.batch, ax, None)),
                 out_specs=(P(ctx.batch, ax, None), P(), P()))
             out, aux, dropped = fn(in_params, x)
@@ -279,8 +281,8 @@ def moe_forward(params, x, cfg: MoEConfig,
                     p, tk.reshape(-1, d), cfg=cfg, all_axes=all_axes,
                     tensor_axis=ax, tp=tp)
                 return o.reshape(tk.shape), a, dr
-            fn = jax.shard_map(
-                sta, mesh=mesh, check_vma=False,
+            fn = shard_map(
+                sta, mesh=mesh,
                 in_specs=(pspec_inf, P(None, None, None)),
                 out_specs=(P(None, None, None), P(), P()))
             out, aux, dropped = fn(in_params, x)
@@ -291,8 +293,8 @@ def moe_forward(params, x, cfg: MoEConfig,
                                                 cfg=cfg, tensor_axis=ax,
                                                 tp=tp)
                 return finalize(o, tk, a, dr)
-            fn = jax.shard_map(
-                rep, mesh=mesh, check_vma=False,
+            fn = shard_map(
+                rep, mesh=mesh,
                 in_specs=(pspec, P(ctx.batch, None, None)),
                 out_specs=(P(ctx.batch, None, None), P(), P()))
             out, aux, dropped = fn(in_params, x)

@@ -27,6 +27,8 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from ..compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from .attention import AttnConfig, chunked_attention
@@ -68,8 +70,8 @@ def ffn_tp(params: Dict, x: jnp.ndarray, activation: str,
     if gated:
         pspec["w_gate"] = P(None, ax)
     bs = _bspec(ctx, x.shape[0], 3)
-    fn = jax.shard_map(body, mesh=ctx.mesh, check_vma=False,
-                       in_specs=(pspec, bs), out_specs=bs)
+    fn = shard_map(body, mesh=ctx.mesh,
+                   in_specs=(pspec, bs), out_specs=bs)
     return fn({k: params[k] for k in pspec}, x)
 
 
@@ -129,8 +131,8 @@ def attn_tp(params: Dict, x: jnp.ndarray, cfg: AttnConfig, positions,
         in_p.update({k: params[k] for k in ("bq", "bk", "bv")})
     bs3 = _bspec(ctx, x.shape[0], 3)
     bs4 = _bspec(ctx, x.shape[0], 4)
-    fn = jax.shard_map(
-        body, mesh=ctx.mesh, check_vma=False,
+    fn = shard_map(
+        body, mesh=ctx.mesh,
         in_specs=(pspec, bs3, P()),
         out_specs=(bs3, bs4, bs4))
     y, k, v = fn(in_p, x, positions)

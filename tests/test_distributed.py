@@ -7,19 +7,10 @@ import subprocess
 import sys
 import textwrap
 
-import jax
-import pytest
-
-# Pre-existing failures from jax API drift: these subprocess snippets use
-# jax>=0.6 APIs (jax.make_mesh axis_types, jax.sharding.AxisType,
-# jax.set_mesh). The xfail is CONDITIONED on the installed jax, so on a
-# modern jax (CI) the marker is inert and a regression in the distributed
-# analyzer path fails loudly. Burn-down tracked in ROADMAP open items.
-_OLD_JAX = tuple(int(x) for x in jax.__version__.split(".")[:2]) < (0, 6)
-_jax_drift = pytest.mark.xfail(
-    condition=_OLD_JAX,
-    reason="jax>=0.6 API drift (AxisType/set_mesh/make_mesh kwargs) — "
-           "see ROADMAP open items", strict=False)
+# The jax>=0.6 API drift (AxisType / set_mesh / make_mesh kwargs) that
+# used to quarantine this whole module is absorbed by repro.compat
+# (make_mesh / set_mesh / shard_map); the snippets below run on every
+# supported jax and a regression in the distributed path fails loudly.
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -36,10 +27,10 @@ def _run(code: str, timeout=560):
         (out.stdout[-1000:], out.stderr[-3000:])
 
 
-@_jax_drift
 def test_distributed_binstats_equals_serial():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
+    from repro.compat import make_mesh, set_mesh
     from jax.sharding import Mesh
     from repro.core.distributed import (binstats_local,
                                         distributed_binstats)
@@ -47,8 +38,7 @@ def test_distributed_binstats_equals_serial():
     n, n_bins, total = 4096, 64, 1e9
     ts = jnp.asarray(rng.uniform(0, total, n), jnp.float32)
     vals = jnp.asarray(rng.normal(10, 3, n), jnp.float32)
-    mesh = jax.make_mesh((8,), ('data',),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ('data',))
     dist = distributed_binstats(ts, vals, total, n_bins, mesh)
     inv = np.float32(n_bins / total)
     bins = jnp.clip((ts * inv).astype(jnp.int32), 0, n_bins - 1)
@@ -62,10 +52,10 @@ def test_distributed_binstats_equals_serial():
     """)
 
 
-@_jax_drift
 def test_moe_ep_and_replicated_equal_local():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
+    from repro.compat import make_mesh, set_mesh
     from repro.models.moe import MoEConfig, moe_init, moe_forward
     from repro.models.shardrules import make_ctx
     cfg = MoEConfig(d_model=32, d_ff=16, n_experts=8, top_k=2,
@@ -74,10 +64,9 @@ def test_moe_ep_and_replicated_equal_local():
     x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 16, 32)),
                     jnp.float32)
     out_l, _ = moe_forward(params, x, cfg, None)
-    mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = make_mesh((2, 4), ('data', 'model'))
     ctx = make_ctx(mesh)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         out_ep, _ = moe_forward(params, x, cfg, ctx)
         out_rep, _ = moe_forward(params, x[:, :1], cfg, ctx)
     out_lr, _ = moe_forward(params, x[:, :1], cfg, None)
@@ -89,10 +78,10 @@ def test_moe_ep_and_replicated_equal_local():
     """)
 
 
-@_jax_drift
 def test_sharded_train_step_matches_single_device():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
+    from repro.compat import make_mesh, set_mesh
     from repro.configs import get_smoke_config
     from repro.data.pipeline import DataConfig, make_batch
     from repro.train.step import (TrainConfig, init_state,
@@ -107,13 +96,12 @@ def test_sharded_train_step_matches_single_device():
     s_ref, m_ref = make_train_step(cfg, tcfg, None)(
         jax.tree.map(lambda x: x, state), batch)
     # 2x4 mesh
-    mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = make_mesh((2, 4), ('data', 'model'))
     sspec = to_named(state_specs(state, mesh), mesh)
     bspec = to_named(batch_specs(batch, mesh), mesh)
     step = jax.jit(make_train_step(cfg, tcfg, mesh),
                    in_shardings=(sspec, bspec), out_shardings=(sspec, None))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         s_sh, m_sh = step(state, batch)
     np.testing.assert_allclose(float(m_ref['loss']), float(m_sh['loss']),
                                rtol=2e-3)
@@ -124,16 +112,15 @@ def test_sharded_train_step_matches_single_device():
     """)
 
 
-@_jax_drift
 def test_serve_cache_specs_are_legal_shardings():
     _run("""
     import jax, jax.numpy as jnp
+    from repro.compat import make_mesh
     from repro.configs import get_smoke_config
     from repro.models.model import init_cache
     from repro.serve.engine import cache_specs
     from jax.sharding import NamedSharding
-    mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = make_mesh((2, 4), ('data', 'model'))
     for arch in ('hymba-1.5b', 'deepseek-v2-236b', 'mamba2-370m',
                  'h2o-danube-1.8b'):
         cfg = get_smoke_config(arch)
@@ -144,13 +131,11 @@ def test_serve_cache_specs_are_legal_shardings():
     """)
 
 
-@_jax_drift
 def test_multipod_mesh_axes():
     _run("""
-    import jax
+    from repro.compat import make_mesh
     from repro.models.shardrules import batch_axes, spec_for
-    mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'),
-                         axis_types=(jax.sharding.AxisType.Auto,)*3)
+    mesh = make_mesh((2, 2, 2), ('pod', 'data', 'model'))
     assert batch_axes(mesh) == ('pod', 'data')
     s = spec_for('segments/0/ffn/w_up', (4, 64, 128), mesh)
     assert s[1] == ('pod', 'data') and s[2] in ('model', ('model',)), s
@@ -161,13 +146,13 @@ def test_multipod_mesh_axes():
     """)
 
 
-@_jax_drift
 def test_elastic_checkpoint_reshard_across_meshes(tmp_path):
     """Fault-tolerance: a checkpoint written from an 8-device (2,4) mesh
     restores onto a 4-device (2,2) mesh (elastic downscale) and the train
     step keeps producing the same loss."""
     _run("""
     import tempfile, jax, jax.numpy as jnp, numpy as np
+    from repro.compat import make_mesh, set_mesh
     from repro.configs import get_smoke_config
     from repro.data.pipeline import DataConfig, make_batch
     from repro.models.shardrules import tree_shardings
@@ -184,8 +169,7 @@ def test_elastic_checkpoint_reshard_across_meshes(tmp_path):
     d = tempfile.mkdtemp()
 
     def mesh_of(shape):
-        return jax.make_mesh(shape, ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        return make_mesh(shape, ('data', 'model'))
 
     # train 2 steps on the 8-device mesh, checkpoint
     mesh8 = mesh_of((2, 4))
@@ -195,7 +179,7 @@ def test_elastic_checkpoint_reshard_across_meshes(tmp_path):
                     in_shardings=(sspec8, to_named(
                         batch_specs(batch, mesh8), mesh8)),
                     out_shardings=(sspec8, None))
-    with jax.set_mesh(mesh8):
+    with set_mesh(mesh8):
         state, _ = step8(state, batch)
         state, m8 = step8(state, batch)
     mgr = CheckpointManager(d)
@@ -216,10 +200,10 @@ def test_elastic_checkpoint_reshard_across_meshes(tmp_path):
                     in_shardings=(sspec4, to_named(
                         batch_specs(batch, mesh4), mesh4)),
                     out_shardings=(sspec4, None))
-    with jax.set_mesh(mesh4):
+    with set_mesh(mesh4):
         _, m4 = step4(restored, batch)
     # the 3rd-step loss on the downscaled mesh matches the 8-device run
-    with jax.set_mesh(mesh8):
+    with set_mesh(mesh8):
         _, m8b = step8(state, batch)
     np.testing.assert_allclose(float(m4['loss']), float(m8b['loss']),
                                rtol=2e-3)

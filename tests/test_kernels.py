@@ -13,9 +13,10 @@ except ModuleNotFoundError:           # degrade property sweeps to skips
     HAVE_HYPOTHESIS = False
 
 from repro.core.aggregation import bin_samples
+from repro.core.reducers import N_BUCKETS, QuantileSketch, bucket_of
 from repro.core.sharding import ShardPlan
-from repro.kernels import (binstats, binstats_ref, iqr_fences, iqr_ref,
-                           rolling_ref, rolling_stats)
+from repro.kernels import (binstats, binstats_ref, histbin, iqr_fences,
+                           iqr_ref, rolling_ref, rolling_stats)
 
 
 def _events(rng, n, total_ns):
@@ -116,6 +117,72 @@ def test_binstats_multimetric_matches_single_runs():
         # counts are metric-independent and exactly shared
         np.testing.assert_array_equal(np.asarray(mk[j][:, 0]),
                                       np.asarray(mk[0][:, 0]))
+
+
+# --- histbin ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,n_bins", [
+    (100, 7), (1024, 128), (3000, 50), (5, 3), (2048, 1),
+])
+def test_histbin_kernel_matches_ref(n, n_bins):
+    """Pallas double-one-hot scatter-as-matmul ≡ segment_sum oracle,
+    EXACTLY (both count integer events in float32)."""
+    rng = np.random.default_rng(n + n_bins)
+    total = 1e9
+    ts, _ = _events(rng, n, total)
+    vals = jnp.asarray(np.abs(rng.normal(5000, 3000, n)), jnp.float32)
+    valid = jnp.asarray(rng.random(n) > 0.1)
+    out_k = histbin(ts, vals, valid, total_ns=total, n_bins=n_bins,
+                    use_kernel=True)
+    out_r = histbin(ts, vals, valid, total_ns=total, n_bins=n_bins,
+                    use_kernel=False)
+    assert out_k.shape == (n_bins, N_BUCKETS)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+    assert float(np.asarray(out_k).sum()) == float(np.asarray(valid).sum())
+
+
+def test_histbin_multimetric_matches_single_runs():
+    """A batched (M, N) pass returns, per metric, the same histogram as M
+    independent single-metric kernel calls (shared bin one-hot)."""
+    rng = np.random.default_rng(5)
+    n, n_bins, total = 2000, 40, 1e9
+    ts, _ = _events(rng, n, total)
+    v0 = jnp.asarray(np.abs(rng.normal(1e4, 3e3, n)), jnp.float32)
+    v1 = jnp.asarray(rng.uniform(1, 1e7, n).astype(np.float32))
+    valid = jnp.asarray(rng.random(n) > 0.2)
+    batch = jnp.stack([v0, v1])
+    mk = histbin(ts, batch, valid, total_ns=total, n_bins=n_bins,
+                 use_kernel=True)
+    assert mk.shape == (2, n_bins, N_BUCKETS)
+    for j, v in enumerate((v0, v1)):
+        single = histbin(ts, v, valid, total_ns=total, n_bins=n_bins,
+                         use_kernel=True)
+        np.testing.assert_array_equal(np.asarray(mk[j]),
+                                      np.asarray(single))
+
+
+def test_histbin_feeds_quantile_sketch():
+    """Kernel output drops into QuantileSketch and answers quantiles that
+    match the host float64 sketch path on boundary-safe values."""
+    rng = np.random.default_rng(9)
+    n, n_bins, total = 4000, 16, 1e9
+    ts = rng.uniform(0, total, n).astype(np.float32)
+    vals = np.abs(rng.lognormal(8.0, 1.0, n)).astype(np.float32)
+    valid = np.ones(n, bool)
+    out = np.asarray(histbin(jnp.asarray(ts), jnp.asarray(vals),
+                             jnp.asarray(valid), total_ns=total,
+                             n_bins=n_bins, use_kernel=True))
+    sk = QuantileSketch(counts=out.astype(np.float64))
+    # host sketch over identical float32-binned rows
+    host = np.zeros((n_bins, N_BUCKETS))
+    bins = np.clip((ts * np.float32(n_bins / total)).astype(np.int32),
+                   0, n_bins - 1)
+    np.add.at(host, (bins, bucket_of(vals.astype(np.float64))), 1.0)
+    hs = QuantileSketch(counts=host)
+    occ = sk.total() > 0
+    for q in (0.5, 0.95, 0.99):
+        np.testing.assert_allclose(sk.quantile(q)[occ],
+                                   hs.quantile(q)[occ], rtol=1e-6)
 
 
 # --- iqr ------------------------------------------------------------------------

@@ -147,13 +147,13 @@ def test_result_select_and_anomaly_on_tensor(store_dir):
     assert idx.ndim == 1
 
 
-def _run_backend(paths, workdir, backend, **kw):
+def _run_backend(paths, workdir, backend, tag="mm", **kw):
     cfg = PipelineConfig(
         n_ranks=2, backend=backend, metrics=METRICS, group_by="k_device",
         use_summary_cache=False,
         generation=GenerationConfig(), **kw)
     return VariabilityPipeline(cfg).run(
-        paths, os.path.join(workdir, f"mm_{backend}"))
+        paths, os.path.join(workdir, f"{tag}_{backend}"))
 
 
 def test_backends_agree_on_multimetric_tensor(small_dataset, tmp_path):
@@ -176,6 +176,65 @@ def test_backends_agree_on_multimetric_tensor(small_dataset, tmp_path):
                                np.where(occ, ga.min, 0.0),
                                rtol=1e-5, atol=1e-2)
     np.testing.assert_array_equal(a.anomalies.top_idx, b.anomalies.top_idx)
+
+
+def test_quantile_scores_end_to_end_all_backends(small_dataset, tmp_path):
+    """The PR's acceptance criterion: ``anomalous_bins(..., score="p99")``
+    and ``score="iqr"`` work end-to-end on serial/process/jax, with the
+    process-backend quantile sketch BIT-IDENTICAL to serial and the jax
+    path within sketch error bounds."""
+    from repro.core.reducers import QUANTILE_REL_ERR
+
+    ds, paths = small_dataset
+    kw = dict(reducers=("moments", "quantile"), anomaly_score="p99")
+    a = _run_backend(paths, str(tmp_path), "serial", tag="q", **kw)
+    b = _run_backend(paths, str(tmp_path), "process", tag="q", **kw)
+    c = _run_backend(paths, str(tmp_path), "jax", tag="q", **kw)
+
+    sa, sb, sc = (r.aggregation.reduced["quantile"] for r in (a, b, c))
+    np.testing.assert_array_equal(sa.counts, sb.counts)   # bit-identical
+    assert sa.counts.sum() == sc.counts.sum()             # counts conserved
+
+    # jax bucketization is float32; quantile answers must stay within one
+    # bucket step of the serial float64 sketch (≲ 2*QUANTILE_REL_ERR).
+    occ = a.aggregation.stats.count > 0
+    for q in (0.5, 0.95, 0.99):
+        pa = a.aggregation.sketch(metric=0).quantile(q)[occ]
+        pc = c.aggregation.sketch(metric=0).quantile(q)[occ]
+        np.testing.assert_allclose(pc, pa,
+                                   rtol=2.5 * QUANTILE_REL_ERR)
+
+    # identical host sketches => identical anomaly selection
+    np.testing.assert_array_equal(a.anomalies.top_idx, b.anomalies.top_idx)
+    assert a.anomalies.scores.shape == (a.aggregation.plan.n_shards,)
+
+    # iqr fencing end-to-end on the serial backend + detector reuse on the
+    # already-aggregated results of the other two
+    i = _run_backend(paths, str(tmp_path), "serial", tag="qi",
+                     reducers=("moments", "quantile"), anomaly_score="iqr")
+    assert i.anomalies.scores.shape == (i.aggregation.plan.n_shards,)
+    rep_b = anomalous_bins(b.aggregation, score="iqr")
+    rep_c = anomalous_bins(c.aggregation, score="iqr")
+    assert rep_b.scores.shape == rep_c.scores.shape
+
+
+def test_quantile_suite_summary_cache_round_trip(small_dataset, tmp_path):
+    ds, paths = small_dataset
+    cfg = PipelineConfig(n_ranks=2, backend="serial", metrics=METRICS,
+                         group_by="m_kind",
+                         reducers=("moments", "quantile"),
+                         anomaly_score="p95")
+    pipe = VariabilityPipeline(cfg)
+    res = pipe.run(paths, str(tmp_path / "store"))
+    assert not res.aggregation.from_cache
+    again = pipe.aggregate(str(tmp_path / "store"))
+    assert again.from_cache
+    np.testing.assert_array_equal(
+        res.aggregation.reduced["quantile"].counts,
+        again.reduced["quantile"].counts)
+    # the cached sketch answers the same fences
+    rep = anomalous_bins(again, score="p95")
+    np.testing.assert_array_equal(res.anomalies.top_idx, rep.top_idx)
 
 
 def test_jax_cache_entries_never_served_to_exact_backends(small_dataset,

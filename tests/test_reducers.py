@@ -1,0 +1,257 @@
+"""Reducer-framework correctness core:
+
+  * merge is associative + commutative for EVERY registered reducer (the
+    property the round-robin / process / jax psum reductions rely on) —
+    property-tested under hypothesis when installed, and always covered
+    by deterministic seeded sweeps;
+  * the quantile sketch answers P50/P95/P99 within its stated relative
+    error bound vs np.percentile on the same rows;
+  * a pre-refactor (old SUMMARY_VERSION) summary payload is a cache MISS,
+    never a crash;
+  * the generic round-robin merge and payload round-trip work for the
+    quantile sketch exactly as for the moments.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:           # degrade property sweeps to skips
+    HAVE_HYPOTHESIS = False
+
+from repro.core.anomaly import anomalous_bins, score_values
+from repro.core.aggregation import round_robin_merge, run_aggregation
+from repro.core.reducers import (BinStats, QuantileSketch,
+                                 QUANTILE_REL_ERR, REDUCER_REGISTRY,
+                                 bucket_of, get_reducer,
+                                 normalize_reducers, N_BUCKETS)
+from repro.core.sharding import ShardPlan
+from repro.core.tracestore import SUMMARY_VERSION, TraceStore
+
+ALL_REDUCERS = sorted(REDUCER_REGISTRY)
+
+
+def _grouped_state(name, seed, n=300, n_bins=13, n_groups=3, n_metrics=2):
+    rng = np.random.default_rng(seed)
+    plan = ShardPlan(0, 10_000, n_bins)
+    ts = rng.integers(0, 10_000, n)
+    vals = np.abs(rng.normal(5000, 2000, (n, n_metrics)))
+    gid = rng.integers(0, n_groups, n)
+    return get_reducer(name).bin_grouped(ts, vals, gid, n_groups, plan)
+
+
+# fields that are float sums (associative only up to rounding); counts,
+# histogram counts and min/max are exact under any merge order.
+_SUM_FIELDS = {"sum", "sumsq"}
+
+
+def _assert_state_equal(a, b, exact=True):
+    assert type(a) is type(b)
+    for f in a.fields:
+        if exact or f not in _SUM_FIELDS:
+            np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+        else:
+            np.testing.assert_allclose(getattr(a, f), getattr(b, f),
+                                       rtol=1e-12)
+
+
+@pytest.mark.parametrize("name", ALL_REDUCERS)
+def test_merge_associative_commutative_seeded(name):
+    a, b, c = (_grouped_state(name, s) for s in (0, 1, 2))
+    # commutativity of + is exact in IEEE float; associativity only up to
+    # rounding for the float sums (count/min/max/histogram stay exact).
+    _assert_state_equal(a.merge(b), b.merge(a))
+    _assert_state_equal(a.merge(b).merge(c), a.merge(b.merge(c)),
+                        exact=False)
+
+
+@pytest.mark.parametrize("name", ALL_REDUCERS)
+def test_partition_merge_equals_serial(name):
+    """Binning any partition of the samples and merging gives EXACTLY the
+    one-shot result (the mergeable-reducer contract)."""
+    rng = np.random.default_rng(7)
+    n, n_bins, n_groups = 400, 17, 4
+    plan = ShardPlan(0, 10_000, n_bins)
+    ts = rng.integers(0, 10_000, n)
+    vals = np.abs(rng.normal(100, 40, (n, 2)))
+    gid = rng.integers(0, n_groups, n)
+    cls = get_reducer(name)
+    serial = cls.bin_grouped(ts, vals, gid, n_groups, plan)
+    merged = cls.zeros(n_bins, (n_groups, 2))
+    for idx in np.split(np.arange(n), [50, 120, 340]):
+        merged = merged.merge(
+            cls.bin_grouped(ts[idx], vals[idx], gid[idx], n_groups, plan))
+    _assert_state_equal(merged, serial, exact=False)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(name=st.sampled_from(ALL_REDUCERS), parts=st.integers(1, 6),
+           n=st.integers(1, 300), seed=st.integers(0, 999))
+    def test_reducer_merge_property(name, parts, n, seed):
+        """Property: any partitioning + any merge tree == one shot."""
+        rng = np.random.default_rng(seed)
+        plan = ShardPlan(0, 5_000, 11)
+        ts = rng.integers(0, 5_000, n)
+        vals = np.abs(rng.normal(50, 20, (n, 1)))
+        gid = rng.integers(0, 2, n)
+        cls = get_reducer(name)
+        serial = cls.bin_grouped(ts, vals, gid, 2, plan)
+        cut = (np.sort(rng.integers(0, n, parts - 1)) if parts > 1
+               else [])
+        merged = cls.zeros(plan.n_shards, (2, 1))
+        pieces = np.split(np.arange(n), cut)
+        for idx in rng.permutation(len(pieces)):
+            merged = merged.merge(cls.bin_grouped(
+                ts[pieces[idx]], vals[pieces[idx]], gid[pieces[idx]], 2,
+                plan))
+        _assert_state_equal(merged, serial, exact=False)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_reducer_merge_property():
+        pass
+
+
+def test_round_robin_merge_generic_over_quantile():
+    parts = [_grouped_state("quantile", s) for s in range(5)]
+    rr, owned = round_robin_merge(parts, parts[0].n_bins)
+    plain = QuantileSketch.zeros(parts[0].n_bins, parts[0].trailing)
+    for p in parts:
+        plain = plain.merge(p)
+    _assert_state_equal(rr, plain)
+    for r, ids in enumerate(owned):
+        if len(ids):
+            assert ids[0] == r
+
+
+def test_quantile_error_bound_vs_percentile():
+    """The sketch's stated contract: P50/P95/P99 within QUANTILE_REL_ERR
+    of np.percentile for in-range samples (plus a whisker for the rank
+    convention on finite samples)."""
+    rng = np.random.default_rng(3)
+    plan = ShardPlan(0, 1, 1)          # one bin: the pure-sketch question
+    for scale, shape in ((2000.0, 1.0), (50.0, 0.3), (1e6, 2.0)):
+        x = rng.lognormal(np.log(scale), shape, 5000)
+        sk = QuantileSketch.bin_grouped(
+            np.zeros(len(x), np.int64), x[:, None],
+            np.zeros(len(x), np.int64), 1, plan)
+        sk1 = sk.merge_groups().select_metric(0)
+        for q in (0.50, 0.95, 0.99):
+            est = float(sk1.quantile(q)[0])
+            true = float(np.percentile(x, 100 * q))
+            rel = abs(est - true) / true
+            assert rel <= QUANTILE_REL_ERR * 1.25 + 1e-3, \
+                (q, scale, shape, est, true, rel)
+
+
+def test_quantile_iqr_and_empty_bins():
+    rng = np.random.default_rng(4)
+    plan = ShardPlan(0, 100, 4)
+    x = np.abs(rng.normal(1000, 300, 500))
+    ts = rng.integers(0, 50, 500)      # bins 2,3 stay empty
+    sk = QuantileSketch.bin_grouped(ts, x[:, None],
+                                    np.zeros(500, np.int64), 1, plan)
+    sk1 = sk.merge_groups().select_metric(0)
+    assert sk1.quantile(0.5)[3] == 0.0          # empty bin -> 0
+    assert np.all(sk1.iqr() >= 0.0)
+    occ = sk1.total() > 0
+    q1, q3 = sk1.quantile(0.25), sk1.quantile(0.75)
+    np.testing.assert_allclose(sk1.iqr()[occ], (q3 - q1)[occ])
+
+
+def test_bucket_of_contract():
+    assert bucket_of(np.asarray([0.0]))[0] == 0          # underflow
+    assert bucket_of(np.asarray([-5.0]))[0] == 0         # negatives clamp
+    assert bucket_of(np.asarray([1e30]))[0] == N_BUCKETS - 1   # overflow
+    v = np.asarray([1.0, 2.0, 4.0])
+    b = bucket_of(v)
+    assert b[1] - b[0] == b[2] - b[1]                    # log-uniform
+
+
+def test_payload_round_trip_both_reducers():
+    for name in ALL_REDUCERS:
+        st_ = _grouped_state(name, 9)
+        back = get_reducer(name).from_payload(st_.to_payload())
+        _assert_state_equal(st_, back)
+
+
+def test_normalize_reducers():
+    assert normalize_reducers(()) == ("moments",)
+    assert normalize_reducers(("quantile",)) == ("moments", "quantile")
+    assert normalize_reducers(("quantile", "moments", "quantile")) == \
+        ("moments", "quantile")
+    with pytest.raises(KeyError):
+        normalize_reducers(("nope",))
+
+
+def test_pipeline_config_auto_includes_quantile():
+    """A quantile-family anomaly_score must pull the sketch into the
+    suite up front — not fail after a full generate+aggregate."""
+    from repro.core import PipelineConfig
+    assert PipelineConfig().reducer_suite == ("moments",)
+    assert PipelineConfig(anomaly_score="p99").reducer_suite == \
+        ("moments", "quantile")
+    assert PipelineConfig(anomaly_score="iqr").reducer_suite == \
+        ("moments", "quantile")
+    assert PipelineConfig(anomaly_score="std").reducer_suite == \
+        ("moments",)
+
+
+def test_score_values_dispatch():
+    m = _grouped_state("moments", 11)
+    q = _grouped_state("quantile", 11)
+    assert score_values(m, "mean").ndim == 1
+    assert score_values(q, "p95").ndim == 1
+    assert score_values(q, "iqr").ndim == 1
+    with pytest.raises(ValueError):
+        score_values(m, "p99")          # moments can't answer quantiles
+    with pytest.raises(ValueError):
+        score_values(q, "mean")         # sketch can't answer moments
+    with pytest.raises(ValueError):
+        score_values(m, "nope")
+    rep = anomalous_bins(q, score="p99")
+    assert rep.scores.shape == (q.n_bins,)
+
+
+@pytest.fixture()
+def tiny_store(small_dataset, tmp_path):
+    from repro.core import run_generation
+    ds, paths = small_dataset
+    out = str(tmp_path / "store")
+    run_generation(paths, out, n_ranks=2)
+    return out
+
+
+def test_old_version_summary_is_miss_not_crash(tiny_store):
+    """Regression: a summary payload written by an older engine version
+    (e.g. a pre-refactor v1 npz without the reducers array) must be
+    treated as a cache miss — recomputed, not crashed on."""
+    cold = run_aggregation(tiny_store, metrics=["k_stall"])
+    assert not cold.from_cache
+    store = TraceStore(tiny_store)
+    keys = store.summary_keys()
+    assert keys
+    for key in keys:
+        payload = store.read_summary(key)
+        # forge a pre-refactor payload AT THE CURRENT KEY: v1 version
+        # stamp, no "reducers" array, bare moment fields only.
+        old = {k: v for k, v in payload.items()
+               if not k.startswith("quantile__") and k != "reducers"}
+        old["version"] = np.asarray(SUMMARY_VERSION - 1, np.int64)
+        store.write_summary(key, old)
+    again = run_aggregation(tiny_store, metrics=["k_stall"])
+    assert not again.from_cache            # miss, recomputed
+    np.testing.assert_array_equal(cold.stats.count, again.stats.count)
+    warm = run_aggregation(tiny_store, metrics=["k_stall"])
+    assert warm.from_cache                 # fresh entry now serves
+
+
+def test_summary_key_depends_on_reducer_suite(tiny_store):
+    store = TraceStore(tiny_store)
+    plan = (0, 10, 5)
+    a = store.summary_key(plan, ["k_stall"], None)
+    b = store.summary_key(plan, ["k_stall"], None,
+                          reducers=("moments", "quantile"))
+    assert a != b

@@ -17,11 +17,13 @@ from repro.train.optim import (AdamWConfig, adamw_init, adamw_update,
                                cosine_lr, global_norm)
 
 
-# Quarantined pre-existing failures (jax API drift in the train stack,
-# e.g. jax.tree_util/checkpoint async APIs). Tracked in ROADMAP open items.
-_jax_drift = pytest.mark.xfail(
-    reason="jax version drift in train/checkpoint stack — see ROADMAP",
-    strict=False)
+# Sole remaining quarantined failure: the hymba-1.5b smoke config goes
+# NaN after ~20 steps on jax<0.5 numerics (NOT an API-drift issue — the
+# rest of the former quarantine now runs green through repro.compat).
+# Tracked in ROADMAP open items.
+_hymba_nan = pytest.mark.xfail(
+    reason="hymba-1.5b smoke train goes NaN on jax<0.5 numerics — "
+           "see ROADMAP open items", strict=False)
 
 
 def test_adamw_matches_reference_math():
@@ -81,7 +83,7 @@ def test_grad_accum_equivalence():
     np.testing.assert_allclose(d1, d2, rtol=1e-3, atol=1e-4)
 
 
-@_jax_drift
+@_hymba_nan
 def test_loss_decreases_multiple_archs(tmp_path):
     for arch in ("mamba2-370m", "hymba-1.5b"):
         cfg = get_smoke_config(arch)
@@ -127,7 +129,6 @@ def test_checkpoint_shape_mismatch_rejected(tmp_path):
         mgr.restore(bad)
 
 
-@_jax_drift
 def test_async_checkpoint_and_resume(tmp_path):
     cfg = get_smoke_config("stablelm-3b")
     state = init_state(cfg, jax.random.PRNGKey(0))
@@ -136,9 +137,9 @@ def test_async_checkpoint_and_resume(tmp_path):
     mgr.wait()
     assert mgr.latest_step() == 5
     # elastic restore path: placement with explicit shardings (1-device)
+    from repro.compat import make_mesh
     from repro.models.shardrules import tree_shardings
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     sh = {"step": jax.sharding.NamedSharding(
               mesh, jax.sharding.PartitionSpec()),
           "params": tree_shardings(state["params"], mesh),
