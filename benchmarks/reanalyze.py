@@ -73,6 +73,11 @@ def reanalyze_store(store_dir: str, metrics: list, group_by: str,
           f"{len(res.group_keys)} groups x {res.plan.n_shards} bins "
           f"from {src} in {res.seconds*1e3:.1f}ms "
           f"(from_cache={res.from_cache})")
+    if not res.from_cache and res.recomputed_shards is not None:
+        # incremental provenance: how much of the store was actually read
+        print(f"  incremental: rescanned "
+              f"{len(res.recomputed_shards)} shard(s), "
+              f"{res.partial_hits} served from the partial cache")
     for m in res.metrics:
         s = res.select(metric=m)
         occ = s.count > 0

@@ -3,34 +3,42 @@ reduced GPU performance-variability analysis pipeline.
 
 Layout (one module per paper concept — see DESIGN.md §2/§3):
   events        CUPTI-shaped schema, SQLite I/O, synthetic generator
-  tracestore    columnar shard files + manifest ("parquet") + summary cache
-  sharding      time partitioner, block/cyclic rank assignment
-  generation    phase 1: extract -> window left-join -> shard files
+  tracestore    columnar shard files + manifest ("parquet") + the two-level
+                derived cache: per-shard partials + merged summaries
+  sharding      time partitioner, block/cyclic rank assignment, append-mode
+                plan re-derivation (``ShardPlan.extended_to``)
+  generation    phase 1: extract -> window left-join -> shard files;
+                append-mode ingest (``run_append``) extends a live store
   reducers      pluggable mergeable statistics: "moments" (BinStats) and
                 "quantile" (log-bucket QuantileSketch) per (bin, group,
                 metric) cell
-  aggregation   phase 2: one-pass M-metrics x G-groups reducer tensors ->
-                round-robin merge -> cached summary
+  aggregation   phase 2, incremental: per-shard partial producer ->
+                clean/dirty classification -> suite-generic merge ->
+                covered summary; only dirty shards are ever rescanned
   anomaly       IQR fences (mean/std/max/sum + p50/p95/p99/iqr scores),
                 top-k anomalous shards
   distributed   jax backend (shard_map + psum_scatter/all_gather)
-  pipeline      end-to-end driver (serial | process | jax backends)
+  pipeline      end-to-end driver (serial | process | jax backends) with a
+                work-stealing shard queue and the append -> delta-aggregate
+                -> re-fence loop
 """
 
 from .events import (EventTable, GpuInfo, RankTrace, SyntheticSpec,
-                     SyntheticDataset, generate_synthetic,
-                     write_synthetic_dbs, read_rank_db, write_rank_db)
+                     SyntheticDataset, append_rank_db, generate_synthetic,
+                     trace_remainder, truncate_trace, write_synthetic_dbs,
+                     read_rank_db, write_rank_db)
 from .sharding import (ShardPlan, assignment, block_assignment,
                        cyclic_assignment, owner_of_shards)
 from .tracestore import StoreManifest, TraceStore
-from .generation import (GenerationConfig, GenerationReport,
-                         run_generation, window_left_join)
+from .generation import (AppendReport, GenerationConfig, GenerationReport,
+                         run_append, run_generation, window_left_join)
 from .reducers import (MergeableReducer, QuantileSketch, get_reducer,
                        normalize_reducers, register_reducer,
                        REDUCER_REGISTRY, QUANTILE_REL_ERR)
 from .aggregation import (AggregationResult, BinStats, GroupedPartial,
-                          bin_samples, bin_samples_grouped,
+                          ShardPartial, bin_samples, bin_samples_grouped,
+                          classify_shards, compute_shard_partial,
                           load_rank_partials, round_robin_merge,
-                          run_aggregation, DEFAULT_METRIC)
+                          run_aggregation, run_incremental, DEFAULT_METRIC)
 from .anomaly import IQRReport, anomalous_bins, iqr_detect, recovered
 from .pipeline import PipelineConfig, PipelineResult, VariabilityPipeline

@@ -37,12 +37,28 @@ metric or M metrics × G group keys (kernel id ``k_name``, device
 order is unchanged whether a metric rides alone or in a batch, so a
 multi-metric run is bit-identical to M single-metric runs.
 
-Merged suites are memoized as ``summary_{key}.npz`` in the
-:class:`TraceStore` (see its module docstring for the payload format) with
-the reducer suite part of the cache key — a repeat query over an unchanged
-store is answered from the O(n_bins) cache instead of re-scanning raw
-shards, and a payload written by an older engine version is treated as a
-miss, never a crash.
+Incremental engine
+------------------
+The scan itself is split into a per-shard partial producer
+(:func:`compute_shard_partial` → :class:`ShardPartial`) and a
+suite-generic merge (:func:`rank_partial_from_shards` +
+:func:`round_robin_merge`), with TWO cache levels in the
+:class:`TraceStore` (see its module docstring for the payload formats):
+
+  * ``summary_{key}.npz`` — the fully merged suite. The payload records
+    the ``covered`` shard fingerprints; a repeat query over an UNCHANGED
+    store is answered from this O(n_bins) cache without touching shards,
+    and a payload written by an older engine version (or covering a
+    different store state) is a miss, never a crash.
+  * ``partial_{idx}_{qkey}.npy`` — one shard's pre-merge states. On a
+    summary miss, :func:`run_aggregation` classifies each shard clean or
+    dirty against its (size, mtime_ns) fingerprint, loads cached partials
+    for the clean ones, recomputes ONLY the dirty/new ones, and re-merges
+    — so appending one second of trace costs O(dirty shards), not a full
+    rescan. Because partials round-trip float64 arrays exactly and the
+    merge order is fixed (shard index within rank, round-robin across
+    ranks), the delta result is BIT-IDENTICAL to a cold full aggregation
+    on the serial and process backends (tested).
 """
 
 from __future__ import annotations
@@ -60,9 +76,11 @@ from .tracestore import SUMMARY_VERSION, TraceStore
 
 __all__ = [
     "AggregationResult", "BinStats", "QuantileSketch", "GroupedPartial",
-    "bin_samples", "bin_samples_grouped", "load_rank_grouped",
+    "ShardPartial", "bin_samples", "bin_samples_grouped",
+    "compute_shard_partial", "compute_partials", "classify_shards",
+    "rank_partial_from_shards", "load_rank_grouped",
     "load_rank_partials", "round_robin_merge", "run_aggregation",
-    "DEFAULT_METRIC", "STAT_FIELDS",
+    "run_incremental", "DEFAULT_METRIC", "STAT_FIELDS",
 ]
 
 # Metrics the analyzer computes per time bin. Each is (what column, weight).
@@ -163,6 +181,12 @@ class AggregationResult:
     reducers: Tuple[str, ...] = DEFAULT_REDUCERS
     # merged grouped state per reducer; reduced["moments"] is `grouped`
     reduced: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # incremental-engine provenance: which shard files were actually
+    # scanned this run (None = driver predates / bypasses the partial
+    # cache, e.g. the jax backend's full on-device scan), and how many
+    # clean shards were served from cached partials.
+    recomputed_shards: Optional[List[int]] = None
+    partial_hits: int = 0
 
     def select(self, metric: Union[int, str] = 0,
                group: Optional[float] = None) -> BinStats:
@@ -214,48 +238,269 @@ def _shard_kind_bytes(cols: Dict[str, np.ndarray], plan: ShardPlan,
         np.add.at(acc, kbins[m], kb[m])
 
 
+# --- per-shard partial producer (the incremental unit of work) -------------
+
+@dataclasses.dataclass
+class ShardPartial:
+    """One shard's pre-merge reducer states — the incremental engine's
+    unit of caching and recomputation. Sparse over the bin axis: ``bins``
+    lists the time bins this shard's rows actually touched and every
+    reducer state carries (B, G, M[, private]) with B = len(bins), so a
+    partial is O(rows-of-one-shard) on disk regardless of plan size.
+    ``kind_bytes`` keeps the dense (K, n_bins) Fig-1b byte breakdown (K
+    is the handful of memcpy copyKind codes)."""
+
+    idx: int
+    n_bins: int
+    bins: np.ndarray                     # (B,) int64 bins touched
+    group_keys: np.ndarray               # (G,) float64 local group keys
+    states: Dict[str, Any]               # reducer name -> (B, G, M, ...)
+    kind_keys: np.ndarray                # (K,) int64 copyKind codes
+    kind_bytes: np.ndarray               # (K, n_bins) float64
+    # max joined m_start in this shard (-1 if none): m_start may overrun
+    # the plan end by up to the join window and clip into the top bin, so
+    # a partial is only reusable under an APPEND-EXTENDED plan when no
+    # m_start reached the old plan end (see _adapt_partial_plan)
+    m_start_hi: int = -1
+
+    def kind_dict(self) -> Dict[int, np.ndarray]:
+        return {int(k): self.kind_bytes[i]
+                for i, k in enumerate(self.kind_keys)}
+
+
+def compute_shard_partial(store: TraceStore, idx: int, plan: ShardPlan,
+                          metrics: Sequence[str],
+                          group_by: Optional[str] = None,
+                          reducers: Sequence[str] = DEFAULT_REDUCERS,
+                          ) -> ShardPartial:
+    """Scan ONE shard file and reduce it: every reducer, metric and group
+    in a single pass over the rows. The accumulation (``bin_grouped`` per
+    reducer over the full dense plan, then sliced to the touched bins) is
+    bit-identical to the pre-split rank loop, so cold results never moved
+    when the engine went incremental."""
+    metrics = list(metrics)
+    suite = normalize_reducers(reducers)
+    cols = store.read_shard(int(idx))
+    missing = [m for m in metrics if m not in cols]
+    if missing:
+        raise KeyError(f"metrics {missing} not in shard columns "
+                       f"{sorted(cols)}")
+    if group_by is not None and group_by not in cols:
+        raise KeyError(f"group_by column {group_by!r} not in shard "
+                       f"columns {sorted(cols)}")
+    ts = cols["k_start"].astype(np.int64)
+    if ts.size == 0:
+        # an empty shard contributes no rows and NO group keys
+        return ShardPartial(
+            idx=int(idx), n_bins=plan.n_shards,
+            bins=np.zeros(0, np.int64), group_keys=np.zeros(0, np.float64),
+            states={}, kind_keys=np.zeros(0, np.int64),
+            kind_bytes=np.zeros((0, plan.n_shards)))
+    vals = np.stack([np.asarray(cols[m], np.float64) for m in metrics],
+                    axis=1)
+    if group_by is None:
+        keys = np.asarray([_NO_GROUP_KEY])
+        gids = np.zeros(len(ts), np.int64)
+    else:
+        keys, gids = np.unique(np.asarray(cols[group_by], np.float64),
+                               return_inverse=True)
+    bins = np.unique(plan.shard_of(ts))
+    states = {name: get_reducer(name).bin_grouped(
+                  ts, vals, gids, len(keys), plan).take_bins(bins)
+              for name in suite}
+    kind_bytes: Dict[int, np.ndarray] = {}
+    _shard_kind_bytes(cols, plan, kind_bytes)
+    kinds = sorted(kind_bytes)
+    joined = cols["joined"] > 0 if "joined" in cols else np.zeros(0, bool)
+    m_start_hi = (int(cols["m_start"][joined].max())
+                  if joined.any() else -1)
+    return ShardPartial(
+        idx=int(idx), n_bins=plan.n_shards, bins=bins,
+        group_keys=np.asarray(keys, np.float64), states=states,
+        kind_keys=np.asarray(kinds, np.int64),
+        kind_bytes=(np.stack([kind_bytes[k] for k in kinds]) if kinds
+                    else np.zeros((0, plan.n_shards))),
+        m_start_hi=m_start_hi)
+
+
+# --- partial-cache (de)serialization ---------------------------------------
+
+def shard_partial_payload(sp: ShardPartial, plan: ShardPlan,
+                          metrics: Sequence[str], group_by: Optional[str],
+                          fingerprint: Sequence[int],
+                          ) -> Dict[str, np.ndarray]:
+    """Flat array dict for ``partial_{idx}_{qkey}.npy`` — the reducer
+    ``to_payload`` round trip plus the shard fingerprint it covers."""
+    payload = {
+        "version": np.asarray(SUMMARY_VERSION, np.int64),
+        "t_start": np.asarray(plan.t_start, np.int64),
+        "t_end": np.asarray(plan.t_end, np.int64),
+        "n_shards": np.asarray(plan.n_shards, np.int64),
+        "idx": np.asarray(sp.idx, np.int64),
+        "fingerprint": np.asarray(fingerprint, np.int64),
+        "metrics": np.asarray(list(metrics)),
+        "group_by": np.asarray(group_by or ""),
+        "group_keys": np.asarray(sp.group_keys, np.float64),
+        "reducers": np.asarray(list(sp.states)),
+        "bins": np.asarray(sp.bins, np.int64),
+        "kind_keys": sp.kind_keys,
+        "kind_bytes": sp.kind_bytes,
+        "m_start_hi": np.asarray(sp.m_start_hi, np.int64),
+    }
+    for state in sp.states.values():
+        payload.update(state.to_payload())
+    return payload
+
+
+def shard_partial_from_payload(payload: Dict[str, np.ndarray],
+                               ) -> ShardPartial:
+    suite = tuple(str(r) for r in payload["reducers"])
+    return ShardPartial(
+        idx=int(payload["idx"]), n_bins=int(payload["n_shards"]),
+        bins=np.asarray(payload["bins"], np.int64),
+        group_keys=np.asarray(payload["group_keys"], np.float64),
+        states={name: get_reducer(name).from_payload(payload)
+                for name in suite},
+        kind_keys=np.asarray(payload["kind_keys"], np.int64),
+        kind_bytes=np.asarray(payload["kind_bytes"], np.float64),
+        m_start_hi=int(payload["m_start_hi"]))
+
+
+def _adapt_partial_plan(payload: Dict[str, np.ndarray], idx: int,
+                        plan: ShardPlan) -> Optional[ShardPartial]:
+    """Decode a cached partial if it is valid under ``plan``.
+
+    Exact plan match is always valid. A payload written under a SHORTER
+    plan with the same origin and shard width (the append-extension case:
+    boundaries are a prefix, ``partial_key`` already guarantees origin +
+    width agree) is valid unless any joined ``m_start`` reached the old
+    plan end — such values clipped into the old top transfer-kind bin,
+    which the extended plan bins differently (``k_start`` never clips:
+    the plan always covers it). Reusable partials get their dense
+    (K, old_n_bins) byte rows zero-padded out to the current plan.
+    Anything else (shrunk plan) is a miss."""
+    p_end, p_n = int(payload["t_end"]), int(payload["n_shards"])
+    if (p_end, p_n) != (plan.t_end, plan.n_shards):
+        if p_n >= plan.n_shards or int(payload["m_start_hi"]) >= p_end:
+            return None
+    sp = shard_partial_from_payload(payload)
+    if sp.kind_bytes.shape[1] < plan.n_shards:
+        sp.kind_bytes = np.pad(
+            sp.kind_bytes,
+            ((0, 0), (0, plan.n_shards - sp.kind_bytes.shape[1])))
+    sp.n_bins = plan.n_shards
+    return sp
+
+
+def classify_shards(store: TraceStore, indices: Sequence[int],
+                    plan: ShardPlan, metrics: Sequence[str],
+                    group_by: Optional[str],
+                    reducers: Sequence[str] = DEFAULT_REDUCERS,
+                    use_cache: bool = True,
+                    stats: Optional[Dict[int, Tuple[int, int, int]]] = None,
+                    ) -> Tuple[str, List[ShardPartial], List[int]]:
+    """Split the shard universe into (clean partials loaded from cache,
+    dirty indices to recompute). A shard is clean iff a cached partial
+    exists for this query, its embedded fingerprint matches the shard
+    file's current (size, mtime_ns) stat, and its recorded plan is valid
+    under the current one (equal, or a prefix of an append-extended plan)
+    — so any rewrite, append or engine-version bump dirties exactly the
+    shards it touched."""
+    suite = normalize_reducers(reducers)
+    qkey = store.partial_key((plan.t_start, plan.t_end, plan.n_shards),
+                             metrics, group_by, reducers=suite)
+    clean: List[ShardPartial] = []
+    dirty: List[int] = []
+    for idx in indices:
+        fp = (stats.get(int(idx)) if stats is not None
+              else store.stat_shard(idx))
+        if fp is None:
+            continue                   # vanished between listing and stat
+        payload = store.read_partial(idx, qkey) if use_cache else None
+        sp = None
+        if (payload is not None
+                and int(payload.get("version", -1)) == SUMMARY_VERSION
+                and np.array_equal(payload["fingerprint"],
+                                   np.asarray(fp, np.int64))):
+            sp = _adapt_partial_plan(payload, int(idx), plan)
+        if sp is not None:
+            clean.append(sp)
+        else:
+            dirty.append(int(idx))
+    return qkey, clean, dirty
+
+
+def compute_partials(store: TraceStore, indices: Sequence[int],
+                     plan: ShardPlan, metrics: Sequence[str],
+                     group_by: Optional[str],
+                     reducers: Sequence[str] = DEFAULT_REDUCERS,
+                     qkey: Optional[str] = None) -> List[ShardPartial]:
+    """Recompute partials for ``indices`` (one worker's chunk of the
+    work queue); with ``qkey`` set, each is atomically persisted to the
+    partial cache as soon as it is produced (crash-safe: a dying worker
+    leaves complete partials or none, never torn files)."""
+    out = []
+    for idx in indices:
+        if not store.has_shard(int(idx)):
+            continue
+        fp = store.stat_shard(int(idx))
+        sp = compute_shard_partial(store, int(idx), plan, metrics,
+                                   group_by, reducers)
+        if qkey is not None and fp is not None:
+            store.write_partial(int(idx), qkey, shard_partial_payload(
+                sp, plan, metrics, group_by, fp))
+        out.append(sp)
+    return out
+
+
+def rank_partial_from_shards(shard_partials: Sequence[ShardPartial],
+                             n_bins: int, n_metrics: int,
+                             reducers: Sequence[str] = DEFAULT_REDUCERS,
+                             ) -> Tuple[GroupedPartial,
+                                        Dict[int, np.ndarray]]:
+    """Suite-generic merge of one rank's shard partials (in shard-index
+    order, so the merge sequence — and thus every float rounding — is
+    independent of which partials came from cache and which were just
+    recomputed, the property the bit-identity guarantee rests on).
+
+    Each shard's SPARSE rows are folded in place into one dense state per
+    group key (``merge_at``) — O(bins-the-shard-touched) per shard, not
+    O(n_bins); without this the merge would rival the raw scan it is
+    supposed to replace and the incremental speedup would evaporate."""
+    suite = normalize_reducers(reducers)
+    groups: Dict[float, Dict[str, Any]] = {}
+    kind_parts = []
+    for sp in sorted(shard_partials, key=lambda p: p.idx):
+        for gi, key in enumerate(sp.group_keys):
+            states = groups.get(float(key))
+            if states is None:
+                states = {name: get_reducer(name).zeros(n_bins,
+                                                        (n_metrics,))
+                          for name in suite}
+                groups[float(key)] = states
+            for name in suite:
+                states[name].merge_at(sp.bins,
+                                      sp.states[name].take_group(gi))
+        kind_parts.append(sp.kind_dict())
+    partial = GroupedPartial(n_bins=n_bins, n_metrics=n_metrics,
+                             reducers=suite, groups=groups)
+    return partial, merge_kind_parts(kind_parts)
+
+
 def load_rank_grouped(store: TraceStore, shard_ids: Sequence[int],
                       plan: ShardPlan, metrics: Sequence[str],
                       group_by: Optional[str] = None,
                       reducers: Sequence[str] = DEFAULT_REDUCERS,
                       ) -> Tuple[GroupedPartial, Dict[int, np.ndarray]]:
-    """One rank's aggregation work, generalized: load its N/P shard files
-    once, accumulate every reducer, metric and group in that single pass."""
+    """One rank's aggregation work: produce each shard's partial, merge
+    them. Kept as the uncached one-shot form of the split producer/merge
+    pair (``compute_shard_partial`` + ``rank_partial_from_shards``)."""
     metrics = list(metrics)
     suite = normalize_reducers(reducers)
-    partial = GroupedPartial(n_bins=plan.n_shards, n_metrics=len(metrics),
-                             reducers=suite)
-    kind_bytes: Dict[int, np.ndarray] = {}
-    for s in shard_ids:
-        if not store.has_shard(int(s)):
-            continue
-        cols = store.read_shard(int(s))
-        missing = [m for m in metrics if m not in cols]
-        if missing:
-            raise KeyError(f"metrics {missing} not in shard columns "
-                           f"{sorted(cols)}")
-        if group_by is not None and group_by not in cols:
-            raise KeyError(f"group_by column {group_by!r} not in shard "
-                           f"columns {sorted(cols)}")
-        ts = cols["k_start"].astype(np.int64)
-        if ts.size == 0:
-            continue    # an empty shard contributes no rows and NO keys
-        vals = np.stack([np.asarray(cols[m], np.float64) for m in metrics],
-                        axis=1)
-        if group_by is None:
-            keys = np.asarray([_NO_GROUP_KEY])
-            gids = np.zeros(len(ts), np.int64)
-        else:
-            keys, gids = np.unique(np.asarray(cols[group_by], np.float64),
-                                   return_inverse=True)
-        tensors = {name: get_reducer(name).bin_grouped(
-                       ts, vals, gids, len(keys), plan)
-                   for name in suite}
-        for gi, key in enumerate(keys):
-            partial.add(float(key), {name: t.take_group(gi)
-                                     for name, t in tensors.items()})
-        _shard_kind_bytes(cols, plan, kind_bytes)
-    return partial, kind_bytes
+    parts = compute_partials(store, [int(s) for s in shard_ids], plan,
+                             metrics, group_by, suite)
+    return rank_partial_from_shards(parts, plan.n_shards, len(metrics),
+                                    suite)
 
 
 def load_rank_partials(store: TraceStore, shard_ids: Sequence[int],
@@ -321,19 +566,26 @@ def lookup_summary(store: TraceStore, plan: ShardPlan,
                    ) -> Tuple[str, Optional["AggregationResult"]]:
     """One cache probe shared by every aggregation driver: returns the
     summary key for this (plan, metrics, group_by, precision, reducer
-    suite, shard fingerprint) and the decoded cached result on a hit
-    (None on a miss). A payload whose embedded version differs from the
-    running SUMMARY_VERSION — e.g. a file written by an older engine —
-    is a miss, not a crash."""
+    suite) and the decoded cached result on a hit (None on a miss). A
+    hit additionally requires the payload's ``covered`` shard
+    fingerprints to equal the store's CURRENT fingerprint — a summary
+    never outlives a shard write. A payload whose embedded version
+    differs from the running SUMMARY_VERSION — e.g. a file written by an
+    older engine — is likewise a miss, not a crash."""
     suite = normalize_reducers(reducers)
     key = store.summary_key((plan.t_start, plan.t_end, plan.n_shards),
                             metrics, group_by, precision=precision,
                             reducers=suite)
     payload = store.read_summary(key)
-    if payload is not None and int(payload.get(
-            "version", np.asarray(-1))) == SUMMARY_VERSION:
-        return key, result_from_summary(payload, time.perf_counter() - t0)
-    return key, None
+    if payload is None or int(payload.get(
+            "version", np.asarray(-1))) != SUMMARY_VERSION:
+        return key, None
+    covered = payload.get("covered")
+    now = np.asarray(store.shard_fingerprint(),
+                     np.int64).reshape(-1, 3)
+    if covered is None or not np.array_equal(covered, now):
+        return key, None
+    return key, result_from_summary(payload, time.perf_counter() - t0)
 
 
 def densify_partials(partials: Sequence[GroupedPartial],
@@ -350,11 +602,13 @@ def finalize_aggregation(store: TraceStore, plan: ShardPlan,
                          kind_parts: Sequence[Dict[int, np.ndarray]],
                          key: Optional[str], t0: float,
                          reducers: Sequence[str] = DEFAULT_REDUCERS,
-                         ) -> "AggregationResult":
+                         covered: Optional[Sequence[Tuple[int, int, int]]]
+                         = None) -> "AggregationResult":
     """Shared tail of every aggregation driver: round-robin merge the
     dense per-rank tensors (per reducer), fold the transfer-kind
     breakdown, build the result, and (when ``key`` is set) persist the
-    summary."""
+    summary stamped with the shard fingerprints it covers (``covered``
+    lets the caller reuse an already-taken stat pass)."""
     suite = normalize_reducers(reducers)
     merged = {name: round_robin_merge([d[name] for d in dense],
                                       plan.n_shards)[0]
@@ -364,9 +618,11 @@ def finalize_aggregation(store: TraceStore, plan: ShardPlan,
                           [d["moments"] for d in dense], kind_bytes,
                           time.perf_counter() - t0)
     if key is not None:
+        if covered is None:
+            covered = store.shard_fingerprint()
         store.write_summary(key, summary_payload(
             plan, metrics, group_by, result.group_keys, merged,
-            kind_bytes))
+            kind_bytes, covered=covered))
     return result
 
 
@@ -376,10 +632,12 @@ def summary_payload(plan: ShardPlan, metrics: Sequence[str],
                     group_by: Optional[str], group_keys: np.ndarray,
                     merged: Dict[str, Any],
                     kind_bytes: Dict[int, np.ndarray],
+                    covered: Sequence[Tuple[int, int, int]] = (),
                     ) -> Dict[str, np.ndarray]:
     kinds = sorted(kind_bytes)
     payload = {
         "version": np.asarray(SUMMARY_VERSION, np.int64),
+        "covered": np.asarray(covered, np.int64).reshape(-1, 3),
         "t_start": np.asarray(plan.t_start, np.int64),
         "t_end": np.asarray(plan.t_end, np.int64),
         "n_shards": np.asarray(plan.n_shards, np.int64),
@@ -414,7 +672,8 @@ def result_from_summary(payload: Dict[str, np.ndarray], seconds: float,
         per_rank_stats=[], copy_kind_bytes=kind_bytes, seconds=seconds,
         metrics=metrics, group_by=group_by,
         group_keys=np.asarray(payload["group_keys"]), grouped=grouped,
-        from_cache=True, reducers=suite, reduced=merged)
+        from_cache=True, reducers=suite, reduced=merged,
+        recomputed_shards=[])
 
 
 def merge_kind_parts(kind_parts: Sequence[Dict[int, np.ndarray]],
@@ -442,6 +701,65 @@ def build_result(plan: ShardPlan, metrics: Sequence[str],
         reducers=tuple(merged), reduced=merged)
 
 
+def run_incremental(store: TraceStore, n_shard_files: int, plan: ShardPlan,
+                    metrics: Sequence[str], group_by: Optional[str],
+                    n_ranks: int, use_cache: bool, key: Optional[str],
+                    t0: float,
+                    reducers: Sequence[str] = DEFAULT_REDUCERS,
+                    compute_fn=None) -> AggregationResult:
+    """The incremental core every host backend shares: classify shards
+    clean/dirty, recompute only the dirty ones (``compute_fn(dirty, qkey)``
+    — serial here, the pipeline's work-stealing pool in the process
+    backend), then merge cached + fresh partials per rank in shard order
+    and round-robin across ranks. Cold run == incremental run with every
+    shard dirty, through the identical merge path — which is why a delta
+    aggregation is bit-identical to a cold one."""
+    mlist = list(metrics)
+    suite = normalize_reducers(reducers)
+    all_indices = store.shard_indices()      # ONE directory listing
+    indices = [i for i in all_indices if i < n_shard_files]
+    strays = [i for i in all_indices if i >= n_shard_files]
+    # one stat pass serves dirty classification AND the summary's covered
+    # fingerprints (stats on this container's fs are ~0.2 ms each)
+    stats = {i: store.stat_shard(i) for i in indices}
+    qkey, clean, dirty = classify_shards(store, indices, plan, mlist,
+                                         group_by, suite, use_cache,
+                                         stats=stats)
+    if compute_fn is None:
+        def compute_fn(idxs, qk):
+            return compute_partials(store, idxs, plan, mlist, group_by,
+                                    suite, qk)
+    computed = list(compute_fn(dirty, qkey if use_cache else None))
+
+    shard_sets = assignment(n_shard_files, n_ranks, "block")
+    rank_of = np.zeros(max(n_shard_files, 1), np.int64)
+    for r, ids in enumerate(shard_sets):
+        rank_of[ids] = r
+    per_rank: List[List[ShardPartial]] = [[] for _ in range(n_ranks)]
+    for sp in clean + computed:
+        per_rank[int(rank_of[sp.idx])].append(sp)
+
+    partials, kind_parts = [], []
+    for ps in per_rank:
+        gp, kb = rank_partial_from_shards(ps, plan.n_shards, len(mlist),
+                                          suite)
+        partials.append(gp)
+        kind_parts.append(kb)
+    all_keys, dense = densify_partials(partials)
+    # covered must describe EVERY shard file (stray indices past the
+    # manifest count included) to match lookup_summary's live compare
+    covered = sorted(
+        [fp for fp in stats.values() if fp is not None]
+        + [fp for i in strays
+           for fp in [store.stat_shard(i)] if fp is not None])
+    result = finalize_aggregation(store, plan, mlist, group_by, all_keys,
+                                  dense, kind_parts, key, t0,
+                                  reducers=suite, covered=covered)
+    result.recomputed_shards = sorted(int(i) for i in dirty)
+    result.partial_hits = len(clean)
+    return result
+
+
 def run_aggregation(store: Union[str, TraceStore],
                     n_ranks: Optional[int] = None,
                     metric: str = DEFAULT_METRIC,
@@ -460,9 +778,13 @@ def run_aggregation(store: Union[str, TraceStore],
     ``metrics`` (list) and ``group_by`` (a shard column such as ``k_name``,
     ``k_device`` or ``m_kind``) select the one-pass multi-metric grouped
     tensors; ``reducers`` picks the statistic suite (``"moments"`` is
-    always included; add ``"quantile"`` for per-bin P50/P95/P99/IQR). The
-    merged suite is cached in the store (``use_cache``) and repeat queries
-    never touch the raw shards.
+    always included; add ``"quantile"`` for per-bin P50/P95/P99/IQR).
+
+    With ``use_cache`` the run is fully incremental: an unchanged store is
+    answered from the merged summary without touching shards, and a store
+    with rewritten/appended shards rescans ONLY those (clean shards come
+    from the per-shard partial cache) — ``result.recomputed_shards`` /
+    ``partial_hits`` report exactly what was read.
     """
     t0 = time.perf_counter()
     store = store if isinstance(store, TraceStore) else TraceStore(store)
@@ -485,15 +807,5 @@ def run_aggregation(store: Union[str, TraceStore],
         if cached is not None:
             return cached
 
-    shard_sets = assignment(man.n_shards, P, "block")
-    partials, kind_parts = [], []
-    for r in range(P):
-        part, kinds = load_rank_grouped(store, shard_sets[r], plan, mlist,
-                                        group_by, reducers=suite)
-        partials.append(part)
-        kind_parts.append(kinds)
-
-    all_keys, dense = densify_partials(partials)
-    return finalize_aggregation(store, plan, mlist, group_by, all_keys,
-                                dense, kind_parts, key, t0,
-                                reducers=suite)
+    return run_incremental(store, man.n_shards, plan, mlist, group_by, P,
+                           use_cache, key, t0, reducers=suite)

@@ -15,6 +15,14 @@ statistics become mesh devices exchanging via ICI collectives:
     `pmax` (these are latency-bound; the heavy sum/sumsq take the scatter
     path).
 
+Incremental engine note: this backend is the one FULL-SCAN path — raw
+events must reach the device collectives, so it neither reads nor writes
+the host backends' per-shard partial cache. It still shares the
+covered-fingerprint summary cache (keyed ``precision="float32"``), so a
+repeat jax aggregation over an unchanged store skips the scan entirely;
+after an append it re-scans from scratch where the host backends
+delta-merge.
+
 Public entry points:
 
   * :func:`binstats_local` — pure-jnp per-device moments (also the oracle

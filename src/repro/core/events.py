@@ -192,6 +192,27 @@ def _create_schema(conn: sqlite3.Connection) -> None:
         f"CREATE INDEX IF NOT EXISTS idx_memcpy_start ON {MEMCPY_TABLE}(start)")
 
 
+def _insert_events(conn: sqlite3.Connection, trace: RankTrace) -> None:
+    """INSERT one trace's kernel + memcpy rows (shared by fresh writes
+    and append mode; rowids keep growing monotonically on append)."""
+    k = trace.kernels
+    rows = zip(k.start.tolist(), k.end.tolist(), k.device.tolist(),
+               k.stream.tolist(), range(len(k)),
+               np.ones(len(k), np.int64).tolist(),
+               np.full(len(k), 128, np.int64).tolist(),
+               np.full(len(k), 32, np.int64).tolist(),
+               np.zeros(len(k), np.int64).tolist(),
+               k.name_id.tolist(), k.memory_stall.tolist())
+    conn.executemany(
+        f"INSERT INTO {KERNEL_TABLE} VALUES (?,?,?,?,?,?,?,?,?,?,?)", rows)
+    m = trace.memcpys
+    rows = zip(m.start.tolist(), m.end.tolist(), m.device.tolist(),
+               m.stream.tolist(), range(len(m)),
+               m.bytes.tolist(), m.copy_kind.tolist())
+    conn.executemany(
+        f"INSERT INTO {MEMCPY_TABLE} VALUES (?,?,?,?,?,?,?)", rows)
+
+
 def write_rank_db(path: str, trace: RankTrace) -> None:
     """Write one profiling rank's trace as an Nsight-shaped SQLite DB."""
     if os.path.exists(path):
@@ -199,26 +220,24 @@ def write_rank_db(path: str, trace: RankTrace) -> None:
     conn = sqlite3.connect(path)
     try:
         _create_schema(conn)
-        k = trace.kernels
-        rows = zip(k.start.tolist(), k.end.tolist(), k.device.tolist(),
-                   k.stream.tolist(), range(len(k)),
-                   np.ones(len(k), np.int64).tolist(),
-                   np.full(len(k), 128, np.int64).tolist(),
-                   np.full(len(k), 32, np.int64).tolist(),
-                   np.zeros(len(k), np.int64).tolist(),
-                   k.name_id.tolist(), k.memory_stall.tolist())
-        conn.executemany(
-            f"INSERT INTO {KERNEL_TABLE} VALUES (?,?,?,?,?,?,?,?,?,?,?)", rows)
-        m = trace.memcpys
-        rows = zip(m.start.tolist(), m.end.tolist(), m.device.tolist(),
-                   m.stream.tolist(), range(len(m)),
-                   m.bytes.tolist(), m.copy_kind.tolist())
-        conn.executemany(
-            f"INSERT INTO {MEMCPY_TABLE} VALUES (?,?,?,?,?,?,?)", rows)
+        _insert_events(conn, trace)
         conn.executemany(
             f"INSERT INTO {GPU_TABLE} VALUES (?,?,?,?,?,?,?)",
             [(g.id, g.name, g.bandwidth, g.memory, g.sm_count,
               g.cc_major, g.cc_minor) for g in trace.gpus])
+        conn.commit()
+    finally:
+        conn.close()
+
+
+def append_rank_db(path: str, trace: RankTrace) -> None:
+    """Append ``trace``'s kernel/memcpy rows to an EXISTING rank DB —
+    the profiler growth model (the GPU inventory is static and left
+    alone). Appended rows get fresh, larger rowids, which is what the
+    append-mode ingest watermark keys on."""
+    conn = sqlite3.connect(path)
+    try:
+        _insert_events(conn, trace)
         conn.commit()
     finally:
         conn.close()
@@ -232,26 +251,54 @@ def _read_query(conn: sqlite3.Connection, query: str,
 
 def read_rank_db(path: str, rank: int,
                  start: Optional[int] = None,
-                 end: Optional[int] = None) -> RankTrace:
-    """Read a rank DB, optionally restricted to a [start, end) time range.
+                 end: Optional[int] = None,
+                 min_rowids: Optional[Tuple[int, int]] = None,
+                 max_rowids: Optional[Tuple[int, int]] = None) -> RankTrace:
+    """Read a rank DB, optionally restricted to a [start, end) time range
+    and/or to rows APPENDED after a previous ingest.
 
-    The range restriction is executed as an indexed SQL range query — this is
-    the paper's per-shard extraction primitive.
+    The range restriction is executed as an indexed SQL range query — this
+    is the paper's per-shard extraction primitive. ``min_rowids`` /
+    ``max_rowids`` are append-mode watermarks: ``(kernel_rowid,
+    memcpy_rowid)`` high-water marks from :func:`table_rowid_hi`; only
+    rows with ``min < rowid <= max`` are returned. Profilers append rows,
+    so this selects exactly the events added between the two watermarks —
+    regardless of their timestamps (late flushes below the covered time
+    range included), with no duplicates. The upper bound matters on a
+    LIVE db: it pins the read to the watermark the caller is about to
+    record, so rows appended mid-read are left for the next ingest
+    instead of being skipped forever.
     """
     conn = sqlite3.connect(path)
     try:
-        where, params = "", ()
+        clauses, params = [], []
         if start is not None:
-            where = " WHERE start >= ? AND start < ?"
-            params = (int(start), int(end))
+            clauses.append("start >= ? AND start < ?")
+            params += [int(start), int(end)]
+        k_clauses, m_clauses = list(clauses), list(clauses)
+        k_params, m_params = list(params), list(params)
+        if min_rowids is not None:
+            k_clauses.append("rowid > ?")
+            k_params.append(int(min_rowids[0]))
+            m_clauses.append("rowid > ?")
+            m_params.append(int(min_rowids[1]))
+        if max_rowids is not None:
+            k_clauses.append("rowid <= ?")
+            k_params.append(int(max_rowids[0]))
+            m_clauses.append("rowid <= ?")
+            m_params.append(int(max_rowids[1]))
+
+        def _where(cl):
+            return (" WHERE " + " AND ".join(cl)) if cl else ""
+
         k_rows = _read_query(
             conn,
             f"SELECT start, end, deviceId, streamId, shortName, memoryStall"
-            f" FROM {KERNEL_TABLE}{where}", params)
+            f" FROM {KERNEL_TABLE}{_where(k_clauses)}", k_params)
         m_rows = _read_query(
             conn,
             f"SELECT start, end, deviceId, streamId, bytes, copyKind"
-            f" FROM {MEMCPY_TABLE}{where}", params)
+            f" FROM {MEMCPY_TABLE}{_where(m_clauses)}", m_params)
         g_rows = _read_query(
             conn,
             f"SELECT id, name, globalMemoryBandwidth, globalMemorySize,"
@@ -290,6 +337,21 @@ def read_rank_db(path: str, rank: int,
                     cc_major=int(r[5]), cc_minor=int(r[6])) for r in g_rows]
     return RankTrace(rank=rank, kernels=_kernels(k_rows),
                      memcpys=_memcpys(m_rows), gpus=gpus)
+
+
+def table_rowid_hi(path: str) -> Tuple[int, int]:
+    """(max kernel rowid, max memcpy rowid) — the append-mode ingest
+    watermark. sqlite assigns monotonically increasing rowids to appended
+    rows, so everything a profiler adds later satisfies ``rowid > hi``."""
+    conn = sqlite3.connect(path)
+    try:
+        k = conn.execute(
+            f"SELECT MAX(rowid) FROM {KERNEL_TABLE}").fetchone()[0]
+        m = conn.execute(
+            f"SELECT MAX(rowid) FROM {MEMCPY_TABLE}").fetchone()[0]
+    finally:
+        conn.close()
+    return (int(k or 0), int(m or 0))
 
 
 def kernel_time_range_db(path: str) -> Tuple[int, int]:
@@ -415,6 +477,32 @@ def generate_synthetic(spec: SyntheticSpec) -> SyntheticDataset:
         traces.append(RankTrace(rank=rank, kernels=kernels,
                                 memcpys=memcpys, gpus=gpus))
     return SyntheticDataset(traces=traces, anomaly_windows=windows, spec=spec)
+
+
+def truncate_trace(trace: RankTrace, t_cutoff: int) -> RankTrace:
+    """Events fully contained before ``t_cutoff`` — an earlier snapshot of
+    a growing profiler DB. Used by the append-mode tests/benches: write
+    the truncated traces, build the store, ``append_rank_db`` the
+    :func:`trace_remainder` onto the same DB paths, then ``run_append``
+    ingests only the delta. Events spanning the cutoff stay in the
+    remainder (not split), so the snapshot's kernel time range never
+    leaks past ``t_cutoff``."""
+    return RankTrace(
+        rank=trace.rank,
+        kernels=trace.kernels.select(trace.kernels.end <= t_cutoff),
+        memcpys=trace.memcpys.select(trace.memcpys.end <= t_cutoff),
+        gpus=trace.gpus)
+
+
+def trace_remainder(trace: RankTrace, t_cutoff: int) -> RankTrace:
+    """Complement of :func:`truncate_trace`: the events a growing
+    profiler run flushes AFTER the ``t_cutoff`` snapshot (events spanning
+    the cutoff included — they flush once they end)."""
+    return RankTrace(
+        rank=trace.rank,
+        kernels=trace.kernels.select(trace.kernels.end > t_cutoff),
+        memcpys=trace.memcpys.select(trace.memcpys.end > t_cutoff),
+        gpus=trace.gpus)
 
 
 def write_synthetic_dbs(ds: SyntheticDataset, out_dir: str) -> List[str]:

@@ -23,13 +23,15 @@ table) instead of a row-at-a-time SQL loop — same result, columnar layout.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .events import (EventTable, RankTrace, read_rank_db,
-                     kernel_time_range_db)
+                     kernel_time_range_db, table_rowid_hi)
 from .sharding import (ShardPlan, assignment, contiguous_rank_range,
                        owner_of_shards)
 from .tracestore import StoreManifest, TraceStore
@@ -66,6 +68,21 @@ class GenerationReport:
     t_end: int
     rows_per_table: Dict[str, int]
     joined_rows: int
+    seconds: float
+
+
+@dataclasses.dataclass
+class AppendReport:
+    """What one append-mode ingest did: how far the plan grew, which
+    pre-existing shards received rows (and are now dirty for the
+    incremental aggregator), and how many joined rows arrived."""
+
+    n_shards: int                 # total shards after the append
+    n_new_shards: int             # shards past the old t_end
+    dirty_shards: List[int]       # pre-existing shard indices extended
+    appended_rows: int            # joined rows ingested by this append
+    t_start: int
+    t_end: int                    # new plan end
     seconds: float
 
 
@@ -219,7 +236,13 @@ def run_generation(db_paths: Sequence[str], out_dir: str,
                    n_ranks: int, cfg: Optional[GenerationConfig] = None,
                    ) -> GenerationReport:
     """Full phase-1 driver (sequential loop over ranks; the process/MPI
-    backend in :mod:`repro.core.pipeline` runs ranks concurrently)."""
+    backend in :mod:`repro.core.pipeline` runs ranks concurrently).
+
+    The initial generation assumes QUIESCENT source DBs (the paper's
+    post-mortem model): the append watermarks are recorded after the
+    rank reads, so rows added DURING generation would be skipped. Growth
+    after generation is the supported path — ingest it with
+    :func:`run_append`, whose bounded reads are live-writer safe."""
     cfg = cfg or GenerationConfig()
     t0 = time.perf_counter()
     lo, hi = global_time_range(db_paths)
@@ -244,7 +267,9 @@ def run_generation(db_paths: Sequence[str], out_dir: str,
         extra={"interval_ns": cfg.interval_ns,
                "join_window_ns": cfg.join_window_ns,
                "join_cap": cfg.join_cap,
-               "db_paths": list(db_paths)}))
+               "db_paths": [os.path.abspath(p) for p in db_paths],
+               "db_rowid_hi": {os.path.abspath(p): list(table_rowid_hi(p))
+                               for p in db_paths}}))
 
     # Table-1 style inventory, assembled from the rank workers' own range
     # queries (no second pass over the DBs).
@@ -255,4 +280,162 @@ def run_generation(db_paths: Sequence[str], out_dir: str,
         n_shards=plan.n_shards, n_ranks=n_ranks,
         t_start=plan.t_start, t_end=plan.t_end,
         rows_per_table=rows, joined_rows=joined,
+        seconds=time.perf_counter() - t0)
+
+
+def run_append(db_paths: Sequence[str], out_dir: str,
+               cfg: Optional[GenerationConfig] = None,
+               max_new_shards: int = 100_000) -> AppendReport:
+    """Append-mode ingest: extend an EXISTING store with new trace data
+    instead of regenerating it.
+
+    Two sources of new data, handled uniformly:
+
+      * a DB already in the manifest whose file has GROWN — re-queried by
+        ROWID watermark (``rowid > db_rowid_hi`` recorded at the last
+        ingest), which selects exactly the rows appended since then:
+        duplicate-free and loss-free even when a late flush lands below
+        the already-covered time range (those rows extend their existing
+        shards and dirty them). Stores generated before watermarks were
+        recorded cannot be appended to safely and are rejected loudly.
+      * a brand-new DB path (a late-arriving profiling rank) — queried in
+        full; its rows landing in existing shards EXTEND those shard
+        files (read + concat + atomic rewrite), marking exactly those
+        shards dirty for the incremental aggregator.
+
+    The plan is re-derived with :meth:`ShardPlan.extended_to`, so existing
+    shard boundaries (and files) are untouched; shards past the old
+    ``t_end`` are new files. Join parameters come from the manifest so
+    appended rows join identically to the original generation (window
+    slop at the append boundary: a new kernel only joins memcpys fetched
+    by the same append query, i.e. up to ``join_window_ns`` of cross-
+    boundary matches may be missed — same order as the shard-boundary
+    approximation the paper already accepts). New shards are owned
+    round-robin in the manifest; the pre-existing owner prefix is
+    immutable history. The final manifest write garbage-collects stale
+    summaries once (``TraceStore.gc_stale``).
+
+    Crash safety: individual shard/manifest writes are atomic, but the
+    append is a multi-file sequence (shards extended in place, watermark
+    advanced only at the final manifest write). An intent journal
+    (``append_intent.json``) brackets the sequence — if a previous
+    append died mid-way, the journal is still present and the next
+    ``run_append`` REFUSES to run (a blind retry would re-ingest the
+    interrupted run's rows on top of the already-extended shards).
+    Recovery: regenerate the store (or restore it from backup), which
+    clears the journal.
+    """
+    cfg = cfg or GenerationConfig()
+    t0 = time.perf_counter()
+    store = TraceStore(out_dir)
+    intent = os.path.join(out_dir, "append_intent.json")
+    if os.path.exists(intent):
+        raise ValueError(
+            "a previous append was interrupted mid-way (append_intent."
+            "json present) — the store may hold partially ingested rows "
+            "and the watermark was not advanced, so retrying would "
+            "double-ingest them; regenerate or restore the store")
+    man = store.read_manifest()
+    if "db_paths" not in man.extra or "db_rowid_hi" not in man.extra:
+        raise ValueError(
+            "store manifest records no ingest watermarks (generated by a "
+            "pre-append engine) — appending would re-ingest or drop rows "
+            "silently; regenerate the store once to make it appendable")
+    old_plan = ShardPlan(man.t_start, man.t_end, man.n_shards)
+    window = int(man.extra.get("join_window_ns", cfg.join_window_ns))
+    cap = int(man.extra.get("join_cap", cfg.join_cap))
+    all_dbs = [os.path.abspath(p) for p in man.extra["db_paths"]]
+    rowid_hi = {os.path.abspath(k): v
+                for k, v in man.extra["db_rowid_hi"].items()}
+
+    parts = []
+    hi = man.t_end                      # plan end from INGESTED rows only
+    for p in db_paths:
+        ap = os.path.abspath(p)
+        # snapshot the NEW watermark before reading: rows a live profiler
+        # appends mid-read stay above it and are picked up by the NEXT
+        # append instead of being skipped forever
+        wm_new = table_rowid_hi(p)
+        if ap in all_dbs:
+            src = all_dbs.index(ap)
+            wm = rowid_hi.get(ap)
+            if wm is None:
+                raise ValueError(
+                    f"no ingest watermark recorded for known DB {ap!r} — "
+                    "regenerate the store to make it appendable")
+            tr = read_rank_db(p, rank=src, min_rowids=(wm[0], wm[1]),
+                              max_rowids=wm_new)
+        else:
+            src = len(all_dbs)
+            all_dbs.append(ap)
+            tr = read_rank_db(p, rank=src, max_rowids=wm_new)
+        if len(tr.kernels) and int(tr.kernels.start.min()) < man.t_start:
+            raise ValueError(
+                f"DB {ap!r} holds kernels before the store's t_start "
+                f"({int(tr.kernels.start.min())} < {man.t_start}) — the "
+                "plan only extends FORWARD (boundaries are immutable); "
+                "regenerate to cover an earlier time range")
+        rowid_hi[ap] = list(wm_new)
+        if len(tr.kernels):
+            hi = max(hi, int(tr.kernels.end.max()))
+        bw = {g.id: g.bandwidth for g in tr.gpus}
+        sm = {g.id: g.sm_count for g in tr.gpus}
+        parts.append(window_left_join(tr.kernels, tr.memcpys, bw, sm,
+                                      window, cap, src_rank=src))
+
+    # the plan extends exactly as far as the rows ingested THIS round —
+    # deriving it from an unbounded range query would race a live writer
+    plan = old_plan.extended_to(hi)
+    if plan.n_shards - man.n_shards > max_new_shards:
+        # one clock-skewed/corrupt far-future row would otherwise
+        # materialize a shard FILE per interval up to its timestamp
+        raise ValueError(
+            f"append would create {plan.n_shards - man.n_shards} new "
+            f"shards (> max_new_shards={max_new_shards}) — a far-future "
+            "timestamp in the appended rows? Inspect the data or raise "
+            "max_new_shards explicitly")
+    cols = _concat_columns(parts)
+    sid = plan.shard_of(cols["k_start"].astype(np.int64))
+    # everything below MUTATES the store: bracket it with the intent
+    # journal so an interrupted append is detected instead of retried
+    TraceStore._atomic_write(intent, json.dumps({
+        "old_t_end": man.t_end, "new_t_end": plan.t_end,
+        "old_watermarks": man.extra["db_rowid_hi"],
+        "new_watermarks": rowid_hi}, indent=2).encode())
+    dirty: List[int] = []
+    appended = 0
+    for s in (np.unique(sid).tolist() if len(sid) else []):
+        mask = sid == s
+        new_cols = {c: cols[c][mask] for c in SHARD_COLUMNS}
+        if store.has_shard(int(s)):
+            old_cols = store.read_shard(int(s))
+            new_cols = {c: np.concatenate([old_cols[c], new_cols[c]])
+                        for c in SHARD_COLUMNS}
+            if s < man.n_shards:
+                dirty.append(int(s))
+        store.write_shard(int(s), new_cols)
+        appended += int(mask.sum())
+    # every new shard index gets a file, empty ones included — same
+    # layout as a fresh generation
+    for s in range(man.n_shards, plan.n_shards):
+        if not store.has_shard(s):
+            store.write_shard(
+                s, {c: np.zeros((0,), np.float64) for c in SHARD_COLUMNS})
+
+    owner = list(man.shard_owner) + [
+        int(i % max(man.n_ranks, 1))
+        for i in range(man.n_shards, plan.n_shards)]
+    extra = dict(man.extra)
+    extra["db_paths"] = all_dbs
+    extra["db_rowid_hi"] = rowid_hi
+    store.write_manifest(StoreManifest(
+        t_start=plan.t_start, t_end=plan.t_end, n_shards=plan.n_shards,
+        n_ranks=man.n_ranks, partitioning=man.partitioning,
+        columns=man.columns, shard_owner=owner, extra=extra))
+    os.remove(intent)                    # append committed atomically
+    return AppendReport(
+        n_shards=plan.n_shards,
+        n_new_shards=plan.n_shards - man.n_shards,
+        dirty_shards=sorted(dirty), appended_rows=appended,
+        t_start=plan.t_start, t_end=plan.t_end,
         seconds=time.perf_counter() - t0)

@@ -16,8 +16,23 @@ reducer — moments always, plus the quantile sketch when requested (whose
 additive histogram counts ride the same psum collective on the jax
 backend). ``anomaly_score`` picks what the IQR fences run on: a moment
 score ("mean"/"std"/...) or a distribution score ("p99"/"iqr"/...).
-Merged suites are cached in the TraceStore (``summary_{key}.npz``); repeat
-aggregations over an unchanged store are answered without touching shards.
+
+Incremental engine. The host backends (serial/process) aggregate through
+the two-level cache in :mod:`repro.core.aggregation`: an unchanged store
+is answered from the merged summary (``summary_{key}.npz``, validated
+against the shard fingerprints it covers); a changed store rescans ONLY
+the dirty/new shards and merges them with the clean shards' cached
+partials (``partial_{idx}_{qkey}.npy``) — bit-identical to a cold run.
+:meth:`VariabilityPipeline.append` closes the automated-workflow loop:
+append new trace (grown rank DBs or late-arriving ones) onto an existing
+store, delta-aggregate in O(dirty shards), re-fence anomalies.
+
+Scheduling. The process backend's aggregation phase is a work-stealing
+chunked queue (``imap_unordered`` over small shard chunks), not a static
+per-rank ``pool.map`` block — a straggler shard (an anomaly burst with
+10x the rows) delays only its own chunk, not the whole phase barrier.
+Result equality is unaffected: partials are merged in shard-index order
+regardless of completion order.
 
 The phases and their timings are reported separately (the paper's Fig 1c
 plots Data Generation vs Data Aggregation duration vs #ranks).
@@ -29,19 +44,21 @@ import dataclasses
 import multiprocessing as mp
 import os
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from .aggregation import (AggregationResult, BinStats, densify_partials,
-                          finalize_aggregation, load_rank_grouped,
-                          lookup_summary, DEFAULT_METRIC,
+from .aggregation import (AggregationResult, BinStats, compute_partials,
+                          finalize_aggregation, lookup_summary,
+                          run_incremental, DEFAULT_METRIC,
                           DEFAULT_REDUCERS)
 from .reducers import QuantileSketch, normalize_reducers
 from .anomaly import (IQRReport, anomalous_bins, is_quantile_score,
                       top_variability_bins)
-from .generation import (GenerationConfig, GenerationReport, generate_rank,
-                         global_time_range, run_generation)
+from .events import table_rowid_hi
+from .generation import (AppendReport, GenerationConfig, GenerationReport,
+                         generate_rank, global_time_range, run_append,
+                         run_generation)
 from .sharding import ShardPlan, assignment, owner_of_shards
 from .tracestore import StoreManifest, TraceStore
 
@@ -84,7 +101,8 @@ class PipelineConfig:
 
 @dataclasses.dataclass
 class PipelineResult:
-    generation: GenerationReport
+    # a full generation's report, or an AppendReport from append()
+    generation: Union[GenerationReport, AppendReport]
     aggregation: AggregationResult
     anomalies: IQRReport
     top_variability: np.ndarray
@@ -107,13 +125,16 @@ def _gen_worker(args) -> Dict[str, int]:
                          store, cfg, contiguous=(cfg.partitioning == "block"))
 
 
-def _agg_worker(args):
-    store_dir, shard_ids, plan_tuple, metrics, group_by, reducers = args
+def _partial_worker(args):
+    """One work-queue chunk: compute (and, with ``qkey``, persist) the
+    partials for a handful of dirty shards. Atomic partial writes make a
+    dying worker leave complete cache entries or none."""
+    store_dir, shard_ids, plan_tuple, metrics, group_by, reducers, \
+        qkey = args
     plan = ShardPlan(*plan_tuple)
     store = TraceStore(store_dir)
-    part, kinds = load_rank_grouped(store, shard_ids, plan, metrics,
-                                    group_by, reducers=reducers)
-    return part, {int(k): v for k, v in kinds.items()}
+    return compute_partials(store, shard_ids, plan, metrics, group_by,
+                            reducers, qkey)
 
 
 class VariabilityPipeline:
@@ -157,7 +178,11 @@ class VariabilityPipeline:
             columns=SHARD_COLUMNS, shard_owner=owner.tolist(),
             extra={"interval_ns": gen.interval_ns,
                    "join_window_ns": gen.join_window_ns,
-                   "join_cap": gen.join_cap}))
+                   "join_cap": gen.join_cap,
+                   "db_paths": [os.path.abspath(p) for p in db_paths],
+                   "db_rowid_hi": {
+                       os.path.abspath(p): list(table_rowid_hi(p))
+                       for p in db_paths}}))
 
         # Table-1 inventory straight from the rank workers — the rank range
         # queries partition the kernel/memcpy tables, so their counts sum
@@ -173,6 +198,11 @@ class VariabilityPipeline:
 
     # -- phase 2 -------------------------------------------------------------
     def aggregate(self, store_dir: str) -> AggregationResult:
+        """Incremental phase 2: summary hit → done; otherwise recompute
+        only dirty/new shards (work-stealing pool on the process backend)
+        and merge them with the clean shards' cached partials. The jax
+        backend keeps its full on-device scan — raw events must reach the
+        collectives — but shares the summary cache."""
         cfg = self.cfg
         t0 = time.perf_counter()
         store = TraceStore(store_dir)
@@ -196,32 +226,49 @@ class VariabilityPipeline:
             if cached is not None:
                 return cached
 
-        shard_sets = assignment(man.n_shards, cfg.n_ranks, "block")
-
         if cfg.backend == "jax":
+            shard_sets = assignment(man.n_shards, cfg.n_ranks, "block")
             all_keys, dense, kind_parts = self._aggregate_jax(
                 store, shard_sets, plan, metrics, suite)
-        else:
-            if cfg.backend == "process":
-                jobs = [(store_dir, shard_sets[r].tolist(),
-                         (plan.t_start, plan.t_end, plan.n_shards),
-                         metrics, cfg.group_by, suite)
-                        for r in range(cfg.n_ranks)]
-                with mp.get_context(_MP_CONTEXT).Pool(
-                        min(cfg.n_ranks, os.cpu_count() or 1)) as pool:
-                    results = pool.map(_agg_worker, jobs)
-            else:
-                results = [load_rank_grouped(
-                    store, shard_sets[r], plan, metrics, cfg.group_by,
-                    reducers=suite)
-                    for r in range(cfg.n_ranks)]
-            partials = [p for p, _ in results]
-            kind_parts = [k for _, k in results]
-            all_keys, dense = densify_partials(partials)
+            return finalize_aggregation(store, plan, metrics, cfg.group_by,
+                                        all_keys, dense, kind_parts, key,
+                                        t0, reducers=suite)
 
-        return finalize_aggregation(store, plan, metrics, cfg.group_by,
-                                    all_keys, dense, kind_parts, key, t0,
-                                    reducers=suite)
+        compute_fn = None
+        if cfg.backend == "process":
+            def compute_fn(dirty, qkey):
+                return self._compute_partials_pool(
+                    store_dir, dirty, plan, metrics, suite, qkey)
+        return run_incremental(store, man.n_shards, plan, metrics,
+                               cfg.group_by, cfg.n_ranks,
+                               cfg.use_summary_cache, key, t0,
+                               reducers=suite, compute_fn=compute_fn)
+
+    def _compute_partials_pool(self, store_dir: str, dirty: List[int],
+                               plan: ShardPlan, metrics: List[str],
+                               suite, qkey: Optional[str]):
+        """Work-stealing scheduler for dirty-shard recomputation: the
+        shard list is split into small chunks consumed from a shared
+        queue (``imap_unordered``), so a straggler chunk — an anomaly-
+        burst shard with 10x the rows — delays only itself, not a whole
+        static rank block like the old per-rank ``pool.map``. Completion
+        order is irrelevant: the merge sorts partials by shard index, so
+        the result is bit-identical to the serial backend."""
+        if not dirty:
+            return []
+        workers = min(self.cfg.n_ranks, os.cpu_count() or 1)
+        # ~4 chunks per worker: fine enough to absorb skew, coarse enough
+        # to amortize task dispatch
+        chunk = max(1, -(-len(dirty) // (workers * 4)))
+        jobs = [(store_dir, dirty[i:i + chunk],
+                 (plan.t_start, plan.t_end, plan.n_shards),
+                 metrics, self.cfg.group_by, suite, qkey)
+                for i in range(0, len(dirty), chunk)]
+        out = []
+        with mp.get_context(_MP_CONTEXT).Pool(workers) as pool:
+            for res in pool.imap_unordered(_partial_worker, jobs):
+                out.extend(res)
+        return out
 
     def _aggregate_jax(self, store: TraceStore, shard_sets,
                        plan: ShardPlan, metrics: List[str],
@@ -311,6 +358,22 @@ class VariabilityPipeline:
     # -- end to end ----------------------------------------------------------
     def run(self, db_paths: Sequence[str], work_dir: str) -> PipelineResult:
         gen = self.generate(db_paths, work_dir)
+        return self._analyze(gen, work_dir)
+
+    def append(self, db_paths: Sequence[str],
+               work_dir: str) -> PipelineResult:
+        """The automated-workflow loop: append new trace data (grown rank
+        DBs and/or late-arriving ones) onto the EXISTING store in
+        ``work_dir``, delta-aggregate — clean shards come from the
+        partial cache, only dirty/new shard files are rescanned — and
+        re-fence the anomalies. End-to-end O(dirty shards); the refreshed
+        result is bit-identical to a cold full re-analysis (host
+        backends)."""
+        rep = run_append(db_paths, work_dir)
+        return self._analyze(rep, work_dir)
+
+    def _analyze(self, gen: Union[GenerationReport, AppendReport],
+                 work_dir: str) -> PipelineResult:
         agg = self.aggregate(work_dir)
         bounds = agg.plan.boundaries()
         report = anomalous_bins(agg, k=self.cfg.iqr_k,

@@ -138,6 +138,16 @@ class MergeableReducer:
         for f in self.fields:
             getattr(self, f)[idx] = getattr(seg, f)
 
+    def merge_at(self, idx: np.ndarray, seg: "MergeableReducer") -> None:
+        """In-place sparse merge: combine ``seg`` (whose bin axis is the
+        rows ``idx``) into this state's rows ``idx``, leaving every other
+        bin untouched. Same per-row semantics as :meth:`merge` — this is
+        how the incremental engine folds a shard's sparse partial into a
+        dense rank state without materializing a full-width tensor per
+        shard. Subclasses must override (field ops differ: sums add,
+        min/max clamp)."""
+        raise NotImplementedError
+
     # -- summary-cache (de)serialization ------------------------------------
     @classmethod
     def payload_prefix(cls) -> str:
@@ -187,6 +197,13 @@ class BinStats(MergeableReducer):
             sumsq=self.sumsq + other.sumsq,
             min=np.minimum(self.min, other.min),
             max=np.maximum(self.max, other.max))
+
+    def merge_at(self, idx: np.ndarray, seg: "BinStats") -> None:
+        self.count[idx] += seg.count
+        self.sum[idx] += seg.sum
+        self.sumsq[idx] += seg.sumsq
+        self.min[idx] = np.minimum(self.min[idx], seg.min)
+        self.max[idx] = np.maximum(self.max[idx], seg.max)
 
     def merge_groups(self) -> "BinStats":
         """Reduce the group axis of a (n_bins, G, M) tensor — every sample
@@ -317,6 +334,9 @@ class QuantileSketch(MergeableReducer):
 
     def merge(self, other: "QuantileSketch") -> "QuantileSketch":
         return QuantileSketch(counts=self.counts + other.counts)
+
+    def merge_at(self, idx: np.ndarray, seg: "QuantileSketch") -> None:
+        self.counts[idx] += seg.counts
 
     def merge_groups(self) -> "QuantileSketch":
         if self.counts.ndim < 4:

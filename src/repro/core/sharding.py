@@ -51,9 +51,17 @@ class ShardPlan:
         return int(e[idx]), int(e[idx + 1])
 
     def shard_of(self, timestamps: np.ndarray) -> np.ndarray:
-        """Map int64 ns timestamps -> shard index (clipped into range)."""
+        """Map int64 ns timestamps -> shard index (clipped into range).
+
+        The offset from ``t_start`` is taken in int64 BEFORE any float
+        conversion: epoch-scale ns (~1.7e18) round to multiples of 256 in
+        float64, so converting the absolute timestamp first mis-binned
+        events within ~256 ns of a shard boundary. The small relative
+        offset is exactly representable."""
         ts = np.asarray(timestamps)
-        rel = (ts.astype(np.float64) - self.t_start) / self.width
+        if ts.dtype.kind == "f":
+            ts = ts.astype(np.int64)
+        rel = (ts - self.t_start).astype(np.float64) / self.width
         return np.clip(rel.astype(np.int64), 0, self.n_shards - 1)
 
     @staticmethod
@@ -64,6 +72,21 @@ class ShardPlan:
         return ShardPlan(t_start=t_start,
                          t_end=int(t_start + n * interval_ns),
                          n_shards=n)
+
+    def extended_to(self, t_end: int) -> "ShardPlan":
+        """Append-mode re-derivation: the smallest plan covering
+        ``[t_start, >= t_end)`` whose boundaries keep THIS plan's shard
+        boundaries as an exact prefix (same integral shard width, more
+        shards). Existing shard files therefore keep their indices and
+        time bounds; only shards past the old ``t_end`` are new."""
+        if t_end <= self.t_end:
+            return self
+        width = (self.t_end - self.t_start) / self.n_shards
+        if width != int(width):
+            raise ValueError(
+                f"plan with non-integral shard width {width!r} ns cannot "
+                "be extended without moving existing boundaries")
+        return ShardPlan.from_interval(self.t_start, t_end, int(width))
 
 
 def block_assignment(n_shards: int, n_ranks: int) -> List[np.ndarray]:

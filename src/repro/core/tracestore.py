@@ -12,45 +12,71 @@ self-contained columnar store with the same contract:
 Files are written atomically (tmp + rename) so a crashed writer never leaves
 a torn shard — part of the fault-tolerance story.
 
-Summary cache
--------------
-Aggregation results are memoized as ``summary_{key}.npz`` files next to the
-shards. The 16-hex ``key`` is a sha256 over a canonical JSON blob of
+Two-level derived-data cache
+----------------------------
+The incremental analysis engine keeps TWO kinds of derived files next to
+the shards, both round-tripped through the reducer ``to_payload`` /
+``from_payload`` contract (:mod:`repro.core.reducers`):
 
-  (SUMMARY_VERSION, (t_start, t_end, n_shards), metrics, group_by,
-   precision, reducer suite, shard fingerprint)
+``partial_{idx:06d}_{qkey}.npy`` — per-shard partial cache
+    One shard's pre-merge reducer states for one query. The 16-hex
+    ``qkey`` hashes the QUERY only: (SUMMARY_VERSION, plan triple,
+    metrics, group_by, reducer suite). The payload embeds the
+    ``(size, mtime_ns)`` fingerprint of the shard file it was computed
+    from; a fingerprint mismatch at read time is a miss, so a partial can
+    never be served for rewritten shard data. ``write_shard`` invalidates
+    ONLY the written shard's partials (one prefix-filtered directory
+    scan; the unlinks are bounded by that shard's own entries, and no
+    summary files are touched) — which is what makes appending new trace
+    O(dirty shards): every clean shard's partial survives and the next
+    aggregation merges it back in without touching the raw shard.
+    On disk the payload is PACKED into one ``.npy`` uint8 buffer
+    (length-prefixed json index + concatenated array bytes) so a bulk
+    load costs a single sequential read — plain npz spends ~0.8 ms of
+    zipfile member overhead per ~20-array payload, which would rival
+    rescanning the shard and erase the incremental win. Logical payload
+    arrays (bin axis = the ``bins`` actually touched, so a partial is
+    O(rows-of-one-shard), not O(n_bins)):
 
-where the fingerprint is the sorted list of ``(shard_idx, size, mtime_ns)``
-stat triples — so rewriting ANY shard (or re-binning, or asking for a
-different metric set / group column / reducer suite) changes the key and
-the stale summary is simply never read again. The payload is a flat dict
-of numpy arrays:
+      ``version, t_start, t_end, n_shards``  engine + plan stamp
+      ``idx, fingerprint``                   shard index + (size, mtime_ns)
+      ``metrics, group_by, group_keys``      query + local group keys
+      ``reducers``                           suite in order
+      ``bins``                               (B,) int64 bins present
+      ``count,sum,...`` / ``quantile__counts``  (B, G, M[, buckets])
+      ``kind_keys, kind_bytes``              (K,), (K, n_bins) byte bins
 
-  ``version``                     scalar int — SUMMARY_VERSION at write time
-  ``t_start, t_end, n_shards``    scalar int64 — the plan the moments use
-  ``metrics``                     (M,) unicode — metric column names
-  ``group_by``                    scalar unicode ("" = no grouping)
-  ``group_keys``                  (G,) float64 — group column values
-  ``reducers``                    (R,) unicode — reducer suite in order
-  ``count,sum,sumsq,min,max``     (n_bins, G, M) float64 — moments tensor
-  ``quantile__counts``            (n_bins, G, M, B) float64 — log-bucket
-                                  histogram (only when "quantile" is in
-                                  the suite; each extra reducer writes its
-                                  arrays under a ``{name}__`` prefix)
-  ``kind_keys``                   (K,) int64 — memcpy copyKind codes
-  ``kind_bytes``                  (K, n_bins) float64 — per-kind byte bins
+``summary_{key}.npz`` — merged-suite summary cache
+    The fully merged result of one query over the whole store. The
+    ``key`` hashes the same query blob plus ``precision`` (host float64
+    paths share ``"exact"``; the jax float32 collective path is keyed
+    apart). The shard fingerprint is NOT in the key any more: the payload
+    records the ``covered`` fingerprint list — sorted
+    ``(shard_idx, size, mtime_ns)`` triples — and
+    :func:`repro.core.aggregation.lookup_summary` treats any mismatch
+    with the store's current fingerprint as a miss. A recompute then
+    overwrites the same file, so stale summaries never accumulate per
+    query; summaries orphaned by shard rewrites are garbage-collected
+    once at manifest-write time (:meth:`TraceStore.gc_stale`), not on
+    every shard write. A payload whose embedded ``version`` differs from
+    the running SUMMARY_VERSION is likewise a miss, never a crash.
+    Payload layout (on top of the bookkeeping arrays above):
 
-A payload whose embedded ``version`` differs from the running
-SUMMARY_VERSION (a file written by an older engine) is treated as a cache
-miss by :func:`repro.core.aggregation.lookup_summary` — never a crash.
+      ``count,sum,sumsq,min,max``     (n_bins, G, M) float64 moments
+      ``{name}__...``                 any extra reducer's arrays
+      ``covered``                     (S, 3) int64 fingerprint triples
+
 Summaries are O(n_bins) — repeat queries are answered without touching the
-raw shards (see :func:`repro.core.aggregation.run_aggregation`).
+raw shards; partials make a CHANGED store answerable in O(dirty shards)
+(see :func:`repro.core.aggregation.run_aggregation`).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import hashlib
+import io
 import json
 import os
 import tempfile
@@ -58,10 +84,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-# Bump when the summary payload layout changes; old caches then miss.
+# Bump when the summary/partial payload layout changes; old caches miss.
 # v2: pluggable reducer suite — "reducers" array + per-reducer prefixed
 #     payload arrays joined the v1 moment tensor.
-SUMMARY_VERSION = 2
+# v3: incremental engine — summaries record the ``covered`` shard
+#     fingerprints instead of hashing them into the key; per-shard
+#     ``partial_*`` payloads share the version stamp.
+SUMMARY_VERSION = 3
 
 
 def shard_filename(idx: int) -> str:
@@ -70,6 +99,14 @@ def shard_filename(idx: int) -> str:
 
 def summary_filename(key: str) -> str:
     return f"summary_{key}.npz"
+
+
+def partial_filename(idx: int, qkey: str) -> str:
+    # .npy, not .npz: a partial is a single packed buffer (see
+    # TraceStore._pack_arrays) so the bulk delta load costs ONE read per
+    # clean shard — zipfile's per-member overhead at ~20 arrays/payload
+    # would rival rescanning the shard.
+    return f"partial_{idx:06d}_{qkey}.npy"
 
 
 @dataclasses.dataclass
@@ -92,18 +129,29 @@ class StoreManifest:
 
 
 class TraceStore:
-    """Directory of columnar shard files + manifest + summary cache."""
+    """Directory of columnar shard files + manifest + partial/summary cache.
+
+    ``io_counts`` tallies this instance's file traffic (``shard_reads``,
+    ``partial_reads``, ``partial_writes``, ``summary_reads``,
+    ``summary_writes``) — the incremental-path tests assert through it
+    that a delta aggregation touches only dirty shard files.
+    """
 
     MANIFEST = "manifest.json"
 
     def __init__(self, root: str):
         self.root = root
         os.makedirs(root, exist_ok=True)
+        self.io_counts: collections.Counter = collections.Counter()
 
     # -- manifest ----------------------------------------------------------
     def write_manifest(self, manifest: StoreManifest) -> None:
+        """Persist the manifest, then garbage-collect derived files
+        orphaned by whatever shard writes preceded it (the once-per-batch
+        replacement for the old per-shard-write summary purge)."""
         self._atomic_write(os.path.join(self.root, self.MANIFEST),
                            manifest.to_json().encode())
+        self.gc_stale()
 
     def read_manifest(self) -> StoreManifest:
         with open(os.path.join(self.root, self.MANIFEST)) as f:
@@ -113,63 +161,166 @@ class TraceStore:
     def write_shard(self, idx: int, columns: Dict[str, np.ndarray]) -> str:
         """Atomically write one shard's columns.
 
-        Writing any shard changes the store fingerprint, so every existing
-        summary key becomes unreachable — prune them here (best-effort;
-        concurrent rank writers may race on the same stale files) so
-        repeated regenerations don't accumulate dead cache entries."""
+        Invalidation is per-shard: only THIS shard's partial-cache files
+        are unlinked. Summaries validate their ``covered`` fingerprints at
+        read time and are swept by :meth:`gc_stale` at manifest-write
+        time, so concurrent rank writers no longer race on a store-wide
+        cache purge here."""
         path = os.path.join(self.root, shard_filename(idx))
         self._atomic_savez(path, columns)
-        self.clear_summaries()
+        self.clear_partials(idx)
         return path
 
     def read_shard(self, idx: int) -> Dict[str, np.ndarray]:
         path = os.path.join(self.root, shard_filename(idx))
-        with np.load(path) as z:
-            return {k: z[k] for k in z.files}
+        self.io_counts["shard_reads"] += 1
+        return self._load_npz(path)
 
     def has_shard(self, idx: int) -> bool:
         return os.path.exists(os.path.join(self.root, shard_filename(idx)))
 
     def shard_indices(self) -> List[int]:
         out = []
-        for name in sorted(os.listdir(self.root)):
+        for name in os.listdir(self.root):
             if name.startswith("shard_") and name.endswith(".npz"):
                 out.append(int(name[len("shard_"):-len(".npz")]))
-        return out
+        # numeric sort, NOT filename sort: {idx:06d} widens past 6 digits
+        # at 1e6+ shards and lexicographic order would diverge (breaking
+        # the covered-fingerprint compare, which assumes index order)
+        return sorted(out)
 
-    # -- summary cache -----------------------------------------------------
+    # -- fingerprints ------------------------------------------------------
+    def stat_shard(self, idx: int) -> Optional[Tuple[int, int, int]]:
+        """(idx, size, mtime_ns) for one shard file; None if absent."""
+        path = os.path.join(self.root, shard_filename(idx))
+        try:
+            st = os.stat(path)
+        except FileNotFoundError:
+            return None
+        return (int(idx), int(st.st_size), int(st.st_mtime_ns))
+
     def shard_fingerprint(self) -> List[Tuple[int, int, int]]:
         """Sorted (idx, size, mtime_ns) for every shard file — cheap O(n)
         stat pass; any shard rewrite changes the fingerprint."""
         out = []
         for idx in self.shard_indices():
-            st = os.stat(os.path.join(self.root, shard_filename(idx)))
-            out.append((idx, int(st.st_size), int(st.st_mtime_ns)))
+            fp = self.stat_shard(idx)
+            if fp is not None:
+                out.append(fp)
         return out
+
+    # -- cache keys --------------------------------------------------------
+    @staticmethod
+    def _query_blob(plan_key: Sequence[int], metrics: Sequence[str],
+                    group_by: Optional[str],
+                    reducers: Sequence[str]) -> Dict:
+        return {
+            "version": SUMMARY_VERSION,
+            "plan": [int(x) for x in plan_key],
+            "metrics": list(metrics),
+            "group_by": group_by,
+            "reducers": list(reducers),
+        }
 
     def summary_key(self, plan_key: Sequence[int], metrics: Sequence[str],
                     group_by: Optional[str],
                     precision: str = "exact",
                     reducers: Sequence[str] = ("moments",)) -> str:
-        """Cache key over (plan, metrics, group_by, precision, reducer
-        suite, shard fingerprint). ``precision`` keeps numerically
-        distinct producers apart: the float64 host paths (serial/process —
-        bit-identical to each other) share ``"exact"`` entries, while the
-        jax backend's float32 collective results are keyed ``"float32"``
-        so they are never served to a caller expecting exact moments.
-        ``reducers`` is part of the key so a moments-only summary is never
-        served to a caller that also needs the quantile sketch."""
-        blob = json.dumps({
-            "version": SUMMARY_VERSION,
-            "plan": [int(x) for x in plan_key],
-            "metrics": list(metrics),
-            "group_by": group_by,
-            "precision": precision,
-            "reducers": list(reducers),
-            "shards": self.shard_fingerprint(),
-        }, sort_keys=True)
-        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+        """Cache key over the QUERY: (plan, metrics, group_by, precision,
+        reducer suite). ``precision`` keeps numerically distinct producers
+        apart: the float64 host paths (serial/process — bit-identical to
+        each other) share ``"exact"`` entries, while the jax backend's
+        float32 collective results are keyed ``"float32"`` so they are
+        never served to a caller expecting exact moments. The shard
+        fingerprint is NOT part of the key — the payload's ``covered``
+        array is validated against the live store at read time instead,
+        so a recompute after a shard write overwrites the stale entry
+        in place."""
+        blob = self._query_blob(plan_key, metrics, group_by, reducers)
+        blob["precision"] = precision
+        return hashlib.sha256(
+            json.dumps(blob, sort_keys=True).encode()).hexdigest()[:16]
 
+    def partial_key(self, plan_key: Sequence[int], metrics: Sequence[str],
+                    group_by: Optional[str],
+                    reducers: Sequence[str] = ("moments",)) -> str:
+        """Per-shard partial-cache key over the same query blob (salted
+        apart from summary keys), EXCEPT that the plan is keyed by
+        ``(t_start, shard width)`` rather than its end: an append-extended
+        plan (``ShardPlan.extended_to``) keeps every existing boundary, so
+        pre-append partials remain addressable — and valid — after the
+        store grows. No precision axis: partials exist only for the exact
+        float64 host path — the jax backend reduces raw events
+        on-device."""
+        t_start, t_end, n_shards = (int(x) for x in plan_key)
+        blob = self._query_blob(
+            [t_start], metrics, group_by, reducers)
+        blob["kind"] = "partial"
+        blob["width"] = (t_end - t_start) / n_shards
+        return hashlib.sha256(
+            json.dumps(blob, sort_keys=True).encode()).hexdigest()[:16]
+
+    # -- per-shard partial cache -------------------------------------------
+    def write_partial(self, idx: int, qkey: str,
+                      arrays: Dict[str, np.ndarray]) -> str:
+        """Atomically persist one shard's partial payload, packed into a
+        single ``.npy`` buffer (see module docstring for the layout and
+        why). The engine-version and shard-fingerprint stamps are
+        duplicated into the packed header so liveness sweeps
+        (:meth:`gc_stale`) validate from an O(header) prefix read."""
+        meta = {}
+        if "version" in arrays:
+            meta["version"] = int(np.asarray(arrays["version"]))
+        if "fingerprint" in arrays:
+            meta["fingerprint"] = [
+                int(x) for x in np.asarray(arrays["fingerprint"]).ravel()]
+        path = os.path.join(self.root, partial_filename(idx, qkey))
+        self._atomic_save_packed(path, self._pack_arrays(arrays, meta))
+        self.io_counts["partial_writes"] += 1
+        return path
+
+    def read_partial(self, idx: int,
+                     qkey: str) -> Optional[Dict[str, np.ndarray]]:
+        """Partial payload for (shard, query), or None on a miss."""
+        path = os.path.join(self.root, partial_filename(idx, qkey))
+        try:
+            payload = self._unpack_arrays(np.load(path))
+        except (OSError, ValueError, TypeError, KeyError):
+            return None                # absent or torn/corrupt -> miss
+        self.io_counts["partial_reads"] += 1
+        return payload
+
+    def has_partial(self, idx: int, qkey: str) -> bool:
+        return os.path.exists(
+            os.path.join(self.root, partial_filename(idx, qkey)))
+
+    def partial_names(self, idx: Optional[int] = None) -> List[str]:
+        """Partial-cache filenames, optionally for one shard index.
+
+        One unsorted ``scandir`` pass filtered by prefix — a directory
+        scan, not a per-file stat; with a per-shard ``idx`` the unlink
+        work that follows is bounded by that shard's own entries."""
+        prefix = ("partial_" if idx is None else f"partial_{idx:06d}_")
+        with os.scandir(self.root) as it:
+            names = [e.name for e in it
+                     if e.name.startswith(prefix)
+                     and e.name.endswith(".npy")]
+        return sorted(names)
+
+    def clear_partials(self, idx: Optional[int] = None) -> int:
+        """Drop cached partials — for one shard (``write_shard``'s
+        per-shard invalidation) or the whole store. Tolerant of a
+        concurrent writer unlinking the same files."""
+        n = 0
+        for name in self.partial_names(idx):
+            try:
+                os.remove(os.path.join(self.root, name))
+                n += 1
+            except FileNotFoundError:
+                pass
+        return n
+
+    # -- summary cache -----------------------------------------------------
     def has_summary(self, key: str) -> bool:
         return os.path.exists(os.path.join(self.root, summary_filename(key)))
 
@@ -178,6 +329,7 @@ class TraceStore:
         """Atomically persist one summary payload (see module docstring)."""
         path = os.path.join(self.root, summary_filename(key))
         self._atomic_savez(path, arrays)
+        self.io_counts["summary_writes"] += 1
         return path
 
     def read_summary(self, key: str) -> Optional[Dict[str, np.ndarray]]:
@@ -185,8 +337,8 @@ class TraceStore:
         path = os.path.join(self.root, summary_filename(key))
         if not os.path.exists(path):
             return None
-        with np.load(path) as z:
-            return {k: z[k] for k in z.files}
+        self.io_counts["summary_reads"] += 1
+        return self._load_npz(path)
 
     def summary_keys(self) -> List[str]:
         out = []
@@ -207,7 +359,134 @@ class TraceStore:
                 pass
         return n
 
+    # -- garbage collection ------------------------------------------------
+    def gc_stale(self) -> int:
+        """One sweep dropping derived files the live store can no longer
+        serve: summaries whose ``covered`` fingerprints (or version) no
+        longer match, and partials whose embedded shard fingerprint is
+        stale or whose shard file is gone. Runs once per manifest write —
+        the amortized replacement for the old purge-on-every-shard-write.
+        Returns the number of files removed."""
+        removed = 0
+        current = {fp[0]: fp for fp in self.shard_fingerprint()}
+        cur_sorted = sorted(current.values())
+        for key in self.summary_keys():
+            path = os.path.join(self.root, summary_filename(key))
+            if not self._summary_is_live(path, cur_sorted):
+                removed += self._quiet_remove(path)
+        for name in self.partial_names():
+            path = os.path.join(self.root, name)
+            # split, don't slice: {idx:06d} widens past 6 digits at 1e6+
+            idx = int(name.split("_")[1])
+            if not self._partial_is_live(path, current.get(idx)):
+                removed += self._quiet_remove(path)
+        return removed
+
+    @staticmethod
+    def _summary_is_live(path: str, covered_now: List[Tuple[int, int, int]],
+                         ) -> bool:
+        try:
+            with np.load(path) as z:
+                if int(z["version"]) != SUMMARY_VERSION:
+                    return False
+                covered = z["covered"]
+        except (KeyError, OSError, ValueError):
+            return False
+        return covered.shape == (len(covered_now), 3) and bool(
+            np.array_equal(covered,
+                           np.asarray(covered_now, np.int64).reshape(-1, 3)))
+
+    @classmethod
+    def _partial_is_live(cls, path: str,
+                         fp: Optional[Tuple[int, int, int]]) -> bool:
+        if fp is None:
+            return False              # shard file gone
+        try:
+            meta = cls._read_packed_head(path).get("meta", {})
+        except (KeyError, OSError, ValueError):
+            return False
+        return (int(meta.get("version", -1)) == SUMMARY_VERSION
+                and meta.get("fingerprint") == [int(x) for x in fp])
+
+    @staticmethod
+    def _quiet_remove(path: str) -> int:
+        try:
+            os.remove(path)
+            return 1
+        except FileNotFoundError:
+            return 0
+
     # -- util ----------------------------------------------------------------
+    @staticmethod
+    def _load_npz(path: str) -> Dict[str, np.ndarray]:
+        """np.load over an in-memory copy of the file — one sequential
+        disk read instead of zipfile's per-member seek/tell traffic
+        (~2x on plain npz shards/summaries)."""
+        with open(path, "rb") as f:
+            buf = io.BytesIO(f.read())
+        with np.load(buf) as z:
+            return {k: z[k] for k in z.files}
+
+    @staticmethod
+    def _pack_arrays(arrays: Dict[str, np.ndarray],
+                     meta: Optional[Dict] = None) -> np.ndarray:
+        """Pack an array dict into ONE uint8 buffer:
+        ``[8-byte LE header length][json header][concatenated array
+        bytes]`` — loadable with a single ``np.load`` regardless of how
+        many arrays the payload holds. The json header carries the array
+        index plus an optional small ``meta`` dict that
+        :meth:`_read_packed_head` can recover WITHOUT reading the array
+        bytes (how gc_stale validates a partial from its prefix)."""
+        index, chunks, off = [], [], 0
+        for k, v in arrays.items():
+            a = np.asarray(v)
+            if a.ndim:                 # ascontiguousarray promotes 0-d
+                a = np.ascontiguousarray(a)
+            b = a.tobytes()
+            index.append([k, a.dtype.str, list(a.shape), off, len(b)])
+            chunks.append(b)
+            off += len(b)
+        head = json.dumps({"meta": meta or {}, "arrays": index}).encode()
+        raw = len(head).to_bytes(8, "little") + head + b"".join(chunks)
+        return np.frombuffer(raw, np.uint8)
+
+    @staticmethod
+    def _unpack_arrays(packed: np.ndarray) -> Dict[str, np.ndarray]:
+        """Inverse of :meth:`_pack_arrays` (raises on a malformed
+        buffer — callers treat that as a cache miss)."""
+        raw = packed.tobytes()
+        n_head = int.from_bytes(raw[:8], "little")
+        index = json.loads(raw[8:8 + n_head].decode())["arrays"]
+        base = 8 + n_head
+        return {k: np.frombuffer(raw[base + o:base + o + n],
+                                 dtype=np.dtype(d)).reshape(s).copy()
+                for k, d, s, o, n in index}
+
+    @staticmethod
+    def _read_packed_head(path: str) -> Dict:
+        """Json header (meta + array index) of a packed ``.npy`` file,
+        read WITHOUT loading the array bytes — an O(header) prefix read
+        no matter how large the payload is."""
+        with open(path, "rb") as f:
+            magic = np.lib.format.read_magic(f)
+            if magic == (1, 0):
+                np.lib.format.read_array_header_1_0(f)
+            else:
+                np.lib.format.read_array_header_2_0(f)
+            n_head = int.from_bytes(f.read(8), "little")
+            return json.loads(f.read(n_head).decode())
+
+    def _atomic_save_packed(self, path: str, packed: np.ndarray) -> None:
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.save(f, packed)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+            raise
+
     def _atomic_savez(self, path: str, arrays: Dict[str, np.ndarray]) -> None:
         fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
         try:

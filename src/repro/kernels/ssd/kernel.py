@@ -64,7 +64,10 @@ def _ssd_kernel(x_ref, dta_ref, b_ref, c_ref, y_ref, state_ref, *,
     li = cum[:, None] - cum[None, :]             # (q, q) ≤ 0 on tril
     iota_i = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
     iota_j = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
-    L = jnp.where(iota_j <= iota_i, jnp.exp(li), 0.0)
+    causal = iota_j <= iota_i
+    # exp only over the masked (≤ 0) exponents — above the diagonal li > 0
+    # and exp would overflow to +inf (NaN through any AD of this kernel).
+    L = jnp.where(causal, jnp.exp(jnp.where(causal, li, 0.0)), 0.0)
     scores = jax.lax.dot_general(                # C Bᵀ : (q, q)
         C, B, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)

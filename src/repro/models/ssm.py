@@ -169,6 +169,11 @@ def ssd_scan(xs: jnp.ndarray, dt: jnp.ndarray, A_log: jnp.ndarray,
         iota_i = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
         iota_j = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
         causal = (iota_j <= iota_i)[None, :, None, None, :]
+        # Mask the exponent BEFORE exp: in the non-causal region li > 0
+        # grows with trained dt, exp overflows to +inf, and the outer
+        # where's backward then computes 0·inf = NaN (the hymba hybrid
+        # block trains dt large enough to hit this by ~step 12).
+        li = jnp.where(causal, li, 0.0)
         L = jnp.where(causal, jnp.exp(li), 0.0)         # (b,i,g,h,j)
         y_intra = jnp.einsum("bgij,bighj,bjghp->bighp",
                              scores, L, xg)

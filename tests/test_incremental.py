@@ -1,0 +1,503 @@
+"""Incremental analysis engine tests: append-then-delta bit-identity with
+a cold full aggregation, dirty-shard invalidation verified through the
+store's IO counters, work-queue scheduler equality on skewed shards, and
+crash-safety of the partial-cache atomic writes."""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (GenerationConfig, PipelineConfig, SyntheticSpec,
+                        TraceStore, VariabilityPipeline, append_rank_db,
+                        generate_synthetic, recovered, run_aggregation,
+                        run_append, run_generation, trace_remainder,
+                        truncate_trace, write_rank_db)
+from repro.core.sharding import ShardPlan
+from repro.core.tracestore import StoreManifest, partial_filename
+
+METRICS = ["k_stall", "m_duration"]
+SUITE = ("moments", "quantile")
+_NS = 1_000_000_000
+STAT_FIELDS = ("count", "sum", "sumsq", "min", "max")
+
+
+@pytest.fixture(scope="module")
+def growing_trace(tmp_path_factory):
+    """A growing profiler run: DB snapshots at 30 s, the full 40 s trace
+    arriving later at the SAME paths (profilers append in time order)."""
+    spec = SyntheticSpec(n_ranks=2, kernels_per_rank=4000,
+                         memcpys_per_rank=600, duration_s=40.0,
+                         n_anomaly_windows=2, seed=7)
+    ds = generate_synthetic(spec)
+    t0 = int(ds.traces[0].kernels.start.min())
+    cutoff = (t0 // _NS) * _NS + 30 * _NS        # interval-aligned
+    dbs = tmp_path_factory.mktemp("growing_dbs")
+    paths = [str(dbs / f"rank{tr.rank}.sqlite") for tr in ds.traces]
+    return ds, paths, cutoff
+
+
+def _write_snapshot(ds, paths, cutoff):
+    for tr, p in zip(ds.traces, paths):
+        write_rank_db(p, truncate_trace(tr, cutoff))
+
+
+def _grow_dbs(ds, paths, cutoff):
+    """Profiler growth model: APPEND the remaining events to the same DB
+    files (fresh larger rowids — what the ingest watermark keys on)."""
+    for tr, p in zip(ds.traces, paths):
+        append_rank_db(p, trace_remainder(tr, cutoff))
+
+
+def _base_store(ds, paths, cutoff, out_dir):
+    _write_snapshot(ds, paths, cutoff)
+    run_generation(paths, out_dir, n_ranks=2)
+    return TraceStore(out_dir)
+
+
+def _assert_results_equal(a, b):
+    for f in STAT_FIELDS:
+        np.testing.assert_array_equal(getattr(a.grouped, f),
+                                      getattr(b.grouped, f))
+    np.testing.assert_array_equal(a.group_keys, b.group_keys)
+    if "quantile" in a.reduced:
+        np.testing.assert_array_equal(a.reduced["quantile"].counts,
+                                      b.reduced["quantile"].counts)
+    assert set(a.copy_kind_bytes) == set(b.copy_kind_bytes)
+    for k in a.copy_kind_bytes:
+        np.testing.assert_array_equal(a.copy_kind_bytes[k],
+                                      b.copy_kind_bytes[k])
+
+
+# --- shard plan: boundary precision + append re-derivation ------------------
+# (here rather than test_sharding_plan.py so they run without hypothesis)
+
+def test_shard_of_exact_at_epoch_scale_boundaries():
+    """Regression: epoch-scale int64 ns (~1.7e18) round to multiples of
+    256 in float64, so converting the ABSOLUTE timestamp before
+    subtracting t_start mis-binned events within ~256 ns of a shard
+    boundary. The offset must be taken in int64 first."""
+    t0 = 1_700_000_000_000_000_000
+    plan = ShardPlan.from_interval(t0, t0 + 10 * _NS, _NS)
+    edges = plan.boundaries()
+    # probe every boundary +/- a few ns — exact binning required
+    deltas = np.asarray([-3, -2, -1, 0, 1, 2, 3], np.int64)
+    for b in range(1, plan.n_shards):
+        ts = edges[b] + deltas
+        sid = plan.shard_of(ts)
+        expect = np.where(deltas < 0, b - 1, b)
+        np.testing.assert_array_equal(sid, expect)
+    # float64-typed input (shard columns are float64) bins identically
+    # wherever the value itself is float64-representable
+    reps = (edges[3] + deltas)[np.asarray(
+        [int(float(v)) == int(v) for v in edges[3] + deltas])]
+    np.testing.assert_array_equal(
+        plan.shard_of(reps.astype(np.float64)), plan.shard_of(reps))
+
+
+def test_extended_to_preserves_boundary_prefix():
+    t0 = 1_700_000_000_000_000_000
+    plan = ShardPlan.from_interval(t0, t0 + 7 * _NS, _NS)
+    ext = plan.extended_to(t0 + 9 * _NS + 5)
+    assert ext.t_start == plan.t_start
+    assert ext.n_shards == 10                      # ceil to interval
+    np.testing.assert_array_equal(ext.boundaries()[:plan.n_shards + 1],
+                                  plan.boundaries())
+    assert plan.extended_to(plan.t_end) is plan    # no-op within range
+    ragged = ShardPlan(0, 10, 3)                   # non-integral width
+    with pytest.raises(ValueError):
+        ragged.extended_to(100)
+
+
+# --- append-mode ingest -----------------------------------------------------
+
+def test_append_extends_plan_without_moving_boundaries(growing_trace,
+                                                       tmp_path):
+    ds, paths, cutoff = growing_trace
+    store = _base_store(ds, paths, cutoff, str(tmp_path / "s"))
+    man0 = store.read_manifest()
+    old_edges = ShardPlan(man0.t_start, man0.t_end,
+                          man0.n_shards).boundaries()
+
+    _grow_dbs(ds, paths, cutoff)                 # DBs grow in place
+    rep = run_append(paths, store.root)
+    man1 = store.read_manifest()
+    assert rep.n_new_shards > 0
+    assert man1.n_shards == man0.n_shards + rep.n_new_shards
+    assert man1.t_start == man0.t_start and man1.t_end > man0.t_end
+    new_edges = ShardPlan(man1.t_start, man1.t_end,
+                          man1.n_shards).boundaries()
+    np.testing.assert_array_equal(new_edges[:len(old_edges)], old_edges)
+    # every new shard index has a file; owners extended, prefix untouched
+    assert store.shard_indices() == list(range(man1.n_shards))
+    assert man1.shard_owner[:man0.n_shards] == man0.shard_owner
+    assert rep.appended_rows > 0
+    # only the boundary shard may be dirtied (events spanning the
+    # snapshot cutoff flush late); everything else is new shards
+    assert set(rep.dirty_shards) <= {man0.n_shards - 1}
+
+
+def test_append_then_delta_equals_cold_full_bit_identical(growing_trace,
+                                                          tmp_path):
+    """The acceptance criterion: after append(), aggregate() merges cached
+    partials with the dirty/new rescan and matches a from-scratch cold
+    aggregation of the same store bit for bit (moments, quantile sketch,
+    transfer-kind bytes)."""
+    ds, paths, cutoff = growing_trace
+    store = _base_store(ds, paths, cutoff, str(tmp_path / "s"))
+    base = run_aggregation(store, metrics=METRICS, group_by="m_kind",
+                           reducers=SUITE)
+    assert not base.from_cache
+
+    _grow_dbs(ds, paths, cutoff)
+    run_append(paths, store.root)
+    delta = run_aggregation(TraceStore(store.root), metrics=METRICS,
+                            group_by="m_kind", reducers=SUITE)
+    assert not delta.from_cache
+    assert delta.partial_hits > 0
+
+    cold_store = TraceStore(store.root)
+    cold_store.clear_summaries()
+    cold_store.clear_partials()
+    cold = run_aggregation(cold_store, metrics=METRICS, group_by="m_kind",
+                           reducers=SUITE)
+    assert cold.partial_hits == 0
+    assert len(cold.recomputed_shards) > len(delta.recomputed_shards)
+    _assert_results_equal(delta, cold)
+
+
+def test_new_rank_db_dirties_existing_shards(growing_trace, tmp_path):
+    """A late-arriving profiling rank whose events lie inside the covered
+    range must extend the affected shard files and mark exactly those
+    dirty for the next delta."""
+    ds, paths, cutoff = growing_trace
+    store = _base_store(ds, paths, cutoff, str(tmp_path / "s"))
+    run_aggregation(store, metrics=METRICS)
+    man0 = store.read_manifest()
+
+    spec = dataclasses.replace(ds.spec, n_ranks=1, seed=99,
+                               kernels_per_rank=500, memcpys_per_rank=80)
+    late = generate_synthetic(spec)
+    late_path = str(tmp_path / "late_rank.sqlite")
+    write_rank_db(late_path, truncate_trace(late.traces[0], cutoff))
+    rep = run_append([late_path], store.root)
+    assert rep.n_new_shards == 0
+    assert len(rep.dirty_shards) > 0
+
+    fresh = TraceStore(store.root)
+    delta = run_aggregation(fresh, metrics=METRICS)
+    assert delta.recomputed_shards == rep.dirty_shards
+    assert fresh.io_counts["shard_reads"] == len(rep.dirty_shards)
+    assert delta.stats.count.sum() > man0.n_shards  # late rows included
+
+
+def test_backfill_into_covered_range_is_ingested(growing_trace, tmp_path):
+    """Regression (review finding): rows appended to a KNOWN DB whose
+    timestamps fall inside the already-covered time range (late profiler
+    flushes below the old plan end) must be ingested via the rowid
+    watermark — the old start-time query silently dropped them."""
+    ds, paths, cutoff = growing_trace
+    store = _base_store(ds, paths, cutoff, str(tmp_path / "s"))
+    first = run_aggregation(store, metrics=METRICS)
+    # late flush: 50 events strictly INSIDE the covered range
+    late = generate_synthetic(dataclasses.replace(
+        ds.spec, n_ranks=1, seed=41, kernels_per_rank=50,
+        memcpys_per_rank=10, duration_s=20.0))
+    append_rank_db(paths[0], late.traces[0])
+    rep = run_append(paths, store.root)
+    assert rep.n_new_shards == 0
+    assert rep.appended_rows >= 50
+    assert len(rep.dirty_shards) > 0
+    again = run_aggregation(TraceStore(store.root), metrics=METRICS)
+    assert again.stats.count.sum() == first.stats.count.sum() + \
+        rep.appended_rows
+
+
+def test_rowid_bounded_read_excludes_mid_read_appends(growing_trace,
+                                                      tmp_path):
+    """The live-writer contract: a read bounded by ``max_rowids`` must
+    not see rows appended after the watermark snapshot — they belong to
+    the NEXT append, never skipped, never double-ingested."""
+    from repro.core.events import read_rank_db, table_rowid_hi
+
+    ds, paths, cutoff = growing_trace
+    _write_snapshot(ds, paths, cutoff)
+    wm = table_rowid_hi(paths[0])
+    n_before = len(read_rank_db(paths[0], rank=0).kernels)
+    _grow_dbs(ds, paths, cutoff)                 # "mid-read" growth
+    bounded = read_rank_db(paths[0], rank=0, max_rowids=wm)
+    assert len(bounded.kernels) == n_before      # growth invisible
+    tail = read_rank_db(paths[0], rank=0, min_rowids=wm)
+    assert len(tail.kernels) == len(
+        read_rank_db(paths[0], rank=0).kernels) - n_before
+
+
+def test_append_rejects_db_with_events_before_t_start(growing_trace,
+                                                      tmp_path):
+    """A late DB whose trace starts BEFORE the store's t_start would
+    have its early events clipped into shard 0 — rejected loudly since
+    the plan only extends forward."""
+    ds, paths, cutoff = growing_trace
+    store = _base_store(ds, paths, cutoff, str(tmp_path / "s"))
+    man = store.read_manifest()
+    early = generate_synthetic(dataclasses.replace(
+        ds.spec, n_ranks=1, seed=13, kernels_per_rank=100,
+        memcpys_per_rank=10, duration_s=5.0))
+    tr = early.traces[0]
+    tr.kernels.start -= 10 * _NS                 # pre-t_start events
+    tr.kernels.end -= 10 * _NS
+    early_path = str(tmp_path / "early_rank.sqlite")
+    write_rank_db(early_path, tr)
+    assert int(tr.kernels.start.min()) < man.t_start
+    with pytest.raises(ValueError, match="t_start"):
+        run_append([early_path], store.root)
+
+
+def test_interrupted_append_is_refused_not_double_ingested(growing_trace,
+                                                           tmp_path):
+    """Crash safety across the multi-file append sequence: a leftover
+    intent journal means shards may hold rows whose watermark never
+    committed — a blind retry would ingest them twice, so run_append
+    must refuse loudly. A completed append leaves no journal behind."""
+    ds, paths, cutoff = growing_trace
+    store = _base_store(ds, paths, cutoff, str(tmp_path / "s"))
+    intent = os.path.join(store.root, "append_intent.json")
+
+    _grow_dbs(ds, paths, cutoff)
+    run_append(paths, store.root)
+    assert not os.path.exists(intent)            # committed: journal gone
+
+    with open(intent, "w") as f:                 # simulate a mid-append
+        f.write("{}")                            # crash's leftover
+    with pytest.raises(ValueError, match="interrupted"):
+        run_append(paths, store.root)
+
+
+def test_append_rejects_pre_watermark_store(growing_trace, tmp_path):
+    """A store whose manifest predates ingest watermarks must be refused
+    loudly — appending to it would re-ingest or drop rows silently."""
+    ds, paths, cutoff = growing_trace
+    store = _base_store(ds, paths, cutoff, str(tmp_path / "s"))
+    man = store.read_manifest()
+    man.extra.pop("db_rowid_hi")
+    store.write_manifest(man)
+    with pytest.raises(ValueError, match="watermark"):
+        run_append(paths, store.root)
+
+
+def test_append_without_new_data_keeps_summary_warm(growing_trace,
+                                                    tmp_path):
+    ds, paths, cutoff = growing_trace
+    store = _base_store(ds, paths, cutoff, str(tmp_path / "s"))
+    run_aggregation(store, metrics=METRICS)
+    rep = run_append(paths, store.root)          # nothing new arrived
+    assert rep.n_new_shards == 0 and rep.appended_rows == 0
+    again = run_aggregation(TraceStore(store.root), metrics=METRICS)
+    assert again.from_cache                       # summary survived the GC
+
+
+def test_pipeline_append_refences_anomalies(growing_trace, tmp_path):
+    """The automated-workflow loop end to end: run() on the snapshot,
+    append() after the trace grows, and the refreshed fences recover the
+    injected anomaly windows — with only dirty/new shards rescanned."""
+    ds, paths, cutoff = growing_trace
+    _write_snapshot(ds, paths, cutoff)
+    cfg = PipelineConfig(n_ranks=2, backend="serial",
+                         generation=GenerationConfig())
+    pipe = VariabilityPipeline(cfg)
+    work = str(tmp_path / "store")
+    pipe.run(paths, work)
+
+    _grow_dbs(ds, paths, cutoff)
+    res = pipe.append(paths, work)
+    assert res.generation.n_new_shards > 0
+    assert not res.aggregation.from_cache
+    assert res.aggregation.partial_hits > 0
+    frac = recovered(ds.anomaly_windows, res.anomaly_windows,
+                     tol_ns=_NS)
+    assert frac == 1.0
+
+
+def test_rebinned_delta_equals_rebinned_cold_after_append(growing_trace,
+                                                          tmp_path):
+    """The subtle reuse case: partials cached under a FINER aggregation
+    interval, then an append extends the plan. Clean partials are reused
+    across the extension (same origin + width ⇒ boundary prefix) unless
+    their transfer-kind bins could have clipped at the old plan end —
+    the delta must still match a cold rebinned run bit for bit."""
+    ds, paths, cutoff = growing_trace
+    store = _base_store(ds, paths, cutoff, str(tmp_path / "s"))
+    half = 500_000_000
+    run_aggregation(store, metrics=METRICS, group_by="m_kind",
+                    interval_ns=half)
+    _grow_dbs(ds, paths, cutoff)
+    run_append(paths, store.root)
+
+    delta = run_aggregation(TraceStore(store.root), metrics=METRICS,
+                            group_by="m_kind", interval_ns=half)
+    assert delta.partial_hits > 0
+    cold_store = TraceStore(store.root)
+    cold_store.clear_summaries()
+    cold_store.clear_partials()
+    cold = run_aggregation(cold_store, metrics=METRICS, group_by="m_kind",
+                           interval_ns=half)
+    _assert_results_equal(delta, cold)
+
+
+# --- dirty-shard invalidation (read counters) -------------------------------
+
+def test_shard_rewrite_recomputes_only_touched_partial(growing_trace,
+                                                       tmp_path):
+    ds, paths, cutoff = growing_trace
+    store = _base_store(ds, paths, cutoff, str(tmp_path / "s"))
+    first = run_aggregation(store, metrics=METRICS, group_by="m_kind")
+    n = len(first.recomputed_shards)
+    assert first.partial_hits == 0 and n > 0
+
+    cols = store.read_shard(2)
+    cols["k_stall"] = cols["k_stall"] + 1e6
+    store.write_shard(2, cols)                   # invalidates shard 2 only
+
+    fresh = TraceStore(store.root)
+    again = run_aggregation(fresh, metrics=METRICS, group_by="m_kind")
+    assert not again.from_cache
+    assert again.recomputed_shards == [2]
+    assert again.partial_hits == n - 1
+    assert fresh.io_counts["shard_reads"] == 1   # ONLY the dirty shard
+    assert fresh.io_counts["partial_reads"] == n - 1
+    assert again.stats.sum.sum() > first.stats.sum.sum()
+
+
+def test_use_cache_false_ignores_and_writes_no_partials(growing_trace,
+                                                        tmp_path):
+    ds, paths, cutoff = growing_trace
+    store = _base_store(ds, paths, cutoff, str(tmp_path / "s"))
+    run_aggregation(store, metrics=METRICS, use_cache=False)
+    assert store.partial_names() == []
+    assert store.summary_keys() == []
+
+
+# --- work-stealing scheduler ------------------------------------------------
+
+def _skewed_store(root, n_shards=12, seed=0):
+    """Direct-written store with heavy row-count skew (anomaly-burst
+    shape): two shards carry ~100x the rows of the rest."""
+    rng = np.random.default_rng(seed)
+    store = TraceStore(root)
+    plan = ShardPlan(0, n_shards * 10_000, n_shards)
+    for s in range(n_shards):
+        lo, hi = plan.shard_bounds(s)
+        n = 20_000 if s in (3, 7) else 200
+        cols = {
+            "k_start": rng.integers(lo, hi, n).astype(np.float64),
+            "k_stall": rng.normal(100, 25, n),
+            "m_duration": rng.lognormal(8, 1, n),
+            "m_bytes": rng.integers(0, 1 << 20, n).astype(np.float64),
+            "m_kind": rng.choice([1.0, 2.0, 8.0], n),
+            "m_start": rng.integers(lo, hi, n).astype(np.float64),
+            "joined": rng.integers(0, 2, n).astype(np.float64),
+            "k_device": rng.integers(0, 4, n).astype(np.float64),
+        }
+        store.write_shard(s, cols)
+    store.write_manifest(StoreManifest(
+        t_start=0, t_end=plan.t_end, n_shards=n_shards, n_ranks=3,
+        partitioning="block", columns=[], shard_owner=[0] * n_shards))
+    return store
+
+
+def test_workqueue_process_backend_equals_serial_on_skew(tmp_path):
+    """The chunked imap_unordered queue must produce bit-identical
+    results to the serial backend regardless of completion order, with
+    straggler shards 100x the size of their neighbours."""
+    store = _skewed_store(str(tmp_path / "skew"))
+    results = {}
+    for backend in ("serial", "process"):
+        cfg = PipelineConfig(n_ranks=3, backend=backend, metrics=METRICS,
+                             group_by="m_kind", reducers=SUITE,
+                             use_summary_cache=False)
+        results[backend] = VariabilityPipeline(cfg).aggregate(store.root)
+    _assert_results_equal(results["serial"], results["process"])
+
+
+def test_workqueue_workers_populate_partial_cache(tmp_path):
+    """With the cache on, pool workers persist the partials they compute;
+    a follow-up serial delta must find every shard clean."""
+    store = _skewed_store(str(tmp_path / "skew2"))
+    cfg = PipelineConfig(n_ranks=3, backend="process", metrics=METRICS,
+                         group_by="m_kind")
+    VariabilityPipeline(cfg).aggregate(store.root)
+    assert len(store.partial_names()) == 12
+    store.clear_summaries()                      # force a re-merge
+    fresh = TraceStore(store.root)
+    res = run_aggregation(fresh, n_ranks=3, metrics=METRICS,
+                          group_by="m_kind")
+    assert res.partial_hits == 12
+    assert res.recomputed_shards == []
+    assert fresh.io_counts["shard_reads"] == 0
+
+
+# --- crash safety -----------------------------------------------------------
+
+class _Exploding:
+    def __array__(self, dtype=None):
+        raise RuntimeError("simulated writer crash")
+
+
+def test_partial_write_crash_leaves_no_tmp_or_torn_file(tmp_path):
+    store = TraceStore(str(tmp_path))
+    good = {"version": np.asarray(3), "bins": np.arange(3)}
+    store.write_partial(4, "cafe0123cafe0123", good)
+    with pytest.raises(RuntimeError, match="simulated writer crash"):
+        store.write_partial(4, "cafe0123cafe0123",
+                            {"version": _Exploding()})
+    assert [f for f in os.listdir(store.root) if f.endswith(".tmp")] == []
+    kept = store.read_partial(4, "cafe0123cafe0123")   # old payload intact
+    np.testing.assert_array_equal(kept["bins"], good["bins"])
+
+
+def test_fresh_partial_write_crash_leaves_nothing(tmp_path):
+    store = TraceStore(str(tmp_path))
+    with pytest.raises(RuntimeError):
+        store.write_partial(0, "cafe0123cafe0123", {"x": _Exploding()})
+    assert [f for f in os.listdir(store.root) if f.endswith(".tmp")] == []
+    assert store.read_partial(0, "cafe0123cafe0123") is None
+    assert not store.has_partial(0, "cafe0123cafe0123")
+
+
+def test_corrupt_partial_is_miss_not_crash(growing_trace, tmp_path):
+    ds, paths, cutoff = growing_trace
+    store = _base_store(ds, paths, cutoff, str(tmp_path / "s"))
+    first = run_aggregation(store, metrics=METRICS)
+    qkey = store.partial_key((first.plan.t_start, first.plan.t_end,
+                              first.plan.n_shards), METRICS, None)
+    path = os.path.join(store.root, partial_filename(0, qkey))
+    assert os.path.exists(path)
+    with open(path, "wb") as f:
+        f.write(b"not an npy file at all")
+    store.clear_summaries()      # shards unchanged: only partials probed
+    again = run_aggregation(TraceStore(store.root), metrics=METRICS)
+    assert 0 in again.recomputed_shards          # recomputed, no crash
+    np.testing.assert_array_equal(first.stats.count, again.stats.count)
+
+
+# --- garbage collection -----------------------------------------------------
+
+def test_gc_drops_stale_summaries_and_partials_at_manifest_write(
+        growing_trace, tmp_path):
+    ds, paths, cutoff = growing_trace
+    store = _base_store(ds, paths, cutoff, str(tmp_path / "s"))
+    run_aggregation(store, metrics=METRICS)
+    assert len(store.summary_keys()) == 1
+    n_partials = len(store.partial_names())
+    assert n_partials > 0
+
+    # out-of-band rewrite (no invalidation hooks): both cache levels stale
+    cols = store.read_shard(1)
+    path = os.path.join(store.root, "shard_000001.npz")
+    np.savez(path, **{k: v for k, v in cols.items()})
+    man = store.read_manifest()
+    store.write_manifest(man)                    # GC sweep runs here
+    assert store.summary_keys() == []            # covered mismatch -> gone
+    assert len(store.partial_names(1)) == 0      # fingerprint mismatch
+    assert len(store.partial_names()) == n_partials - 1

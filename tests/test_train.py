@@ -17,15 +17,6 @@ from repro.train.optim import (AdamWConfig, adamw_init, adamw_update,
                                cosine_lr, global_norm)
 
 
-# Sole remaining quarantined failure: the hymba-1.5b smoke config goes
-# NaN after ~20 steps on jax<0.5 numerics (NOT an API-drift issue — the
-# rest of the former quarantine now runs green through repro.compat).
-# Tracked in ROADMAP open items.
-_hymba_nan = pytest.mark.xfail(
-    reason="hymba-1.5b smoke train goes NaN on jax<0.5 numerics — "
-           "see ROADMAP open items", strict=False)
-
-
 def test_adamw_matches_reference_math():
     cfg = AdamWConfig(peak_lr=0.1, warmup_steps=0, total_steps=100,
                       weight_decay=0.0, clip_norm=0.0, b1=0.9, b2=0.99)
@@ -83,8 +74,11 @@ def test_grad_accum_equivalence():
     np.testing.assert_allclose(d1, d2, rtol=1e-3, atol=1e-4)
 
 
-@_hymba_nan
 def test_loss_decreases_multiple_archs(tmp_path):
+    # Formerly quarantined: hymba went NaN at ~step 12 because the SSD
+    # scan's non-causal decay exponents (li > 0, growing with trained dt)
+    # overflowed exp to +inf and the masking where's backward turned that
+    # into 0·inf = NaN. Fixed by masking li before exp (ssm.py ssd_scan).
     for arch in ("mamba2-370m", "hymba-1.5b"):
         cfg = get_smoke_config(arch)
         tcfg = TrainConfig(optim=AdamWConfig(
