@@ -1,0 +1,113 @@
+"""CI bench-regression gate over the ``BENCH_*.json`` records.
+
+The benches emit one JSON record each (:mod:`benchmarks.multimetric_bench`
+``--quantile`` / ``--incremental [--backend jax]``); this gate re-reads
+them and FAILS the job if any recorded speedup has dropped below its
+floor — so a PR that quietly erases the warm-cache, incremental or
+jax-incremental win is caught by CI, not by the next person to run the
+bench by hand.
+
+Floors (the repo's banked acceptance bars):
+
+  multimetric   warm-cache re-analysis   ``cache_speedup``          >= 5x
+  quantile      warm sketch re-analysis  ``cache_speedup``          >= 5x
+  incremental   host delta vs cold       ``incremental_speedup``    >= 5x
+  incremental   (backend jax) append+delta vs cold jax re-scan
+                                        ``append_plus_delta_speedup`` >= 5x
+
+Records produced with ``--smoke`` carry ``"smoke": true`` and are held
+only to STRUCTURAL checks (schema, finite positive timings, the bench's
+own ``*_ok`` flag) — smoke datasets are deliberately too small for the
+floors to be meaningful on a noisy CI clock. The nightly workflow runs
+the benches at ``--scale medium`` without ``--smoke``, where the floors
+bind for real.
+
+Usage (exit code 0 = all green):
+
+  python -m benchmarks.check_bench BENCH_quantile.json \\
+      BENCH_incremental.json BENCH_incremental_jax.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import List
+
+FLOOR = 5.0
+
+# bench name -> (speedup field, timing fields that must be finite & > 0)
+SCHEMAS = {
+    "multimetric": ("cache_speedup",
+                    ("cold_us", "warm_cached_us", "one_pass_m_metrics_us")),
+    "quantile": ("cache_speedup",
+                 ("cold_us", "warm_cached_us", "with_quantile_us")),
+    "incremental": ("incremental_speedup",
+                    ("cold_rescan_us", "delta_us", "append_us")),
+}
+
+
+def check_record(path: str, rec: dict) -> List[str]:
+    """Problems found in one record (empty list = record passes)."""
+    bench = rec.get("bench")
+    if bench not in SCHEMAS:
+        return [f"{path}: unknown bench kind {bench!r}"]
+    speedup_field, timing_fields = SCHEMAS[bench]
+    if bench == "incremental" and rec.get("backend") == "jax":
+        # the jax loop's acceptance bar covers the whole online round
+        # trip: append ingest + delta vs a cold device re-scan
+        speedup_field = "append_plus_delta_speedup"
+    problems = []
+    for f in timing_fields + (speedup_field,):
+        v = rec.get(f)
+        if not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0:
+            problems.append(f"{path}: {f} missing or not a positive "
+                            f"finite number (got {v!r})")
+    ok_flags = [k for k in rec if k.endswith("_ok")]
+    for k in ok_flags:
+        if rec[k] is not True:
+            problems.append(f"{path}: bench's own {k} flag is false")
+    if problems:
+        return problems
+    if rec.get("smoke"):
+        return []            # structural checks only — floors don't bind
+    speedup = float(rec[speedup_field])
+    if speedup < FLOOR:
+        problems.append(
+            f"{path}: {speedup_field} = {speedup:.2f}x is below the "
+            f"{FLOOR:.0f}x floor ({bench}"
+            f"{'/jax' if rec.get('backend') == 'jax' else ''})")
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("records", nargs="+",
+                    help="BENCH_*.json files to gate on")
+    args = ap.parse_args()
+    problems: List[str] = []
+    for path in args.records:
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+        except (OSError, ValueError) as e:
+            problems.append(f"{path}: unreadable bench record ({e})")
+            continue
+        found = check_record(path, rec)
+        problems.extend(found)
+        mode = "smoke" if rec.get("smoke") else "full"
+        if not found:
+            print(f"OK   {path} [{mode}] bench={rec.get('bench')}"
+                  f"{'/' + rec['backend'] if rec.get('backend') else ''}")
+    if problems:
+        print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"bench gate: {len(args.records)} record(s) green")
+
+
+if __name__ == "__main__":
+    main()

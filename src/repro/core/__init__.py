@@ -12,12 +12,14 @@ Layout (one module per paper concept — see DESIGN.md §2/§3):
   reducers      pluggable mergeable statistics: "moments" (BinStats) and
                 "quantile" (log-bucket QuantileSketch) per (bin, group,
                 metric) cell
-  aggregation   phase 2, incremental: per-shard partial producer ->
+  aggregation   phase 2, incremental on every backend: per-shard partial
+                producer (host scan or batched device collective) ->
                 clean/dirty classification -> suite-generic merge ->
                 covered summary; only dirty shards are ever rescanned
   anomaly       IQR fences (mean/std/max/sum + p50/p95/p99/iqr scores),
                 top-k anomalous shards
-  distributed   jax backend (shard_map + psum_scatter/all_gather)
+  distributed   jax backend (shard_map + psum_scatter/all_gather) with
+                flat-segment dirty-only collective entry points
   pipeline      end-to-end driver (serial | process | jax backends) with a
                 work-stealing shard queue and the append -> delta-aggregate
                 -> re-fence loop
@@ -37,8 +39,9 @@ from .reducers import (MergeableReducer, QuantileSketch, get_reducer,
                        REDUCER_REGISTRY, QUANTILE_REL_ERR)
 from .aggregation import (AggregationResult, BinStats, GroupedPartial,
                           ShardPartial, bin_samples, bin_samples_grouped,
-                          classify_shards, compute_shard_partial,
-                          load_rank_partials, round_robin_merge,
-                          run_aggregation, run_incremental, DEFAULT_METRIC)
+                          classify_shards, compute_partials_jax,
+                          compute_shard_partial, load_rank_partials,
+                          round_robin_merge, run_aggregation,
+                          run_incremental, DEFAULT_METRIC)
 from .anomaly import IQRReport, anomalous_bins, iqr_detect, recovered
 from .pipeline import PipelineConfig, PipelineResult, VariabilityPipeline

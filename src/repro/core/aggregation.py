@@ -55,10 +55,21 @@ suite-generic merge (:func:`rank_partial_from_shards` +
     dirty against its (size, mtime_ns) fingerprint, loads cached partials
     for the clean ones, recomputes ONLY the dirty/new ones, and re-merges
     — so appending one second of trace costs O(dirty shards), not a full
-    rescan. Because partials round-trip float64 arrays exactly and the
+    rescan. Because partials round-trip their arrays exactly and the
     merge order is fixed (shard index within rank, round-robin across
     ranks), the delta result is BIT-IDENTICAL to a cold full aggregation
-    on the serial and process backends (tested).
+    on every backend (tested).
+
+The same clean/dirty driver serves ALL THREE backends. The serial and
+process backends produce exact float64 partials on host
+(:func:`compute_partials`, fanned out through the pipeline's
+work-stealing pool in the process case). The jax backend produces
+DEVICE partials (:func:`compute_partials_jax`): one batched SPMD
+collective over the dirty shards' raw events, sliced back into
+per-shard post-segment-reduce tensors and cached in a
+``precision="float32"`` partial namespace — so after an append the
+collectives run only over the appended rows, and clean shards re-enter
+the merge as host partials without touching a device.
 """
 
 from __future__ import annotations
@@ -77,8 +88,8 @@ from .tracestore import SUMMARY_VERSION, TraceStore
 __all__ = [
     "AggregationResult", "BinStats", "QuantileSketch", "GroupedPartial",
     "ShardPartial", "bin_samples", "bin_samples_grouped",
-    "compute_shard_partial", "compute_partials", "classify_shards",
-    "rank_partial_from_shards", "load_rank_grouped",
+    "compute_shard_partial", "compute_partials", "compute_partials_jax",
+    "classify_shards", "rank_partial_from_shards", "load_rank_grouped",
     "load_rank_partials", "round_robin_merge", "run_aggregation",
     "run_incremental", "DEFAULT_METRIC", "STAT_FIELDS",
 ]
@@ -183,8 +194,7 @@ class AggregationResult:
     reduced: Dict[str, Any] = dataclasses.field(default_factory=dict)
     # incremental-engine provenance: which shard files were actually
     # scanned this run (None = driver predates / bypasses the partial
-    # cache, e.g. the jax backend's full on-device scan), and how many
-    # clean shards were served from cached partials.
+    # cache), and how many clean shards were served from cached partials.
     recomputed_shards: Optional[List[int]] = None
     partial_hits: int = 0
 
@@ -268,18 +278,16 @@ class ShardPartial:
                 for i, k in enumerate(self.kind_keys)}
 
 
-def compute_shard_partial(store: TraceStore, idx: int, plan: ShardPlan,
-                          metrics: Sequence[str],
-                          group_by: Optional[str] = None,
-                          reducers: Sequence[str] = DEFAULT_REDUCERS,
-                          ) -> ShardPartial:
-    """Scan ONE shard file and reduce it: every reducer, metric and group
-    in a single pass over the rows. The accumulation (``bin_grouped`` per
-    reducer over the full dense plan, then sliced to the touched bins) is
-    bit-identical to the pre-split rank loop, so cold results never moved
-    when the engine went incremental."""
-    metrics = list(metrics)
-    suite = normalize_reducers(reducers)
+def _scan_shard(store: TraceStore, idx: int, plan: ShardPlan,
+                metrics: Sequence[str], group_by: Optional[str],
+                ) -> Tuple[ShardPartial, Optional[Tuple[np.ndarray, ...]]]:
+    """Read + validate ONE shard and build everything about its partial
+    EXCEPT the reducer states — the scaffolding both producers (host
+    ``bin_grouped`` scan and jax device collective) share: touched bins,
+    local group keys, transfer-kind bytes, the ``m_start_hi``
+    plan-extension guard. Returns ``(partial-with-empty-states, rows)``
+    where ``rows`` is ``None`` for an empty shard, else
+    ``(ts, vals (M, N), local_bin, gids)`` for the producer to reduce."""
     cols = store.read_shard(int(idx))
     missing = [m for m in metrics if m not in cols]
     if missing:
@@ -295,32 +303,53 @@ def compute_shard_partial(store: TraceStore, idx: int, plan: ShardPlan,
             idx=int(idx), n_bins=plan.n_shards,
             bins=np.zeros(0, np.int64), group_keys=np.zeros(0, np.float64),
             states={}, kind_keys=np.zeros(0, np.int64),
-            kind_bytes=np.zeros((0, plan.n_shards)))
+            kind_bytes=np.zeros((0, plan.n_shards))), None
     vals = np.stack([np.asarray(cols[m], np.float64) for m in metrics],
-                    axis=1)
+                    axis=0)
     if group_by is None:
         keys = np.asarray([_NO_GROUP_KEY])
         gids = np.zeros(len(ts), np.int64)
     else:
         keys, gids = np.unique(np.asarray(cols[group_by], np.float64),
                                return_inverse=True)
-    bins = np.unique(plan.shard_of(ts))
-    states = {name: get_reducer(name).bin_grouped(
-                  ts, vals, gids, len(keys), plan).take_bins(bins)
-              for name in suite}
+    bins, local_bin = np.unique(plan.shard_of(ts), return_inverse=True)
     kind_bytes: Dict[int, np.ndarray] = {}
     _shard_kind_bytes(cols, plan, kind_bytes)
     kinds = sorted(kind_bytes)
     joined = cols["joined"] > 0 if "joined" in cols else np.zeros(0, bool)
     m_start_hi = (int(cols["m_start"][joined].max())
                   if joined.any() else -1)
-    return ShardPartial(
+    sp = ShardPartial(
         idx=int(idx), n_bins=plan.n_shards, bins=bins,
-        group_keys=np.asarray(keys, np.float64), states=states,
+        group_keys=np.asarray(keys, np.float64), states={},
         kind_keys=np.asarray(kinds, np.int64),
         kind_bytes=(np.stack([kind_bytes[k] for k in kinds]) if kinds
                     else np.zeros((0, plan.n_shards))),
         m_start_hi=m_start_hi)
+    return sp, (ts, vals, local_bin, gids)
+
+
+def compute_shard_partial(store: TraceStore, idx: int, plan: ShardPlan,
+                          metrics: Sequence[str],
+                          group_by: Optional[str] = None,
+                          reducers: Sequence[str] = DEFAULT_REDUCERS,
+                          ) -> ShardPartial:
+    """Scan ONE shard file and reduce it: every reducer, metric and group
+    in a single pass over the rows. The accumulation (``bin_grouped`` per
+    reducer over the full dense plan, then sliced to the touched bins) is
+    bit-identical to the pre-split rank loop, so cold results never moved
+    when the engine went incremental."""
+    metrics = list(metrics)
+    suite = normalize_reducers(reducers)
+    sp, rows = _scan_shard(store, idx, plan, metrics, group_by)
+    if rows is None:
+        return sp
+    ts, vals, _, gids = rows
+    sp.states = {name: get_reducer(name).bin_grouped(
+                     ts, vals.T, gids, len(sp.group_keys),
+                     plan).take_bins(sp.bins)
+                 for name in suite}
+    return sp
 
 
 # --- partial-cache (de)serialization ---------------------------------------
@@ -398,6 +427,7 @@ def classify_shards(store: TraceStore, indices: Sequence[int],
                     reducers: Sequence[str] = DEFAULT_REDUCERS,
                     use_cache: bool = True,
                     stats: Optional[Dict[int, Tuple[int, int, int]]] = None,
+                    precision: str = "exact",
                     ) -> Tuple[str, List[ShardPartial], List[int]]:
     """Split the shard universe into (clean partials loaded from cache,
     dirty indices to recompute). A shard is clean iff a cached partial
@@ -405,10 +435,13 @@ def classify_shards(store: TraceStore, indices: Sequence[int],
     file's current (size, mtime_ns) stat, and its recorded plan is valid
     under the current one (equal, or a prefix of an append-extended plan)
     — so any rewrite, append or engine-version bump dirties exactly the
-    shards it touched."""
+    shards it touched. ``precision`` picks the partial namespace: the
+    host scan's exact float64 partials vs the jax backend's float32
+    device partials (they share all the machinery above)."""
     suite = normalize_reducers(reducers)
     qkey = store.partial_key((plan.t_start, plan.t_end, plan.n_shards),
-                             metrics, group_by, reducers=suite)
+                             metrics, group_by, precision=precision,
+                             reducers=suite)
     clean: List[ShardPartial] = []
     dirty: List[int] = []
     for idx in indices:
@@ -448,6 +481,132 @@ def compute_partials(store: TraceStore, indices: Sequence[int],
                                    group_by, reducers)
         if qkey is not None and fp is not None:
             store.write_partial(int(idx), qkey, shard_partial_payload(
+                sp, plan, metrics, group_by, fp))
+        out.append(sp)
+    return out
+
+
+def _slotwise_device_partition(counts: Sequence[int], n_dev: int,
+                               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Row -> device assignment that makes each shard's device partial a
+    pure function of ITS OWN rows: device d gets rows
+    ``[d*n/P, (d+1)*n/P)`` of EVERY slot, not a block of the concatenated
+    stream. A block split of the concatenation would cut shard s's rows
+    at positions depending on the OTHER shards in the batch — the
+    float32 per-device partial sums (and thus the fixed-order psum
+    across devices) would differ between a delta run (dirty shards only)
+    and a cold run (every shard), breaking the bit-identity guarantee.
+
+    ``counts`` are per-slot row counts in concatenation order. Returns
+    ``(row_index, valid)`` of length ``P*L`` (L = the largest per-device
+    section rounded UP to a power of two; the tail padded with row 0
+    marked invalid — weight-0 rows are exact no-ops, and the quantized
+    width means repeated appends of similar size reuse the jitted
+    collective instead of recompiling per row count), ready for
+    ``shard_map``'s equal block split over the mesh axis."""
+    offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    sections = []
+    for d in range(n_dev):
+        chunks = [np.arange(offsets[s] + (d * n) // n_dev,
+                            offsets[s] + ((d + 1) * n) // n_dev)
+                  for s, n in enumerate(counts)]
+        sections.append(np.concatenate(chunks) if chunks
+                        else np.zeros(0, np.int64))
+    width = max((len(sec) for sec in sections), default=0)
+    width = 1 << max(width - 1, 0).bit_length()       # next power of two
+    row = np.zeros(n_dev * width, np.int64)
+    valid = np.zeros(n_dev * width, bool)
+    for d, sec in enumerate(sections):
+        row[d * width:d * width + len(sec)] = sec
+        valid[d * width:d * width + len(sec)] = True
+    return row, valid
+
+
+def compute_partials_jax(store: TraceStore, indices: Sequence[int],
+                         plan: ShardPlan, metrics: Sequence[str],
+                         group_by: Optional[str],
+                         reducers: Sequence[str] = DEFAULT_REDUCERS,
+                         qkey: Optional[str] = None,
+                         ) -> List[ShardPartial]:
+    """The jax backend's dirty-shard producer: ONE batched device
+    collective over every dirty shard's raw events, sliced back into
+    per-shard DEVICE partials (the post-segment-reduce float32 tensors).
+
+    Each dirty shard contributes a ragged block of the flat segment
+    space — its touched bins × its local group keys — so the collective
+    cost is proportional to the dirty rows, never to the plan, and one
+    dispatch per reducer serves any number of dirty shards
+    (:func:`repro.core.distributed.distributed_moments_flat` /
+    ``distributed_histogram_flat``). Rows are handed to mesh devices
+    slot-wise (:func:`_slotwise_device_partition`), which makes every
+    shard's partial a pure function of its own rows — the property the
+    delta-vs-cold bit-identity rests on. The transfer-kind byte
+    breakdown and the ``m_start_hi`` plan-extension guard are host work
+    riding the same shard read, exactly as in the host producer.
+
+    With ``qkey`` set, each partial is persisted to the store's
+    ``precision="float32"`` partial namespace stamped with the shard
+    fingerprint — the cache a later delta serves clean shards from
+    without touching a device.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    metrics = list(metrics)
+    suite = normalize_reducers(reducers)
+    scans = []          # (fingerprint, partial-sans-states, raw rows)
+    for idx in indices:
+        if not store.has_shard(int(idx)):
+            continue
+        fp = store.stat_shard(int(idx))
+        sp, rows = _scan_shard(store, int(idx), plan, metrics, group_by)
+        scans.append((fp, sp, rows))
+
+    # ragged flat segment space: shard s owns segments
+    # [off_s, off_s + B_s*G_s) in scan order
+    live = [s for s in scans if s[2] is not None]
+    if live:
+        seg_sizes = [len(sp.bins) * len(sp.group_keys)
+                     for _, sp, _ in live]
+        seg_offs = np.concatenate([[0], np.cumsum(seg_sizes)])
+        n_seg = int(seg_offs[-1])
+        # segment count quantized up to a 128 multiple: the surplus
+        # segments receive no rows and are never sliced back, while the
+        # jitted collective (keyed on n_seg) gets reused across appends
+        # of similar shape instead of recompiling for every exact count
+        n_seg_dev = -(-max(n_seg, 1) // 128) * 128
+        seg_all = np.concatenate(
+            [local_bin * len(sp.group_keys) + gids + seg_offs[k]
+             for k, (_, sp, (_, _, local_bin, gids)) in enumerate(live)])
+        vals_all = np.concatenate([rows[1] for _, _, rows in live],
+                                  axis=1)
+        dev = jax.devices()
+        row, valid = _slotwise_device_partition(
+            [len(rows[0]) for _, _, rows in live], len(dev))
+        mesh = Mesh(np.asarray(dev), ("data",))
+        seg_p = seg_all[row].astype(np.int32)
+        seg_p[~valid] = 0
+        # ONE host->device conversion + upload serves every reducer's
+        # collective (jnp.asarray inside device_reduce is then a no-op)
+        seg_j = jnp.asarray(seg_p)
+        vals_j = jnp.asarray(vals_all[:, row], jnp.float32)
+        valid_j = jnp.asarray(valid)
+        reduced = {name: get_reducer(name).device_reduce(
+                       seg_j, vals_j, n_seg_dev, mesh, valid_j)
+                   for name in suite}           # (n_seg_dev, M, *private)
+        for k, (_, sp, _) in enumerate(live):
+            shape = (len(sp.bins), len(sp.group_keys), len(metrics))
+            sp.states = {
+                name: get_reducer(name).from_device_block(
+                    reduced[name][seg_offs[k]:seg_offs[k + 1]].reshape(
+                        shape + reduced[name].shape[2:]))
+                for name in suite}
+
+    out = []
+    for fp, sp, _ in scans:
+        if qkey is not None and fp is not None:
+            store.write_partial(sp.idx, qkey, shard_partial_payload(
                 sp, plan, metrics, group_by, fp))
         out.append(sp)
     return out
@@ -706,14 +865,21 @@ def run_incremental(store: TraceStore, n_shard_files: int, plan: ShardPlan,
                     n_ranks: int, use_cache: bool, key: Optional[str],
                     t0: float,
                     reducers: Sequence[str] = DEFAULT_REDUCERS,
-                    compute_fn=None) -> AggregationResult:
-    """The incremental core every host backend shares: classify shards
+                    compute_fn=None,
+                    precision: str = "exact") -> AggregationResult:
+    """The incremental core EVERY backend shares: classify shards
     clean/dirty, recompute only the dirty ones (``compute_fn(dirty, qkey)``
     — serial here, the pipeline's work-stealing pool in the process
-    backend), then merge cached + fresh partials per rank in shard order
-    and round-robin across ranks. Cold run == incremental run with every
-    shard dirty, through the identical merge path — which is why a delta
-    aggregation is bit-identical to a cold one."""
+    backend, one batched device collective over the dirty shards' raw
+    events in the jax backend, see :func:`compute_partials_jax`), then
+    merge cached + fresh partials per rank in shard order and round-robin
+    across ranks. Cold run == incremental run with every shard dirty,
+    through the identical merge path — which is why a delta aggregation
+    is bit-identical to a cold one, on the jax backend included (its
+    per-shard device partials are pure functions of each shard's own
+    rows). ``precision`` must match the producer ``compute_fn`` wires in
+    (``"float32"`` for the jax device path) so partials land in — and
+    are served from — the right namespace."""
     mlist = list(metrics)
     suite = normalize_reducers(reducers)
     all_indices = store.shard_indices()      # ONE directory listing
@@ -724,7 +890,7 @@ def run_incremental(store: TraceStore, n_shard_files: int, plan: ShardPlan,
     stats = {i: store.stat_shard(i) for i in indices}
     qkey, clean, dirty = classify_shards(store, indices, plan, mlist,
                                          group_by, suite, use_cache,
-                                         stats=stats)
+                                         stats=stats, precision=precision)
     if compute_fn is None:
         def compute_fn(idxs, qk):
             return compute_partials(store, idxs, plan, mlist, group_by,
@@ -768,6 +934,7 @@ def run_aggregation(store: Union[str, TraceStore],
                     group_by: Optional[str] = None,
                     use_cache: bool = True,
                     reducers: Sequence[str] = DEFAULT_REDUCERS,
+                    backend: str = "serial",
                     ) -> AggregationResult:
     """Full phase-2 driver (sequential rank loop; pipeline.py parallelizes).
 
@@ -780,16 +947,27 @@ def run_aggregation(store: Union[str, TraceStore],
     tensors; ``reducers`` picks the statistic suite (``"moments"`` is
     always included; add ``"quantile"`` for per-bin P50/P95/P99/IQR).
 
-    With ``use_cache`` the run is fully incremental: an unchanged store is
-    answered from the merged summary without touching shards, and a store
-    with rewritten/appended shards rescans ONLY those (clean shards come
-    from the per-shard partial cache) — ``result.recomputed_shards`` /
-    ``partial_hits`` report exactly what was read.
+    ``backend`` is ``"serial"`` (exact float64 host scan) or ``"jax"``
+    (dirty shards reduced by the SPMD collectives, float32 — summaries
+    and partials live in their own precision namespace so the two
+    producers never serve each other). The process-pool backend lives in
+    :mod:`repro.core.pipeline`, which routes through the same
+    :func:`run_incremental` core.
+
+    With ``use_cache`` the run is fully incremental ON EVERY BACKEND: an
+    unchanged store is answered from the merged summary without touching
+    shards, and a store with rewritten/appended shards rescans ONLY
+    those (clean shards come from the per-shard partial cache) —
+    ``result.recomputed_shards`` / ``partial_hits`` report exactly what
+    was read.
     """
     t0 = time.perf_counter()
     store = store if isinstance(store, TraceStore) else TraceStore(store)
     man = store.read_manifest()
     P = n_ranks or man.n_ranks
+    if backend not in ("serial", "jax"):
+        raise ValueError(f"unknown backend {backend!r} (serial | jax; the "
+                         "process backend is VariabilityPipeline's)")
 
     if interval_ns is None:
         plan = ShardPlan(man.t_start, man.t_end, man.n_shards)
@@ -799,13 +977,20 @@ def run_aggregation(store: Union[str, TraceStore],
     if not mlist:
         raise ValueError("metrics must name at least one shard column")
     suite = normalize_reducers(reducers)
+    precision = "float32" if backend == "jax" else "exact"
 
     key = None
     if use_cache:
         key, cached = lookup_summary(store, plan, mlist, group_by, t0,
-                                     reducers=suite)
+                                     precision=precision, reducers=suite)
         if cached is not None:
             return cached
 
+    compute_fn = None
+    if backend == "jax":
+        def compute_fn(dirty, qkey):
+            return compute_partials_jax(store, dirty, plan, mlist,
+                                        group_by, suite, qkey)
     return run_incremental(store, man.n_shards, plan, mlist, group_by, P,
-                           use_cache, key, t0, reducers=suite)
+                           use_cache, key, t0, reducers=suite,
+                           compute_fn=compute_fn, precision=precision)

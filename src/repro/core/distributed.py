@@ -15,13 +15,17 @@ statistics become mesh devices exchanging via ICI collectives:
     `pmax` (these are latency-bound; the heavy sum/sumsq take the scatter
     path).
 
-Incremental engine note: this backend is the one FULL-SCAN path — raw
-events must reach the device collectives, so it neither reads nor writes
-the host backends' per-shard partial cache. It still shares the
-covered-fingerprint summary cache (keyed ``precision="float32"``), so a
-repeat jax aggregation over an unchanged store skips the scan entirely;
-after an append it re-scans from scratch where the host backends
-delta-merge.
+Incremental engine note: since PR 4 this backend is incremental like the
+host ones — the collectives run only over DIRTY shards' raw events. The
+unit of collective work is a FLAT segment space (the ragged concatenation
+of every dirty shard's touched ``(bin, group)`` cells), so one device
+dispatch serves any number of dirty shards, and the post-segment-reduce
+tensors sliced back per shard are the *device partials* the aggregation
+layer caches in the TraceStore (``precision="float32"`` namespace; see
+:func:`repro.core.aggregation.compute_partials_jax`). Clean shards never
+reach a device — their cached partials re-enter through the host
+``merge_at`` path. The summary cache stays keyed ``precision="float32"``
+so jax results are never served where exact float64 moments are expected.
 
 Public entry points:
 
@@ -29,6 +33,10 @@ Public entry points:
     for the Pallas binstats kernel),
   * :func:`distributed_binstats` — full shard_map pipeline over a 1-D mesh
     axis; exactly equal to the serial result (property-tested),
+  * :func:`distributed_moments_flat` / :func:`distributed_histogram_flat`
+    — the dirty-only collective entry points over an arbitrary flat
+    segment space (what the incremental jax driver calls); the grouped
+    forms below are thin reshapes over them,
   * :func:`distributed_histogram_grouped` — the quantile reducer's
     log-bucket histogram counts; purely additive, so they ride the same
     psum_scatter/all_gather round-robin path as count/sum/sumsq.
@@ -190,6 +198,91 @@ def distributed_binstats_from_bins(bin_ids: jnp.ndarray,
     return fn(bin_ids, values, valid)
 
 
+@functools.lru_cache(maxsize=64)
+def _moments_flat_fn(n_seg: int, mesh: Mesh, axis: str):
+    """Cached jitted collective for :func:`distributed_moments_flat`.
+
+    Eagerly calling a freshly built ``shard_map`` closure re-traces and
+    re-compiles on EVERY aggregation (~seconds of fixed cost on CPU —
+    enough to drown the incremental win at delta scale). Keying the
+    compiled callable on ``(n_seg, mesh, axis)`` and quantizing the
+    caller's array shapes (see ``compute_partials_jax``) makes the
+    steady-state append→delta loop hit jax's compilation cache instead."""
+    def rank_fn(seg, vals, vld):
+        local = binstats_local(seg, vals, n_seg, valid=vld)
+        return _collaborative_reduce(local, axis, mesh.shape[axis])
+
+    spec = P(axis)
+    return jax.jit(_shard_map(rank_fn, mesh,
+                              in_specs=(spec, P(None, axis), spec),
+                              out_specs=P()))
+
+
+def distributed_moments_flat(seg_ids: jnp.ndarray, values: jnp.ndarray,
+                             n_seg: int, mesh: Mesh, axis: str = "data",
+                             valid: Optional[jnp.ndarray] = None,
+                             ) -> jnp.ndarray:
+    """Collaborative moments over an ARBITRARY flat segment space.
+
+    seg_ids : (N,) int32 precomputed segment ids in [0, n_seg) — any
+              host-side fusion of (shard, bin, group) works; the device
+              neither knows nor cares what a segment means
+    values  : (n_metrics, N) float32 — all metrics share the segment ids
+
+    This is the incremental engine's dirty-only entry point: the jax
+    driver concatenates only the DIRTY shards' events, assigns each a
+    segment in the ragged per-shard (bin × group) space, and one
+    dispatch produces every dirty shard's device partial at once. The
+    additive channels ride the psum_scatter/all_gather round-robin; the
+    min/max channels the pmin/pmax all-reduce (:func:`_collaborative_reduce`).
+    Returns replicated (n_metrics, n_seg, 5) moments.
+    """
+    if valid is None:
+        valid = jnp.ones(seg_ids.shape, dtype=bool)
+    return _moments_flat_fn(n_seg, mesh, axis)(seg_ids, values, valid)
+
+
+@functools.lru_cache(maxsize=64)
+def _histogram_flat_fn(n_seg: int, mesh: Mesh, axis: str):
+    """Cached jitted collective for :func:`distributed_histogram_flat`
+    (same rationale as :func:`_moments_flat_fn`)."""
+    n_all = n_seg * N_BUCKETS
+
+    def rank_fn(seg, vals, vld):
+        w = vld.astype(jnp.float32)
+
+        def one_metric(v):
+            return jax.ops.segment_sum(
+                w, seg * N_BUCKETS + bucketize(v), n_all)
+
+        local = jax.vmap(one_metric)(vals)        # (M, n_all)
+        return _collaborative_sum(local, axis, mesh.shape[axis], dim=1)
+
+    spec = P(axis)
+    return jax.jit(_shard_map(rank_fn, mesh,
+                              in_specs=(spec, P(None, axis), spec),
+                              out_specs=P()))
+
+
+def distributed_histogram_flat(seg_ids: jnp.ndarray, values: jnp.ndarray,
+                               n_seg: int, mesh: Mesh, axis: str = "data",
+                               valid: Optional[jnp.ndarray] = None,
+                               ) -> jnp.ndarray:
+    """Collaborative quantile-sketch histogram counts over an ARBITRARY
+    flat segment space (the dirty-only counterpart of
+    :func:`distributed_moments_flat` for the ``"quantile"`` reducer).
+
+    Each metric's (segment, bucket) pair is fused into one id; the counts
+    are purely additive, so they ride the SAME psum_scatter/all_gather
+    round-robin path as the moments' sums. Returns replicated
+    (n_metrics, n_seg, N_BUCKETS) counts.
+    """
+    if valid is None:
+        valid = jnp.ones(seg_ids.shape, dtype=bool)
+    out = _histogram_flat_fn(n_seg, mesh, axis)(seg_ids, values, valid)
+    return out.reshape(values.shape[0], n_seg, N_BUCKETS)
+
+
 def distributed_binstats_grouped(bin_ids: jnp.ndarray,
                                  group_ids: jnp.ndarray,
                                  values: jnp.ndarray, n_bins: int,
@@ -204,23 +297,15 @@ def distributed_binstats_grouped(bin_ids: jnp.ndarray,
     group_ids : (N,) int32 in [0, n_groups) — global group-key index
     values    : (n_metrics, N) float32 — all metrics share the bin/group ids
 
-    The (bin, group) pair is fused into one segment id, so the whole tensor
-    rides the same psum_scatter/all_gather collective as the 1-D path.
-    Returns replicated (n_metrics, n_bins, n_groups, 5) moments.
+    The (bin, group) pair is fused into one segment id and the tensor
+    rides :func:`distributed_moments_flat` — the dense special case of
+    the flat segment space. Returns replicated
+    (n_metrics, n_bins, n_groups, 5) moments.
     """
     n_metrics = values.shape[0]
     flat = bin_ids * n_groups + group_ids
-
-    def rank_fn(bins, vals, vld):
-        local = binstats_local(bins, vals, n_bins * n_groups, valid=vld)
-        return _collaborative_reduce(local, axis, mesh.shape[axis])
-
-    spec = P(axis)
-    fn = _shard_map(rank_fn, mesh,
-                    in_specs=(spec, P(None, axis), spec), out_specs=P())
-    if valid is None:
-        valid = jnp.ones(flat.shape, dtype=bool)
-    out = fn(flat, values, valid)
+    out = distributed_moments_flat(flat, values, n_bins * n_groups, mesh,
+                                   axis=axis, valid=valid)
     return out.reshape(n_metrics, n_bins, n_groups, STATS)
 
 
@@ -252,31 +337,14 @@ def distributed_histogram_grouped(bin_ids: jnp.ndarray,
     values    : (n_metrics, N) float32 — all metrics share bin/group ids
 
     Each metric's (bin, group, bucket) triple is fused into one segment id
-    and the counts — additive, like count/sum/sumsq — ride the SAME
-    psum_scatter/all_gather round-robin path as the moments
-    (:func:`_collaborative_sum`). Returns replicated
+    and the counts ride :func:`distributed_histogram_flat` — the dense
+    special case of the flat segment space. Returns replicated
     (n_metrics, n_bins, n_groups, N_BUCKETS) counts.
     """
     n_metrics = values.shape[0]
-    n_seg = n_bins * n_groups * N_BUCKETS
     flat_bg = bin_ids * n_groups + group_ids
-
-    def rank_fn(bg, vals, vld):
-        w = vld.astype(jnp.float32)
-
-        def one_metric(v):
-            seg = bg * N_BUCKETS + bucketize(v)
-            return jax.ops.segment_sum(w, seg, n_seg)
-
-        local = jax.vmap(one_metric)(vals)        # (M, n_seg)
-        return _collaborative_sum(local, axis, mesh.shape[axis], dim=1)
-
-    spec = P(axis)
-    fn = _shard_map(rank_fn, mesh,
-                    in_specs=(spec, P(None, axis), spec), out_specs=P())
-    if valid is None:
-        valid = jnp.ones(flat_bg.shape, dtype=bool)
-    out = fn(flat_bg, values, valid)
+    out = distributed_histogram_flat(flat_bg, values, n_bins * n_groups,
+                                     mesh, axis=axis, valid=valid)
     return out.reshape(n_metrics, n_bins, n_groups, N_BUCKETS)
 
 

@@ -306,11 +306,14 @@ def run_append(db_paths: Sequence[str], out_dir: str,
     The plan is re-derived with :meth:`ShardPlan.extended_to`, so existing
     shard boundaries (and files) are untouched; shards past the old
     ``t_end`` are new files. Join parameters come from the manifest so
-    appended rows join identically to the original generation (window
-    slop at the append boundary: a new kernel only joins memcpys fetched
-    by the same append query, i.e. up to ``join_window_ns`` of cross-
-    boundary matches may be missed — same order as the shard-boundary
-    approximation the paper already accepts). New shards are owned
+    appended rows join identically to the original generation, ACROSS
+    the ingest boundary included: a memcpy look-back query re-fetches
+    pre-watermark transfers within ``join_window_ns`` of the new
+    kernels' time range, so a newly appended kernel joins memcpys
+    ingested by a previous batch exactly as a from-scratch generation
+    would (the symmetric direction — an already-committed kernel row
+    gaining a newly appended memcpy match — would mean rewriting
+    committed rows and is not attempted). New shards are owned
     round-robin in the manifest; the pre-existing owner prefix is
     immutable history. The final manifest write garbage-collects stale
     summaries once (``TraceStore.gc_stale``).
@@ -365,6 +368,25 @@ def run_append(db_paths: Sequence[str], out_dir: str,
                     "regenerate the store to make it appendable")
             tr = read_rank_db(p, rank=src, min_rowids=(wm[0], wm[1]),
                               max_rowids=wm_new)
+            # Memcpy LOOK-BACK: a kernel appended THIS round may overlap
+            # transfers ingested by a PREVIOUS batch (rowid <= wm) within
+            # ``join_window_ns`` of the ingest boundary — re-fetch exactly
+            # those (time-bounded, rowid-capped: the kernel cap of 0 keeps
+            # old kernels out) so cross-batch matches are joined instead
+            # of silently dropped. Old kernels are never re-joined, so no
+            # duplicate rows can arise; the symmetric gap (an old kernel
+            # joining a NEWLY appended memcpy) would require rewriting
+            # committed rows and remains out of scope.
+            if len(tr.kernels) and wm[1] > 0:
+                look = read_rank_db(
+                    p, rank=src,
+                    start=int(tr.kernels.start.min()) - window,
+                    end=int(tr.kernels.end.max()) + window,
+                    max_rowids=(0, wm[1]))
+                if len(look.memcpys):
+                    tr = RankTrace(rank=tr.rank, kernels=tr.kernels,
+                                   memcpys=look.memcpys.concat(tr.memcpys),
+                                   gpus=tr.gpus)
         else:
             src = len(all_dbs)
             all_dbs.append(ap)

@@ -17,15 +17,21 @@ additive histogram counts ride the same psum collective on the jax
 backend). ``anomaly_score`` picks what the IQR fences run on: a moment
 score ("mean"/"std"/...) or a distribution score ("p99"/"iqr"/...).
 
-Incremental engine. The host backends (serial/process) aggregate through
-the two-level cache in :mod:`repro.core.aggregation`: an unchanged store
-is answered from the merged summary (``summary_{key}.npz``, validated
-against the shard fingerprints it covers); a changed store rescans ONLY
-the dirty/new shards and merges them with the clean shards' cached
-partials (``partial_{idx}_{qkey}.npy``) — bit-identical to a cold run.
-:meth:`VariabilityPipeline.append` closes the automated-workflow loop:
-append new trace (grown rank DBs or late-arriving ones) onto an existing
-store, delta-aggregate in O(dirty shards), re-fence anomalies.
+Incremental engine. ALL THREE backends aggregate through the two-level
+cache in :mod:`repro.core.aggregation`: an unchanged store is answered
+from the merged summary (``summary_{key}.npz``, validated against the
+shard fingerprints it covers); a changed store rescans ONLY the
+dirty/new shards and merges them with the clean shards' cached partials
+(``partial_{idx}_{qkey}.npy``) — bit-identical to a cold run on the
+same backend. The backends differ only in the dirty-shard producer the
+shared clean/dirty driver (``run_incremental``) is handed: an in-process
+loop (serial), the work-stealing pool below (process), or one batched
+SPMD collective over the dirty shards' raw events whose
+post-segment-reduce tensors are cached as float32 DEVICE partials (jax —
+``compute_partials_jax``). :meth:`VariabilityPipeline.append` closes the
+automated-workflow loop on any backend: append new trace (grown rank DBs
+or late-arriving ones) onto an existing store, delta-aggregate in
+O(dirty shards), re-fence anomalies.
 
 Scheduling. The process backend's aggregation phase is a work-stealing
 chunked queue (``imap_unordered`` over small shard chunks), not a static
@@ -48,11 +54,11 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from .aggregation import (AggregationResult, BinStats, compute_partials,
-                          finalize_aggregation, lookup_summary,
+from .aggregation import (AggregationResult, compute_partials,
+                          compute_partials_jax, lookup_summary,
                           run_incremental, DEFAULT_METRIC,
                           DEFAULT_REDUCERS)
-from .reducers import QuantileSketch, normalize_reducers
+from .reducers import normalize_reducers
 from .anomaly import (IQRReport, anomalous_bins, is_quantile_score,
                       top_variability_bins)
 from .events import table_rowid_hi
@@ -198,11 +204,13 @@ class VariabilityPipeline:
 
     # -- phase 2 -------------------------------------------------------------
     def aggregate(self, store_dir: str) -> AggregationResult:
-        """Incremental phase 2: summary hit → done; otherwise recompute
-        only dirty/new shards (work-stealing pool on the process backend)
-        and merge them with the clean shards' cached partials. The jax
-        backend keeps its full on-device scan — raw events must reach the
-        collectives — but shares the summary cache."""
+        """Incremental phase 2 on EVERY backend: summary hit → done;
+        otherwise recompute only dirty/new shards and merge them with the
+        clean shards' cached partials. The backends plug different
+        dirty-shard producers into the one clean/dirty driver: a serial
+        loop, the work-stealing process pool, or — jax — one batched SPMD
+        collective over the dirty shards' raw events whose per-shard
+        device partials are cached for the next delta."""
         cfg = self.cfg
         t0 = time.perf_counter()
         store = TraceStore(store_dir)
@@ -214,8 +222,9 @@ class VariabilityPipeline:
         metrics = cfg.metric_list
         suite = cfg.reducer_suite
 
-        # jax results come from float32 collectives — keyed separately so
-        # they are never served where exact float64 moments are expected.
+        # jax results come from float32 collectives — summaries AND
+        # device partials are keyed/namespaced separately so they are
+        # never served where exact float64 moments are expected.
         precision = "float32" if cfg.backend == "jax" else "exact"
         key = None
         if cfg.use_summary_cache:
@@ -226,23 +235,20 @@ class VariabilityPipeline:
             if cached is not None:
                 return cached
 
-        if cfg.backend == "jax":
-            shard_sets = assignment(man.n_shards, cfg.n_ranks, "block")
-            all_keys, dense, kind_parts = self._aggregate_jax(
-                store, shard_sets, plan, metrics, suite)
-            return finalize_aggregation(store, plan, metrics, cfg.group_by,
-                                        all_keys, dense, kind_parts, key,
-                                        t0, reducers=suite)
-
         compute_fn = None
         if cfg.backend == "process":
             def compute_fn(dirty, qkey):
                 return self._compute_partials_pool(
                     store_dir, dirty, plan, metrics, suite, qkey)
+        elif cfg.backend == "jax":
+            def compute_fn(dirty, qkey):
+                return compute_partials_jax(store, dirty, plan, metrics,
+                                            cfg.group_by, suite, qkey)
         return run_incremental(store, man.n_shards, plan, metrics,
                                cfg.group_by, cfg.n_ranks,
                                cfg.use_summary_cache, key, t0,
-                               reducers=suite, compute_fn=compute_fn)
+                               reducers=suite, compute_fn=compute_fn,
+                               precision=precision)
 
     def _compute_partials_pool(self, store_dir: str, dirty: List[int],
                                plan: ShardPlan, metrics: List[str],
@@ -269,91 +275,6 @@ class VariabilityPipeline:
             for res in pool.imap_unordered(_partial_worker, jobs):
                 out.extend(res)
         return out
-
-    def _aggregate_jax(self, store: TraceStore, shard_sets,
-                       plan: ShardPlan, metrics: List[str],
-                       reducers: Sequence[str] = DEFAULT_REDUCERS):
-        """jax backend: concat all rank events, shard over devices, use the
-        collaborative collective reduction — all metrics and groups in one
-        fused segment reduction per reducer (moments ride the
-        psum_scatter/pmin/pmax path, quantile histogram counts the same
-        additive psum path). Falls back to the device count available
-        (1 on this container, n on a pod)."""
-        import jax
-        import jax.numpy as jnp
-        from jax.sharding import Mesh
-        from .distributed import (distributed_binstats_grouped,
-                                  distributed_histogram_grouped)
-
-        from .aggregation import _shard_kind_bytes
-
-        ts_all, val_all, grp_all = [], [], []
-        kind_parts = []
-        for r in range(len(shard_sets)):
-            kinds: Dict[int, np.ndarray] = {}
-            for s in shard_sets[r]:
-                if not store.has_shard(int(s)):
-                    continue
-                cols = store.read_shard(int(s))
-                ts_all.append(cols["k_start"].astype(np.int64))
-                val_all.append(np.stack(
-                    [np.asarray(cols[m], np.float64) for m in metrics],
-                    axis=0))
-                if self.cfg.group_by is not None:
-                    grp_all.append(np.asarray(cols[self.cfg.group_by],
-                                              np.float64))
-                _shard_kind_bytes(cols, plan, kinds)
-            kind_parts.append(kinds)
-
-        M = len(metrics)
-        ts = (np.concatenate(ts_all) if ts_all
-              else np.zeros(0, np.int64))
-        vals = (np.concatenate(val_all, axis=1) if val_all
-                else np.zeros((M, 0)))
-        if self.cfg.group_by is not None and grp_all:
-            keys, gids = np.unique(np.concatenate(grp_all),
-                                   return_inverse=True)
-            if keys.size == 0:
-                keys, gids = np.asarray([0.0]), np.zeros(len(ts), np.int64)
-        else:
-            keys, gids = np.asarray([0.0]), np.zeros(len(ts), np.int64)
-        n_groups = len(keys)
-
-        # exact int64 binning on host (ns timestamps overflow device int32)
-        bins = plan.shard_of(ts).astype(np.int32)
-        dev = jax.devices()
-        n_dev = len(dev)
-        pad = (-len(ts)) % max(n_dev, 1)
-        valid = np.concatenate([np.ones(len(ts), bool), np.zeros(pad, bool)])
-        bins = np.concatenate([bins, np.zeros(pad, np.int32)])
-        gids = np.concatenate([gids.astype(np.int32),
-                               np.zeros(pad, np.int32)])
-        vals = np.concatenate([vals, np.zeros((M, pad))], axis=1)
-
-        mesh = Mesh(np.asarray(dev), ("data",))
-        # one host->device upload serves every reducer's collective
-        jbins, jgids = jnp.asarray(bins), jnp.asarray(gids)
-        jvals, jvalid = jnp.asarray(vals, jnp.float32), jnp.asarray(valid)
-        stats = np.asarray(distributed_binstats_grouped(
-            jbins, jgids, jvals, plan.n_shards, n_groups, mesh,
-            valid=jvalid))                   # (M, n_bins, n_groups, 5)
-        count = np.moveaxis(stats[..., 0], 0, -1).astype(np.float64)
-        states = {"moments": BinStats(
-            count=count,
-            sum=np.moveaxis(stats[..., 1], 0, -1).astype(np.float64),
-            sumsq=np.moveaxis(stats[..., 2], 0, -1).astype(np.float64),
-            min=np.where(count > 0,
-                         np.moveaxis(stats[..., 3], 0, -1), np.inf),
-            max=np.where(count > 0,
-                         np.moveaxis(stats[..., 4], 0, -1), -np.inf))}
-        if "quantile" in reducers:
-            hist = np.asarray(distributed_histogram_grouped(
-                jbins, jgids, jvals, plan.n_shards, n_groups,
-                mesh, valid=jvalid))
-            # (M, n_bins, G, B) -> (n_bins, G, M, B); bucket axis last
-            states["quantile"] = QuantileSketch(
-                counts=np.moveaxis(hist, 0, 2).astype(np.float64))
-        return [float(k) for k in keys], [states], kind_parts
 
     # -- end to end ----------------------------------------------------------
     def run(self, db_paths: Sequence[str], work_dir: str) -> PipelineResult:

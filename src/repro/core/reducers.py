@@ -17,6 +17,10 @@ generic over the statistic being computed:
   merge_groups()            reduce the group axis (== ungrouped statistic)
   select_metric(j)          1-D view of one metric
   to_payload()/from_payload()  flat dict of arrays for the summary cache
+  device_reduce(...)        SPMD path: collaborative segment reduce of raw
+                            samples on the jax mesh (lazy jax import)
+  from_device_block(block)  decode one shard's slice of the device output
+                            into a host state (the cached device partial)
 
 Registered reducers:
 
@@ -148,6 +152,34 @@ class MergeableReducer:
         min/max clamp)."""
         raise NotImplementedError
 
+    # -- device (jax/SPMD) partial export ------------------------------------
+    @classmethod
+    def device_reduce(cls, seg_ids: np.ndarray, values: np.ndarray,
+                      n_seg: int, mesh, valid: np.ndarray) -> np.ndarray:
+        """Collaborative segment reduce on the jax mesh (lazy import).
+
+        ``seg_ids``/``valid`` are (N,) arrays, ``values`` is
+        (n_metrics, N) — host or device (the batched driver uploads once
+        and shares the device arrays across the suite); N must already
+        be an exact multiple of the mesh axis size (the caller's
+        slot-wise device partition guarantees it). Returns the
+        replicated post-segment-reduce tensor as a HOST
+        array of shape ``(n_seg, n_metrics, *private)`` — the raw
+        material of the per-shard device partials the incremental jax
+        driver caches. Subclasses with a device path override."""
+        raise NotImplementedError(
+            f"reducer {cls.name!r} has no device (jax) path")
+
+    @classmethod
+    def from_device_block(cls, block: np.ndarray) -> "MergeableReducer":
+        """Decode one shard's ``(B, G, M, *private)`` slice of the
+        :meth:`device_reduce` output into a host state — float64 arrays
+        holding the device's float32 values exactly, with empty cells
+        restored to the merge identity, so the host ``merge_at`` fold
+        over device partials is deterministic and cacheable."""
+        raise NotImplementedError(
+            f"reducer {cls.name!r} has no device (jax) path")
+
     # -- summary-cache (de)serialization ------------------------------------
     @classmethod
     def payload_prefix(cls) -> str:
@@ -264,6 +296,34 @@ class BinStats(MergeableReducer):
             out.max[:, :, j] = mx.reshape(n_bins, n_groups)
         return out
 
+    @classmethod
+    def device_reduce(cls, seg_ids: np.ndarray, values: np.ndarray,
+                      n_seg: int, mesh, valid: np.ndarray) -> np.ndarray:
+        import jax.numpy as jnp
+
+        from .distributed import distributed_moments_flat
+        out = distributed_moments_flat(
+            jnp.asarray(seg_ids), jnp.asarray(values, jnp.float32),
+            n_seg, mesh, valid=jnp.asarray(valid))
+        return np.moveaxis(np.asarray(out), 0, 1)   # (n_seg, M, 5)
+
+    @classmethod
+    def from_device_block(cls, block: np.ndarray) -> "BinStats":
+        """(B, G, M, 5) device moments -> host state. Cells no sample
+        reached carry the device's finite min/max sentinels — restored
+        to the ±inf merge identity here (count is exact for them: a sum
+        of zero weights)."""
+        count = block[..., 0].astype(np.float64)
+        occupied = count > 0
+        return BinStats(
+            count=count,
+            sum=block[..., 1].astype(np.float64),
+            sumsq=block[..., 2].astype(np.float64),
+            min=np.where(occupied, block[..., 3].astype(np.float64),
+                         np.inf),
+            max=np.where(occupied, block[..., 4].astype(np.float64),
+                         -np.inf))
+
     # -- derived statistics (paper reports min / max / std) -----------------
     @property
     def mean(self) -> np.ndarray:
@@ -370,6 +430,23 @@ class QuantileSketch(MergeableReducer):
             out.counts[:, :, j, :] = c.reshape(n_bins, n_groups,
                                                N_BUCKETS)
         return out
+
+    @classmethod
+    def device_reduce(cls, seg_ids: np.ndarray, values: np.ndarray,
+                      n_seg: int, mesh, valid: np.ndarray) -> np.ndarray:
+        import jax.numpy as jnp
+
+        from .distributed import distributed_histogram_flat
+        out = distributed_histogram_flat(
+            jnp.asarray(seg_ids), jnp.asarray(values, jnp.float32),
+            n_seg, mesh, valid=jnp.asarray(valid))
+        return np.moveaxis(np.asarray(out), 0, 1)   # (n_seg, M, NB)
+
+    @classmethod
+    def from_device_block(cls, block: np.ndarray) -> "QuantileSketch":
+        """(B, G, M, N_BUCKETS) device counts -> host state (bucket axis
+        is already last; counts are additive so no identity fixup)."""
+        return QuantileSketch(counts=block.astype(np.float64))
 
     # -- queries ------------------------------------------------------------
     def total(self) -> np.ndarray:

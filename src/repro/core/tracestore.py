@@ -21,7 +21,10 @@ the shards, both round-tripped through the reducer ``to_payload`` /
 ``partial_{idx:06d}_{qkey}.npy`` — per-shard partial cache
     One shard's pre-merge reducer states for one query. The 16-hex
     ``qkey`` hashes the QUERY only: (SUMMARY_VERSION, plan triple,
-    metrics, group_by, reducer suite). The payload embeds the
+    metrics, group_by, reducer suite, and — for the jax backend's
+    DEVICE partials — a ``precision="float32"`` namespace salt, so the
+    float32 post-segment-reduce tensors never masquerade as exact host
+    partials). The payload embeds the
     ``(size, mtime_ns)`` fingerprint of the shard file it was computed
     from; a fingerprint mismatch at read time is a miss, so a partial can
     never be served for rewritten shard data. ``write_shard`` invalidates
@@ -243,20 +246,29 @@ class TraceStore:
 
     def partial_key(self, plan_key: Sequence[int], metrics: Sequence[str],
                     group_by: Optional[str],
+                    precision: str = "exact",
                     reducers: Sequence[str] = ("moments",)) -> str:
         """Per-shard partial-cache key over the same query blob (salted
         apart from summary keys), EXCEPT that the plan is keyed by
         ``(t_start, shard width)`` rather than its end: an append-extended
         plan (``ShardPlan.extended_to``) keeps every existing boundary, so
         pre-append partials remain addressable — and valid — after the
-        store grows. No precision axis: partials exist only for the exact
-        float64 host path — the jax backend reduces raw events
-        on-device."""
+        store grows. ``precision`` namespaces the two partial producers
+        apart, exactly like the summary key: the float64 host scan writes
+        ``"exact"`` partials, the jax backend's DEVICE partials (the
+        post-segment-reduce float32 tensors) live under ``"float32"`` and
+        are never merged into an exact-path result. Both namespaces share
+        the ``partial_{idx}_{qkey}`` file shape, so per-shard
+        invalidation (:meth:`write_shard` → :meth:`clear_partials`) and
+        the liveness sweep (:meth:`gc_stale`) cover device partials with
+        no extra machinery."""
         t_start, t_end, n_shards = (int(x) for x in plan_key)
         blob = self._query_blob(
             [t_start], metrics, group_by, reducers)
         blob["kind"] = "partial"
         blob["width"] = (t_end - t_start) / n_shards
+        if precision != "exact":      # legacy keys predate the namespace
+            blob["precision"] = precision
         return hashlib.sha256(
             json.dumps(blob, sort_keys=True).encode()).hexdigest()[:16]
 

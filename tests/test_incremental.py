@@ -345,6 +345,85 @@ def test_rebinned_delta_equals_rebinned_cold_after_append(growing_trace,
     _assert_results_equal(delta, cold)
 
 
+def _single_kernel_trace(rank, starts, durations_ns, m_starts, m_bytes):
+    """Hand-built RankTrace (device 0 throughout) for boundary tests."""
+    from repro.core import EventTable, RankTrace
+    from repro.core.events import COPY_H2D, GpuInfo
+    starts = np.asarray(starts, np.int64)
+    nk = len(starts)
+    kernels = EventTable(
+        start=starts, end=starts + np.asarray(durations_ns, np.int64),
+        device=np.zeros(nk, np.int32), stream=np.zeros(nk, np.int32),
+        memory_stall=np.full(nk, 100.0, np.float32),
+        bytes=np.zeros(nk, np.int64), copy_kind=np.zeros(nk, np.int32),
+        name_id=np.zeros(nk, np.int32), kind=np.zeros(nk, np.int32))
+    m_starts = np.asarray(m_starts, np.int64)
+    nm = len(m_starts)
+    memcpys = EventTable(
+        start=m_starts, end=m_starts + 1000,
+        device=np.zeros(nm, np.int32), stream=np.zeros(nm, np.int32),
+        memory_stall=np.zeros(nm, np.float32),
+        bytes=np.asarray(m_bytes, np.int64),
+        copy_kind=np.full(nm, COPY_H2D, np.int32),
+        name_id=np.zeros(nm, np.int32), kind=np.ones(nm, np.int32))
+    gpus = [GpuInfo(id=0, name="A100", bandwidth=1, memory=1, sm_count=1)]
+    return RankTrace(rank=rank, kernels=kernels, memcpys=memcpys,
+                     gpus=gpus)
+
+
+def test_append_joins_memcpys_across_batch_boundary(tmp_path):
+    """Regression (ROADMAP): a kernel appended in batch 2 whose join
+    window reaches back over the ingest boundary must join memcpys
+    ingested by batch 1 — the old query only saw memcpys fetched by the
+    SAME append read, so such cross-batch matches were silently dropped.
+    The appended store must match a from-scratch generation of the full
+    DB for that kernel's joined rows."""
+    t0 = 1_700_000_000_000_000_000
+    window = 1_000_000                      # GenerationConfig default
+    # batch 1: kernels spanning 4 intervals + one memcpy at t0 + 3.5 s
+    m_start = t0 + 3 * _NS + _NS // 2
+    base = _single_kernel_trace(
+        0, starts=[t0 + i * _NS for i in range(4)],
+        durations_ns=[10_000] * 4, m_starts=[m_start], m_bytes=[4096])
+    db = str(tmp_path / "rank0.sqlite")
+    write_rank_db(db, base)
+    out = str(tmp_path / "store")
+    run_generation([db], out, n_ranks=1)
+
+    # batch 2: ONE kernel within the join window of batch 1's memcpy
+    k_new = m_start + window // 2
+    tail = _single_kernel_trace(0, starts=[k_new],
+                                durations_ns=[10_000], m_starts=[],
+                                m_bytes=[])
+    append_rank_db(db, tail)
+    rep = run_append([db], out)
+    assert rep.appended_rows >= 1
+
+    store = TraceStore(out)
+    man = store.read_manifest()
+    plan = ShardPlan(man.t_start, man.t_end, man.n_shards)
+    cols = store.read_shard(int(plan.shard_of(np.asarray([k_new]))[0]))
+    row = cols["k_start"] == float(k_new)
+    assert row.sum() == 1                   # no duplicate joined rows
+    assert cols["joined"][row] == 1.0       # cross-batch match found
+    assert cols["m_bytes"][row] == 4096.0
+
+    # the appended store's joined-row count equals a from-scratch build
+    full = _single_kernel_trace(
+        0, starts=[t0 + i * _NS for i in range(4)] + [k_new],
+        durations_ns=[10_000] * 5, m_starts=[m_start], m_bytes=[4096])
+    db2 = str(tmp_path / "rank0_full.sqlite")
+    write_rank_db(db2, full)
+    out2 = str(tmp_path / "store_scratch")
+    run_generation([db2], out2, n_ranks=1)
+    a = run_aggregation(TraceStore(out), metrics=["k_stall"])
+    b = run_aggregation(TraceStore(out2), metrics=["k_stall"])
+    np.testing.assert_array_equal(a.stats.count, b.stats.count)
+    for k in b.copy_kind_bytes:
+        np.testing.assert_array_equal(a.copy_kind_bytes[k],
+                                      b.copy_kind_bytes[k])
+
+
 # --- dirty-shard invalidation (read counters) -------------------------------
 
 def test_shard_rewrite_recomputes_only_touched_partial(growing_trace,
