@@ -14,6 +14,8 @@ Floors (the repo's banked acceptance bars):
   incremental   host delta vs cold       ``incremental_speedup``    >= 5x
   incremental   (backend jax) append+delta vs cold jax re-scan
                                         ``append_plus_delta_speedup`` >= 5x
+  query_fusion  8 mixed filtered queries fused vs sequential
+                                        ``fusion_speedup``          >= 3x
 
 Records produced with ``--smoke`` carry ``"smoke": true`` and are held
 only to STRUCTURAL checks (schema, finite positive timings, the bench's
@@ -36,16 +38,18 @@ import math
 import sys
 from typing import List
 
-FLOOR = 5.0
-
-# bench name -> (speedup field, timing fields that must be finite & > 0)
+# bench name -> (speedup field, timing fields that must be finite & > 0,
+#                speedup floor)
 SCHEMAS = {
     "multimetric": ("cache_speedup",
-                    ("cold_us", "warm_cached_us", "one_pass_m_metrics_us")),
+                    ("cold_us", "warm_cached_us", "one_pass_m_metrics_us"),
+                    5.0),
     "quantile": ("cache_speedup",
-                 ("cold_us", "warm_cached_us", "with_quantile_us")),
+                 ("cold_us", "warm_cached_us", "with_quantile_us"), 5.0),
     "incremental": ("incremental_speedup",
-                    ("cold_rescan_us", "delta_us", "append_us")),
+                    ("cold_rescan_us", "delta_us", "append_us"), 5.0),
+    "query_fusion": ("fusion_speedup",
+                     ("fused_us", "sequential_us"), 3.0),
 }
 
 
@@ -54,7 +58,7 @@ def check_record(path: str, rec: dict) -> List[str]:
     bench = rec.get("bench")
     if bench not in SCHEMAS:
         return [f"{path}: unknown bench kind {bench!r}"]
-    speedup_field, timing_fields = SCHEMAS[bench]
+    speedup_field, timing_fields, floor = SCHEMAS[bench]
     if bench == "incremental" and rec.get("backend") == "jax":
         # the jax loop's acceptance bar covers the whole online round
         # trip: append ingest + delta vs a cold device re-scan
@@ -74,10 +78,10 @@ def check_record(path: str, rec: dict) -> List[str]:
     if rec.get("smoke"):
         return []            # structural checks only — floors don't bind
     speedup = float(rec[speedup_field])
-    if speedup < FLOOR:
+    if speedup < floor:
         problems.append(
             f"{path}: {speedup_field} = {speedup:.2f}x is below the "
-            f"{FLOOR:.0f}x floor ({bench}"
+            f"{floor:.0f}x floor ({bench}"
             f"{'/jax' if rec.get('backend') == 'jax' else ''})")
     return problems
 

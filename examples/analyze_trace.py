@@ -51,6 +51,14 @@ def main() -> None:
                     help="after the analysis, append a late-arriving "
                          "synthetic rank DB and delta-aggregate (only "
                          "dirty/new shards are rescanned)")
+    ap.add_argument("--query", default=None,
+                    help="JSON list of declarative query specs (inline, "
+                         "or @file.json) — run as ONE fused batch over "
+                         "the store and print each query's answer plus "
+                         "provenance (cache hit / shards pruned / rows "
+                         "filtered). Example: '[{\"metrics\": "
+                         "[\"k_stall\"], \"group_by\": \"m_kind\", "
+                         "\"transfer_kinds\": [1, 2]}]'")
     args = ap.parse_args()
 
     tmp = tempfile.mkdtemp(prefix="repro_analyze_")
@@ -117,8 +125,50 @@ def main() -> None:
           f"(from_cache={again.from_cache}, "
           f"first pass {agg.seconds*1e3:.1f}ms)")
 
+    if args.query:
+        _query_demo(pipe, os.path.join(tmp, "store"), args.query)
+
     if args.append_demo:
         _append_demo(pipe, os.path.join(tmp, "store"), db_paths, tmp)
+
+
+def _query_demo(pipe, store_dir, spec_arg) -> None:
+    """Run a JSON batch of declarative queries as ONE fused scan and
+    print each answer with its execution provenance."""
+    import json
+
+    from repro.core import Query
+
+    blob = (open(spec_arg[1:]).read() if spec_arg.startswith("@")
+            else spec_arg)
+    specs = json.loads(blob)
+    if isinstance(specs, dict):
+        specs = [specs]
+    queries = [Query.from_spec(s) for s in specs]
+    results = pipe.query(store_dir, queries)
+    print(f"\n=== fused query batch: {len(queries)} queries, "
+          f"one shard scan ===")
+    for qr in results:
+        q = qr.query
+        desc = ",".join(q.metrics) + (f" by {q.group_by}" if q.group_by
+                                      else "")
+        preds = []
+        if q.time_window:
+            preds.append(f"window=[{q.time_window[0]},{q.time_window[1]})")
+        if q.ranks is not None:
+            preds.append(f"ranks={list(q.ranks)}")
+        if q.kernel_names is not None:
+            preds.append(f"names={list(q.kernel_names)}")
+        if q.transfer_kinds is not None:
+            preds.append(f"kinds={list(q.transfer_kinds)}")
+        s = qr.result.stats
+        occ = s.count > 0
+        mean = s.mean[occ].mean() if occ.any() else 0.0
+        print(f"  [{desc}] {' '.join(preds) or '(no predicates)'}")
+        print(f"    n={int(s.count.sum()):,} mean={mean:.4g} "
+              f"{q.anomaly_score}-anomalies="
+              f"{int(qr.anomalies.flags.sum())}")
+        print(f"    provenance: {qr.provenance()}")
 
 
 def _append_demo(pipe, store_dir, db_paths, tmp) -> None:

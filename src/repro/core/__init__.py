@@ -12,6 +12,11 @@ Layout (one module per paper concept — see DESIGN.md §2/§3):
   reducers      pluggable mergeable statistics: "moments" (BinStats) and
                 "quantile" (log-bucket QuantileSketch) per (bin, group,
                 metric) cell
+  query         declarative Query API: frozen Query objects whose
+                canonical (order-insensitive, version-stamped) form is
+                THE cache key; QueryPlan compiles a batch into one fused
+                scan with predicate pushdown (time window → shard
+                pruning, rank/name/kind → row filters)
   aggregation   phase 2, incremental on every backend: per-shard partial
                 producer (host scan or batched device collective) ->
                 clean/dirty classification -> suite-generic merge ->
@@ -37,11 +42,15 @@ from .generation import (AppendReport, GenerationConfig, GenerationReport,
 from .reducers import (MergeableReducer, QuantileSketch, get_reducer,
                        normalize_reducers, register_reducer,
                        REDUCER_REGISTRY, QUANTILE_REL_ERR)
+from .query import (LanePlan, Query, QueryPlan, QueryResult,
+                    SUMMARY_VERSION, is_quantile_score)
 from .aggregation import (AggregationResult, BinStats, GroupedPartial,
                           ShardPartial, bin_samples, bin_samples_grouped,
                           classify_shards, compute_partials_jax,
-                          compute_shard_partial, load_rank_partials,
-                          round_robin_merge, run_aggregation,
-                          run_incremental, DEFAULT_METRIC)
-from .anomaly import IQRReport, anomalous_bins, iqr_detect, recovered
+                          compute_shard_partial, execute_plan,
+                          load_rank_partials, round_robin_merge,
+                          run_aggregation, run_incremental, run_queries,
+                          DEFAULT_METRIC)
+from .anomaly import (IQRReport, anomalous_bins, iqr_detect, recovered,
+                      report_for_query)
 from .pipeline import PipelineConfig, PipelineResult, VariabilityPipeline

@@ -70,6 +70,23 @@ per-shard post-segment-reduce tensors and cached in a
 ``precision="float32"`` partial namespace — so after an append the
 collectives run only over the appended rows, and clean shards re-enter
 the merge as host partials without touching a device.
+
+Declarative query engine
+------------------------
+Since the Query API (:mod:`repro.core.query`) the clean/dirty driver is
+the single-lane special case of :func:`execute_plan`, which runs a
+BATCH of declarative queries as one fused execution: per-lane summary
+probes, one shared stat pass, one scan over the union of dirty shards
+(each file read once — every lane's metrics, groups, reducers and row
+predicates ride the same pass via :func:`compute_lane_partials` /
+:func:`compute_lane_partials_jax`), then the per-lane merge tail every
+driver shares (:func:`_merge_lane`). Cache keys hash the query's
+CANONICAL form (order-insensitive metrics/reducers, predicates
+included), the engine computes and caches in canonical metric order,
+and results are permuted back to the caller's order — so an old-style
+``run_aggregation(metrics=...)`` call, a reordered re-query and a
+:class:`~repro.core.query.Query` all share one cache entry
+bit-identically.
 """
 
 from __future__ import annotations
@@ -80,6 +97,10 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+import collections
+
+from .query import (DEFAULT_METRIC, LanePlan, Query, QueryPlan,
+                    QueryResult)
 from .reducers import (BinStats, QuantileSketch, get_reducer,
                        normalize_reducers)
 from .sharding import ShardPlan, assignment, cyclic_assignment
@@ -87,15 +108,14 @@ from .tracestore import SUMMARY_VERSION, TraceStore
 
 __all__ = [
     "AggregationResult", "BinStats", "QuantileSketch", "GroupedPartial",
-    "ShardPartial", "bin_samples", "bin_samples_grouped",
-    "compute_shard_partial", "compute_partials", "compute_partials_jax",
-    "classify_shards", "rank_partial_from_shards", "load_rank_grouped",
-    "load_rank_partials", "round_robin_merge", "run_aggregation",
-    "run_incremental", "DEFAULT_METRIC", "STAT_FIELDS",
+    "Query", "QueryPlan", "QueryResult", "ShardPartial", "bin_samples",
+    "bin_samples_grouped", "compute_shard_partial", "compute_partials",
+    "compute_lane_partials", "compute_lane_partials_jax",
+    "compute_partials_jax", "classify_shards", "execute_plan",
+    "rank_partial_from_shards", "load_rank_grouped", "load_rank_partials",
+    "round_robin_merge", "run_aggregation", "run_incremental",
+    "run_queries", "DEFAULT_METRIC", "STAT_FIELDS",
 ]
-
-# Metrics the analyzer computes per time bin. Each is (what column, weight).
-DEFAULT_METRIC = "k_stall"            # memory-stall ns — the Fig-1a metric
 
 STAT_FIELDS = BinStats.fields
 
@@ -234,7 +254,12 @@ class AggregationResult:
 
 def _shard_kind_bytes(cols: Dict[str, np.ndarray], plan: ShardPlan,
                       kind_bytes: Dict[int, np.ndarray]) -> None:
-    """Accumulate the Fig-1b transfer-direction breakdown for one shard."""
+    """Accumulate the Fig-1b transfer-direction breakdown for one shard.
+
+    One fused ``np.bincount`` over (kind, bin) — bitwise-identical to
+    the per-kind ``np.add.at`` loop (both accumulate in input order, and
+    rows of one kind keep their relative order under the stable grouping
+    below) at a fraction of the cost."""
     joined = cols["joined"] > 0
     if not joined.any():
         return
@@ -242,10 +267,28 @@ def _shard_kind_bytes(cols: Dict[str, np.ndarray], plan: ShardPlan,
     kk = cols["m_kind"][joined].astype(np.int64)
     kt = cols["m_start"][joined].astype(np.int64)
     kbins = plan.shard_of(kt)
-    for kind in np.unique(kk):
-        m = kk == kind
-        acc = kind_bytes.setdefault(int(kind), np.zeros(plan.n_shards))
-        np.add.at(acc, kbins[m], kb[m])
+    kinds, kidx = np.unique(kk, return_inverse=True)
+    acc = np.bincount(kidx * plan.n_shards + kbins, weights=kb,
+                      minlength=len(kinds) * plan.n_shards
+                      ).reshape(len(kinds), plan.n_shards)
+    for i, kind in enumerate(kinds):
+        prev = kind_bytes.setdefault(int(kind), np.zeros(plan.n_shards))
+        prev += acc[i]
+
+
+def _bounded_unique(ids: np.ndarray, bound: int,
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """``np.unique(ids, return_inverse=True)`` for int ids known to lie
+    in ``[0, bound)`` — an O(n + bound) occupancy table instead of the
+    O(n log n) sort, which matters at fused-batch rates where bin ids
+    are uniqued once per (query lane × shard). Returns the same (sorted
+    unique values, inverse) contract bit for bit."""
+    occ = np.zeros(bound, bool)
+    occ[ids] = True
+    uniq = np.flatnonzero(occ)
+    lookup = np.zeros(bound, np.int64)
+    lookup[uniq] = np.arange(len(uniq))
+    return uniq, lookup[ids]
 
 
 # --- per-shard partial producer (the incremental unit of work) -------------
@@ -272,6 +315,11 @@ class ShardPartial:
     # a partial is only reusable under an APPEND-EXTENDED plan when no
     # m_start reached the old plan end (see _adapt_partial_plan)
     m_start_hi: int = -1
+    # scan provenance (transient, NOT serialized — a cache-served partial
+    # reports 0/0): rows the shard file held vs rows the query's row
+    # predicates let through to the reducers
+    rows_seen: int = 0
+    rows_kept: int = 0
 
     def kind_dict(self) -> Dict[int, np.ndarray]:
         return {int(k): self.kind_bytes[i]
@@ -280,15 +328,22 @@ class ShardPartial:
 
 def _scan_shard(store: TraceStore, idx: int, plan: ShardPlan,
                 metrics: Sequence[str], group_by: Optional[str],
+                query: Optional[Query] = None,
+                cols: Optional[Dict[str, np.ndarray]] = None,
                 ) -> Tuple[ShardPartial, Optional[Tuple[np.ndarray, ...]]]:
     """Read + validate ONE shard and build everything about its partial
     EXCEPT the reducer states — the scaffolding both producers (host
     ``bin_grouped`` scan and jax device collective) share: touched bins,
     local group keys, transfer-kind bytes, the ``m_start_hi``
-    plan-extension guard. Returns ``(partial-with-empty-states, rows)``
-    where ``rows`` is ``None`` for an empty shard, else
+    plan-extension guard. ``query`` pushes its row predicates down into
+    the scan (the mask is applied to every column BEFORE group discovery,
+    binning and the byte breakdown — the scan-then-mask contract), and
+    ``cols`` lets the fused multi-query executor share one shard read
+    across lanes. Returns ``(partial-with-empty-states, rows)`` where
+    ``rows`` is ``None`` for an empty shard, else
     ``(ts, vals (M, N), local_bin, gids)`` for the producer to reduce."""
-    cols = store.read_shard(int(idx))
+    if cols is None:
+        cols = store.read_shard(int(idx))
     missing = [m for m in metrics if m not in cols]
     if missing:
         raise KeyError(f"metrics {missing} not in shard columns "
@@ -296,14 +351,35 @@ def _scan_shard(store: TraceStore, idx: int, plan: ShardPlan,
     if group_by is not None and group_by not in cols:
         raise KeyError(f"group_by column {group_by!r} not in shard "
                        f"columns {sorted(cols)}")
+    rows_seen = int(np.asarray(cols["k_start"]).shape[0])
+    rows_kept = rows_seen
+    if query is not None:
+        mask = query.row_mask(cols)
+        if mask is not None:
+            # materialize only the columns the rest of the scan touches,
+            # through an index vector rather than the boolean mask —
+            # boolean fancy-indexing rescans all n rows PER COLUMN,
+            # where flatnonzero pays O(n) once and O(kept) per column;
+            # at fused-batch rates (every lane × every shard) that
+            # difference is a measurable slice of the pass
+            sel = np.flatnonzero(mask)
+            needed = {"k_start", "joined", "m_bytes", "m_kind", "m_start",
+                      *metrics}
+            if group_by is not None:
+                needed.add(group_by)
+            cols = {c: np.asarray(v)[sel] for c, v in cols.items()
+                    if c in needed}
+            rows_kept = int(sel.size)
     ts = cols["k_start"].astype(np.int64)
     if ts.size == 0:
-        # an empty shard contributes no rows and NO group keys
+        # an empty (or fully filtered) shard contributes no rows and NO
+        # group keys
         return ShardPartial(
             idx=int(idx), n_bins=plan.n_shards,
             bins=np.zeros(0, np.int64), group_keys=np.zeros(0, np.float64),
             states={}, kind_keys=np.zeros(0, np.int64),
-            kind_bytes=np.zeros((0, plan.n_shards))), None
+            kind_bytes=np.zeros((0, plan.n_shards)),
+            rows_seen=rows_seen, rows_kept=rows_kept), None
     vals = np.stack([np.asarray(cols[m], np.float64) for m in metrics],
                     axis=0)
     if group_by is None:
@@ -312,7 +388,7 @@ def _scan_shard(store: TraceStore, idx: int, plan: ShardPlan,
     else:
         keys, gids = np.unique(np.asarray(cols[group_by], np.float64),
                                return_inverse=True)
-    bins, local_bin = np.unique(plan.shard_of(ts), return_inverse=True)
+    bins, local_bin = _bounded_unique(plan.shard_of(ts), plan.n_shards)
     kind_bytes: Dict[int, np.ndarray] = {}
     _shard_kind_bytes(cols, plan, kind_bytes)
     kinds = sorted(kind_bytes)
@@ -325,7 +401,7 @@ def _scan_shard(store: TraceStore, idx: int, plan: ShardPlan,
         kind_keys=np.asarray(kinds, np.int64),
         kind_bytes=(np.stack([kind_bytes[k] for k in kinds]) if kinds
                     else np.zeros((0, plan.n_shards))),
-        m_start_hi=m_start_hi)
+        m_start_hi=m_start_hi, rows_seen=rows_seen, rows_kept=rows_kept)
     return sp, (ts, vals, local_bin, gids)
 
 
@@ -333,15 +409,20 @@ def compute_shard_partial(store: TraceStore, idx: int, plan: ShardPlan,
                           metrics: Sequence[str],
                           group_by: Optional[str] = None,
                           reducers: Sequence[str] = DEFAULT_REDUCERS,
+                          query: Optional[Query] = None,
+                          cols: Optional[Dict[str, np.ndarray]] = None,
                           ) -> ShardPartial:
     """Scan ONE shard file and reduce it: every reducer, metric and group
     in a single pass over the rows. The accumulation (``bin_grouped`` per
     reducer over the full dense plan, then sliced to the touched bins) is
     bit-identical to the pre-split rank loop, so cold results never moved
-    when the engine went incremental."""
+    when the engine went incremental. ``query`` pushes row predicates
+    into the scan; ``cols`` reuses an already-read shard (the fused
+    multi-query pass)."""
     metrics = list(metrics)
     suite = normalize_reducers(reducers)
-    sp, rows = _scan_shard(store, idx, plan, metrics, group_by)
+    sp, rows = _scan_shard(store, idx, plan, metrics, group_by,
+                           query=query, cols=cols)
     if rows is None:
         return sp
     ts, vals, _, gids = rows
@@ -428,6 +509,7 @@ def classify_shards(store: TraceStore, indices: Sequence[int],
                     use_cache: bool = True,
                     stats: Optional[Dict[int, Tuple[int, int, int]]] = None,
                     precision: str = "exact",
+                    query: Optional[Query] = None,
                     ) -> Tuple[str, List[ShardPartial], List[int]]:
     """Split the shard universe into (clean partials loaded from cache,
     dirty indices to recompute). A shard is clean iff a cached partial
@@ -437,11 +519,17 @@ def classify_shards(store: TraceStore, indices: Sequence[int],
     — so any rewrite, append or engine-version bump dirties exactly the
     shards it touched. ``precision`` picks the partial namespace: the
     host scan's exact float64 partials vs the jax backend's float32
-    device partials (they share all the machinery above)."""
+    device partials (they share all the machinery above). ``query``
+    carries the canonical form the key is derived from (legacy callers
+    omit it and one is built from the metrics/group_by/reducers args);
+    a payload whose embedded metric ORDER differs from the expected one
+    is a miss — the engine caches in canonical order, and serving a
+    same-key payload with a different metric axis would silently
+    transpose results."""
     suite = normalize_reducers(reducers)
     qkey = store.partial_key((plan.t_start, plan.t_end, plan.n_shards),
                              metrics, group_by, precision=precision,
-                             reducers=suite)
+                             reducers=suite, query=query)
     clean: List[ShardPartial] = []
     dirty: List[int] = []
     for idx in indices:
@@ -454,7 +542,8 @@ def classify_shards(store: TraceStore, indices: Sequence[int],
         if (payload is not None
                 and int(payload.get("version", -1)) == SUMMARY_VERSION
                 and np.array_equal(payload["fingerprint"],
-                                   np.asarray(fp, np.int64))):
+                                   np.asarray(fp, np.int64))
+                and [str(m) for m in payload["metrics"]] == list(metrics)):
             sp = _adapt_partial_plan(payload, int(idx), plan)
         if sp is not None:
             clean.append(sp)
@@ -467,23 +556,73 @@ def compute_partials(store: TraceStore, indices: Sequence[int],
                      plan: ShardPlan, metrics: Sequence[str],
                      group_by: Optional[str],
                      reducers: Sequence[str] = DEFAULT_REDUCERS,
-                     qkey: Optional[str] = None) -> List[ShardPartial]:
+                     qkey: Optional[str] = None,
+                     query: Optional[Query] = None) -> List[ShardPartial]:
     """Recompute partials for ``indices`` (one worker's chunk of the
     work queue); with ``qkey`` set, each is atomically persisted to the
     partial cache as soon as it is produced (crash-safe: a dying worker
-    leaves complete partials or none, never torn files)."""
+    leaves complete partials or none, never torn files). ``query``
+    pushes row predicates into the scan."""
     out = []
     for idx in indices:
         if not store.has_shard(int(idx)):
             continue
         fp = store.stat_shard(int(idx))
         sp = compute_shard_partial(store, int(idx), plan, metrics,
-                                   group_by, reducers)
+                                   group_by, reducers, query=query)
         if qkey is not None and fp is not None:
             store.write_partial(int(idx), qkey, shard_partial_payload(
                 sp, plan, metrics, group_by, fp))
         out.append(sp)
     return out
+
+
+def compute_lane_partials(store: TraceStore,
+                          work_items: Sequence[Tuple[int, Sequence[int]]],
+                          lanes: Sequence[LanePlan],
+                          persist: bool = True,
+                          ) -> Dict[int, List[ShardPartial]]:
+    """The fused multi-query producer (host): every dirty shard file is
+    read ONCE and each lane that needs it reduces its own metrics /
+    groups / predicates off the shared columns — per-query reducer lanes
+    riding one pass. Returns ``{lane index -> [ShardPartial]}``; with
+    ``persist``, each partial is atomically written to its lane's
+    partial-cache namespace as soon as it is produced.
+
+    Persistence runs on ONE background writer thread: pack + write
+    syscalls overlap the next shard's scan (both release the GIL), each
+    file write stays atomic (a crash still leaves complete cache entries
+    or none), and the single writer serializes the io-counter updates.
+    All futures are drained before returning, so callers observe fully
+    persisted partials and any write error surfaces here."""
+    import concurrent.futures
+
+    fresh: Dict[int, List[ShardPartial]] = collections.defaultdict(list)
+
+    def _persist(idx, lane, sp, fp):
+        store.write_partial(idx, lane.qkey, shard_partial_payload(
+            sp, lane.plan, lane.metrics, lane.query.group_by, fp))
+
+    pending = []
+    with concurrent.futures.ThreadPoolExecutor(max_workers=1) as writer:
+        for idx, lane_ids in work_items:
+            if not store.has_shard(int(idx)):
+                continue
+            fp = store.stat_shard(int(idx))
+            cols = store.read_shard(int(idx))
+            for li in lane_ids:
+                lane = lanes[li]
+                sp = compute_shard_partial(
+                    store, int(idx), lane.plan, lane.metrics,
+                    lane.query.group_by, lane.reducers, query=lane.query,
+                    cols=cols)
+                if persist and lane.qkey and fp is not None:
+                    pending.append(writer.submit(_persist, int(idx),
+                                                 lane, sp, fp))
+                fresh[li].append(sp)
+    for f in pending:
+        f.result()
+    return fresh
 
 
 def _slotwise_device_partition(counts: Sequence[int], n_dev: int,
@@ -522,29 +661,37 @@ def _slotwise_device_partition(counts: Sequence[int], n_dev: int,
     return row, valid
 
 
-def compute_partials_jax(store: TraceStore, indices: Sequence[int],
-                         plan: ShardPlan, metrics: Sequence[str],
-                         group_by: Optional[str],
-                         reducers: Sequence[str] = DEFAULT_REDUCERS,
-                         qkey: Optional[str] = None,
-                         ) -> List[ShardPartial]:
-    """The jax backend's dirty-shard producer: ONE batched device
-    collective over every dirty shard's raw events, sliced back into
-    per-shard DEVICE partials (the post-segment-reduce float32 tensors).
+def compute_lane_partials_jax(store: TraceStore,
+                              work_items: Sequence[Tuple[int,
+                                                         Sequence[int]]],
+                              lanes: Sequence[LanePlan],
+                              persist: bool = True,
+                              ) -> Dict[int, List[ShardPartial]]:
+    """The jax backend's fused dirty-shard producer: ONE batched device
+    collective per reducer over every (query lane × dirty shard) slot's
+    raw events, sliced back into per-slot DEVICE partials (the
+    post-segment-reduce float32 tensors).
 
-    Each dirty shard contributes a ragged block of the flat segment
-    space — its touched bins × its local group keys — so the collective
-    cost is proportional to the dirty rows, never to the plan, and one
-    dispatch per reducer serves any number of dirty shards
-    (:func:`repro.core.distributed.distributed_moments_flat` /
-    ``distributed_histogram_flat``). Rows are handed to mesh devices
-    slot-wise (:func:`_slotwise_device_partition`), which makes every
-    shard's partial a pure function of its own rows — the property the
-    delta-vs-cold bit-identity rests on. The transfer-kind byte
+    Each slot contributes a ragged block of the flat segment space — its
+    predicate-filtered rows' touched bins × its local group keys — so
+    the collective cost is proportional to the rows actually reduced,
+    never to the plan or the batch width, and one dispatch per
+    (reducer-suite group, reducer) serves any number of shards AND
+    queries (shard files are read once and shared across lanes, exactly
+    like the host producer; slots are grouped by suite so a quantile
+    lane never drags moments-only lanes' rows through the histogram
+    collective). Lanes with
+    fewer metrics than the widest lane ride the same (M_max, N) value
+    matrix zero-padded; per-metric segment reduction is independent, so
+    the padding never touches a kept metric's sums. Rows are handed to
+    mesh devices slot-wise (:func:`_slotwise_device_partition`), which
+    makes every slot's partial a pure function of its own rows — the
+    property BOTH bit-identity guarantees rest on (delta vs cold, and
+    fused batch vs standalone single-query runs). The transfer-kind byte
     breakdown and the ``m_start_hi`` plan-extension guard are host work
     riding the same shard read, exactly as in the host producer.
 
-    With ``qkey`` set, each partial is persisted to the store's
+    With ``persist``, each partial lands in its lane's
     ``precision="float32"`` partial namespace stamped with the shard
     fingerprint — the cache a later delta serves clean shards from
     without touching a device.
@@ -553,22 +700,35 @@ def compute_partials_jax(store: TraceStore, indices: Sequence[int],
     import jax.numpy as jnp
     from jax.sharding import Mesh
 
-    metrics = list(metrics)
-    suite = normalize_reducers(reducers)
-    scans = []          # (fingerprint, partial-sans-states, raw rows)
-    for idx in indices:
+    scans = []          # (lane idx, fingerprint, partial, raw rows)
+    for idx, lane_ids in work_items:
         if not store.has_shard(int(idx)):
             continue
         fp = store.stat_shard(int(idx))
-        sp, rows = _scan_shard(store, int(idx), plan, metrics, group_by)
-        scans.append((fp, sp, rows))
+        cols = store.read_shard(int(idx))
+        for li in lane_ids:
+            lane = lanes[li]
+            sp, rows = _scan_shard(store, int(idx), lane.plan,
+                                   lane.metrics, lane.query.group_by,
+                                   query=lane.query, cols=cols)
+            scans.append((li, fp, sp, rows))
 
-    # ragged flat segment space: shard s owns segments
-    # [off_s, off_s + B_s*G_s) in scan order
-    live = [s for s in scans if s[2] is not None]
-    if live:
+    # ragged flat segment space: slot k owns segments
+    # [off_k, off_k + B_k*G_k) in scan order. Slots are batched PER
+    # REDUCER SUITE: a lane that wants the 384-bucket quantile histogram
+    # must not drag every moments-only lane's rows through that
+    # collective (whose per-slot results would just be discarded), so
+    # each distinct suite gets its own batched dispatch over exactly the
+    # slots that want it — per-slot purity (and thus both bit-identity
+    # guarantees) is unaffected by how slots are grouped.
+    all_live = [s for s in scans if s[3] is not None]
+    groups: Dict[Tuple[str, ...], List] = {}
+    for s in all_live:
+        groups.setdefault(lanes[s[0]].reducers, []).append(s)
+    for suite, live in groups.items():
+        m_max = max(len(lanes[li].metrics) for li, _, _, _ in live)
         seg_sizes = [len(sp.bins) * len(sp.group_keys)
-                     for _, sp, _ in live]
+                     for _, _, sp, _ in live]
         seg_offs = np.concatenate([[0], np.cumsum(seg_sizes)])
         n_seg = int(seg_offs[-1])
         # segment count quantized up to a 128 multiple: the surplus
@@ -578,12 +738,18 @@ def compute_partials_jax(store: TraceStore, indices: Sequence[int],
         n_seg_dev = -(-max(n_seg, 1) // 128) * 128
         seg_all = np.concatenate(
             [local_bin * len(sp.group_keys) + gids + seg_offs[k]
-             for k, (_, sp, (_, _, local_bin, gids)) in enumerate(live)])
-        vals_all = np.concatenate([rows[1] for _, _, rows in live],
-                                  axis=1)
+             for k, (_, _, sp, (_, _, local_bin, gids))
+             in enumerate(live)])
+        vals_parts = []
+        for _, _, _, rows in live:
+            v = rows[1]
+            if v.shape[0] < m_max:
+                v = np.pad(v, ((0, m_max - v.shape[0]), (0, 0)))
+            vals_parts.append(v)
+        vals_all = np.concatenate(vals_parts, axis=1)
         dev = jax.devices()
         row, valid = _slotwise_device_partition(
-            [len(rows[0]) for _, _, rows in live], len(dev))
+            [len(rows[0]) for _, _, _, rows in live], len(dev))
         mesh = Mesh(np.asarray(dev), ("data",))
         seg_p = seg_all[row].astype(np.int32)
         seg_p[~valid] = 0
@@ -594,22 +760,49 @@ def compute_partials_jax(store: TraceStore, indices: Sequence[int],
         valid_j = jnp.asarray(valid)
         reduced = {name: get_reducer(name).device_reduce(
                        seg_j, vals_j, n_seg_dev, mesh, valid_j)
-                   for name in suite}           # (n_seg_dev, M, *private)
-        for k, (_, sp, _) in enumerate(live):
-            shape = (len(sp.bins), len(sp.group_keys), len(metrics))
+                   for name in suite}         # (n_seg_dev, M_max, *priv)
+        for k, (li, _, sp, _) in enumerate(live):
+            lane = lanes[li]
+            shape = (len(sp.bins), len(sp.group_keys), m_max)
             sp.states = {
                 name: get_reducer(name).from_device_block(
                     reduced[name][seg_offs[k]:seg_offs[k + 1]].reshape(
-                        shape + reduced[name].shape[2:]))
-                for name in suite}
+                        shape + reduced[name].shape[2:])
+                    [:, :, :len(lane.metrics)])
+                for name in lane.reducers}
 
-    out = []
-    for fp, sp, _ in scans:
-        if qkey is not None and fp is not None:
-            store.write_partial(sp.idx, qkey, shard_partial_payload(
-                sp, plan, metrics, group_by, fp))
-        out.append(sp)
+    out: Dict[int, List[ShardPartial]] = collections.defaultdict(list)
+    for li, fp, sp, _ in scans:
+        lane = lanes[li]
+        if persist and lane.qkey and fp is not None:
+            store.write_partial(sp.idx, lane.qkey, shard_partial_payload(
+                sp, lane.plan, lane.metrics, lane.query.group_by, fp))
+        out[li].append(sp)
     return out
+
+
+def compute_partials_jax(store: TraceStore, indices: Sequence[int],
+                         plan: ShardPlan, metrics: Sequence[str],
+                         group_by: Optional[str],
+                         reducers: Sequence[str] = DEFAULT_REDUCERS,
+                         qkey: Optional[str] = None,
+                         ) -> List[ShardPartial]:
+    """Single-query form of :func:`compute_lane_partials_jax` (the
+    pre-fusion signature, kept for compat): one lane, every index
+    dirty. Metrics/reducers are reduced in the order GIVEN — callers
+    wanting cache-compatible canonical order should go through
+    :class:`~repro.core.query.QueryPlan` instead."""
+    suite = normalize_reducers(reducers)
+    lane = LanePlan(
+        query=Query(metrics=tuple(metrics), group_by=group_by,
+                    reducers=suite),
+        plan=plan, metrics=tuple(metrics), reducers=suite,
+        precision="float32", summary_key=None, qkey=qkey or "",
+        pruned=None, shards_pruned=0)
+    work = [(int(i), [0]) for i in indices]
+    out = compute_lane_partials_jax(store, work, [lane],
+                                    persist=qkey is not None)
+    return out.get(0, [])
 
 
 def rank_partial_from_shards(shard_partials: Sequence[ShardPartial],
@@ -722,22 +915,27 @@ def lookup_summary(store: TraceStore, plan: ShardPlan,
                    metrics: Sequence[str], group_by: Optional[str],
                    t0: float, precision: str = "exact",
                    reducers: Sequence[str] = DEFAULT_REDUCERS,
+                   query: Optional[Query] = None,
                    ) -> Tuple[str, Optional["AggregationResult"]]:
     """One cache probe shared by every aggregation driver: returns the
-    summary key for this (plan, metrics, group_by, precision, reducer
-    suite) and the decoded cached result on a hit (None on a miss). A
-    hit additionally requires the payload's ``covered`` shard
-    fingerprints to equal the store's CURRENT fingerprint — a summary
-    never outlives a shard write. A payload whose embedded version
-    differs from the running SUMMARY_VERSION — e.g. a file written by an
-    older engine — is likewise a miss, not a crash."""
+    summary key for this (canonical query, plan, precision) and the
+    decoded cached result on a hit (None on a miss). A hit additionally
+    requires the payload's ``covered`` shard fingerprints to equal the
+    store's CURRENT fingerprint — a summary never outlives a shard
+    write — and the payload's metric ORDER to equal the expected one
+    (the engine writes canonical order; a same-key payload with a
+    different axis order must never be served). A payload whose embedded
+    version differs from the running SUMMARY_VERSION — e.g. a file
+    written by an older engine — is likewise a miss, not a crash."""
     suite = normalize_reducers(reducers)
     key = store.summary_key((plan.t_start, plan.t_end, plan.n_shards),
                             metrics, group_by, precision=precision,
-                            reducers=suite)
+                            reducers=suite, query=query)
     payload = store.read_summary(key)
     if payload is None or int(payload.get(
             "version", np.asarray(-1))) != SUMMARY_VERSION:
+        return key, None
+    if [str(m) for m in payload["metrics"]] != list(metrics):
         return key, None
     covered = payload.get("covered")
     now = np.asarray(store.shard_fingerprint(),
@@ -860,6 +1058,202 @@ def build_result(plan: ShardPlan, metrics: Sequence[str],
         reducers=tuple(merged), reduced=merged)
 
 
+def _merge_lane(parts: Sequence[ShardPartial], n_shard_files: int,
+                n_ranks: int, plan: ShardPlan, n_metrics: int,
+                suite: Sequence[str],
+                ) -> Tuple[List[float], List[Dict[str, Any]],
+                           List[Dict[int, np.ndarray]]]:
+    """The merge tail EVERY driver shares (legacy single-query and fused
+    batch alike — one code path is what keeps fused results bit-identical
+    to standalone runs): group shard partials by owning rank (block
+    assignment over shard FILES), fold each rank's partials in
+    shard-index order, densify under the global key union."""
+    shard_sets = assignment(n_shard_files, n_ranks, "block")
+    rank_of = np.zeros(max(n_shard_files, 1), np.int64)
+    for r, ids in enumerate(shard_sets):
+        rank_of[ids] = r
+    per_rank: List[List[ShardPartial]] = [[] for _ in range(n_ranks)]
+    for sp in parts:
+        per_rank[int(rank_of[sp.idx])].append(sp)
+    partials, kind_parts = [], []
+    for ps in per_rank:
+        gp, kb = rank_partial_from_shards(ps, plan.n_shards, n_metrics,
+                                          suite)
+        partials.append(gp)
+        kind_parts.append(kb)
+    all_keys, dense = densify_partials(partials)
+    return all_keys, dense, kind_parts
+
+
+def _present(result: AggregationResult, lane: LanePlan,
+             ) -> AggregationResult:
+    """Permute a result computed (or cached) in canonical metric order
+    back to the caller's requested order. Exact: each metric's tensors
+    were accumulated independently, so reordering the metric axis is a
+    pure relabeling — which is why an old-style call and a reordered
+    Query can share one cache entry bit-identically."""
+    user = list(lane.query.metrics)
+    canon = list(lane.metrics)
+    if user == canon:
+        return result
+    perm = np.asarray([canon.index(m) for m in user], np.int64)
+    result.reduced = {name: st.take_metrics(perm)
+                      for name, st in result.reduced.items()}
+    result.grouped = result.reduced["moments"]
+    result.stats = result.grouped.merge_groups().select_metric(0)
+    result.per_rank_stats = [p.take_metrics(perm)
+                             for p in result.per_rank_stats]
+    result.metrics = user
+    result.metric = user[0]
+    return result
+
+
+def execute_plan(qplan: QueryPlan, use_cache: bool = True,
+                 compute_fn=None) -> List[QueryResult]:
+    """Run a compiled query batch as ONE fused execution.
+
+    Per lane: summary probe (a hit answers the query in O(n_bins) with
+    zero shard reads). The misses share a single stat pass and a single
+    scan over the UNION of their dirty shards — each shard file is read
+    once, and every lane needing it reduces its own metric/group/
+    predicate selection off the shared columns (host backends) or rides
+    the same batched device collective (jax). Each lane then merges its
+    clean cached partials with the fresh ones through the same tail as a
+    standalone run — fused results are bit-identical to sequential
+    single-query runs on every backend (tested).
+
+    ``compute_fn(work_items, qplan, persist)`` overrides the producer
+    (the process backend's work-stealing pool); the default dispatches
+    on ``qplan.backend``.
+    """
+    t0 = time.perf_counter()
+    store = qplan.store
+    results: List[Optional[QueryResult]] = [None] * len(qplan.lanes)
+    # batch-level dedupe: lanes whose canonical identity coincides
+    # (reordered metrics/reducers, equivalent predicates) share ONE
+    # computation; followers re-present the leader's canonical result
+    # in their own metric order
+    leader_of: Dict[Tuple[str, Tuple[int, int, int]], int] = {}
+    followers: Dict[int, int] = {}
+    raw: Dict[int, AggregationResult] = {}     # canonical-order results
+    live: List[int] = []
+    for i, lane in enumerate(qplan.lanes):
+        ident = (lane.query.cache_key(),
+                 (lane.plan.t_start, lane.plan.t_end, lane.plan.n_shards))
+        if ident in leader_of:
+            followers[i] = leader_of[ident]
+            continue
+        leader_of[ident] = i
+        if use_cache:
+            key, cached = lookup_summary(
+                store, lane.plan, list(lane.metrics), lane.query.group_by,
+                t0, precision=lane.precision, reducers=lane.reducers,
+                query=lane.query)
+            lane.summary_key = key
+            if cached is not None:
+                raw[i] = cached
+                results[i] = QueryResult(
+                    query=lane.query,
+                    result=_present(dataclasses.replace(cached), lane),
+                    cache_hit=True, shards_pruned=lane.shards_pruned,
+                    rows_scanned=0, rows_filtered=0, recomputed_shards=0,
+                    partial_hits=0)
+                continue
+        else:
+            lane.summary_key = None
+        live.append(i)
+
+    if live:
+        all_indices = store.shard_indices()      # ONE directory listing
+        indices = [i for i in all_indices if i < qplan.n_shard_files]
+        strays = [i for i in all_indices if i >= qplan.n_shard_files]
+        # one stat pass serves every lane's dirty classification AND the
+        # summaries' covered fingerprints
+        stats = {i: store.stat_shard(i) for i in indices}
+        # covered must describe EVERY shard file (stray indices past the
+        # manifest count included) to match lookup_summary's live compare
+        covered = sorted(
+            [fp for fp in stats.values() if fp is not None]
+            + [fp for i in strays
+               for fp in [store.stat_shard(i)] if fp is not None])
+        lane_clean: Dict[int, List[ShardPartial]] = {}
+        lane_dirty: Dict[int, List[int]] = {}
+        work: Dict[int, List[int]] = {}
+        for i in live:
+            lane = qplan.lanes[i]
+            if lane.pruned is None:
+                pruned = indices
+            else:
+                pruned_set = set(lane.pruned)
+                pruned = [s for s in indices if s in pruned_set]
+            _, clean, dirty = classify_shards(
+                store, pruned, lane.plan, list(lane.metrics),
+                lane.query.group_by, lane.reducers, use_cache,
+                stats=stats, precision=lane.precision, query=lane.query)
+            lane_clean[i], lane_dirty[i] = clean, dirty
+            for s in dirty:
+                work.setdefault(int(s), []).append(i)
+        work_items = sorted(work.items())
+        if compute_fn is not None:
+            fresh = compute_fn(work_items, qplan, use_cache)
+        elif qplan.backend == "jax":
+            fresh = compute_lane_partials_jax(store, work_items,
+                                              qplan.lanes,
+                                              persist=use_cache)
+        else:
+            fresh = compute_lane_partials(store, work_items, qplan.lanes,
+                                          persist=use_cache)
+        for i in live:
+            lane = qplan.lanes[i]
+            computed = fresh.get(i, [])
+            all_keys, dense, kind_parts = _merge_lane(
+                lane_clean[i] + list(computed), qplan.n_shard_files,
+                qplan.n_ranks, lane.plan, len(lane.metrics),
+                lane.reducers)
+            result = finalize_aggregation(
+                store, lane.plan, list(lane.metrics), lane.query.group_by,
+                all_keys, dense, kind_parts,
+                lane.summary_key if use_cache else None, t0,
+                reducers=lane.reducers, covered=covered)
+            result.recomputed_shards = sorted(
+                int(s) for s in lane_dirty[i])
+            result.partial_hits = len(lane_clean[i])
+            raw[i] = result
+            results[i] = QueryResult(
+                query=lane.query,
+                result=_present(dataclasses.replace(result), lane),
+                cache_hit=False, shards_pruned=lane.shards_pruned,
+                rows_scanned=sum(sp.rows_seen for sp in computed),
+                rows_filtered=sum(sp.rows_seen - sp.rows_kept
+                                  for sp in computed),
+                recomputed_shards=len(lane_dirty[i]),
+                partial_hits=len(lane_clean[i]))
+    for j, i in followers.items():
+        lane_j = qplan.lanes[j]
+        src = results[i]
+        results[j] = QueryResult(
+            query=lane_j.query,
+            result=_present(dataclasses.replace(raw[i]), lane_j),
+            cache_hit=src.cache_hit, shards_pruned=lane_j.shards_pruned,
+            rows_scanned=src.rows_scanned,
+            rows_filtered=src.rows_filtered,
+            recomputed_shards=src.recomputed_shards,
+            partial_hits=src.partial_hits)
+    return results
+
+
+def run_queries(store: Union[str, TraceStore], queries: Sequence[Query],
+                n_ranks: Optional[int] = None, backend: str = "serial",
+                use_cache: bool = True) -> List[QueryResult]:
+    """Compile + execute a batch of declarative queries as one fused
+    scan (``serial`` or ``jax`` backend; the process-pool backend is
+    :meth:`repro.core.pipeline.VariabilityPipeline.query`). Results come
+    back in query order, each with execution provenance."""
+    qplan = QueryPlan.compile(store, list(queries), backend=backend,
+                              n_ranks=n_ranks)
+    return qplan.execute(use_cache=use_cache)
+
+
 def run_incremental(store: TraceStore, n_shard_files: int, plan: ShardPlan,
                     metrics: Sequence[str], group_by: Optional[str],
                     n_ranks: int, use_cache: bool, key: Optional[str],
@@ -879,7 +1273,16 @@ def run_incremental(store: TraceStore, n_shard_files: int, plan: ShardPlan,
     per-shard device partials are pure functions of each shard's own
     rows). ``precision`` must match the producer ``compute_fn`` wires in
     (``"float32"`` for the jax device path) so partials land in — and
-    are served from — the right namespace."""
+    are served from — the right namespace.
+
+    Legacy driver note: this entry point computes (and caches) in the
+    metric order GIVEN, while cache keys canonicalize that order. A
+    non-canonical order still yields correct results — the payload
+    metric-order guards in :func:`classify_shards`/:func:`lookup_summary`
+    turn any mismatch into a miss — but it will not SHARE cache entries
+    with the canonical engine (each side overwrites the other's files).
+    Pass metrics sorted, or use :func:`run_queries` /
+    :func:`run_aggregation`, which canonicalize for you."""
     mlist = list(metrics)
     suite = normalize_reducers(reducers)
     all_indices = store.shard_indices()      # ONE directory listing
@@ -897,21 +1300,8 @@ def run_incremental(store: TraceStore, n_shard_files: int, plan: ShardPlan,
                                     suite, qk)
     computed = list(compute_fn(dirty, qkey if use_cache else None))
 
-    shard_sets = assignment(n_shard_files, n_ranks, "block")
-    rank_of = np.zeros(max(n_shard_files, 1), np.int64)
-    for r, ids in enumerate(shard_sets):
-        rank_of[ids] = r
-    per_rank: List[List[ShardPartial]] = [[] for _ in range(n_ranks)]
-    for sp in clean + computed:
-        per_rank[int(rank_of[sp.idx])].append(sp)
-
-    partials, kind_parts = [], []
-    for ps in per_rank:
-        gp, kb = rank_partial_from_shards(ps, plan.n_shards, len(mlist),
-                                          suite)
-        partials.append(gp)
-        kind_parts.append(kb)
-    all_keys, dense = densify_partials(partials)
+    all_keys, dense, kind_parts = _merge_lane(
+        clean + computed, n_shard_files, n_ranks, plan, len(mlist), suite)
     # covered must describe EVERY shard file (stray indices past the
     # manifest count included) to match lookup_summary's live compare
     covered = sorted(
@@ -935,8 +1325,14 @@ def run_aggregation(store: Union[str, TraceStore],
                     use_cache: bool = True,
                     reducers: Sequence[str] = DEFAULT_REDUCERS,
                     backend: str = "serial",
+                    query: Optional[Query] = None,
                     ) -> AggregationResult:
-    """Full phase-2 driver (sequential rank loop; pipeline.py parallelizes).
+    """Full phase-2 driver — now a thin adapter over the declarative
+    query engine: the kwargs are folded into a :class:`Query` and run as
+    a single-lane :class:`QueryPlan` (pass ``query=`` directly to skip
+    the folding; the remaining query-shaped kwargs are then ignored).
+    Old-style and Query-style calls describing the same question share
+    cache entries and return bit-identical results.
 
     ``interval_ns`` may re-bin at a different granularity than generation —
     the "global dictionary with timestamps as keys and a fixed user-defined
@@ -952,7 +1348,7 @@ def run_aggregation(store: Union[str, TraceStore],
     and partials live in their own precision namespace so the two
     producers never serve each other). The process-pool backend lives in
     :mod:`repro.core.pipeline`, which routes through the same
-    :func:`run_incremental` core.
+    :func:`execute_plan` core.
 
     With ``use_cache`` the run is fully incremental ON EVERY BACKEND: an
     unchanged store is answered from the merged summary without touching
@@ -961,36 +1357,15 @@ def run_aggregation(store: Union[str, TraceStore],
     ``result.recomputed_shards`` / ``partial_hits`` report exactly what
     was read.
     """
-    t0 = time.perf_counter()
-    store = store if isinstance(store, TraceStore) else TraceStore(store)
-    man = store.read_manifest()
-    P = n_ranks or man.n_ranks
     if backend not in ("serial", "jax"):
         raise ValueError(f"unknown backend {backend!r} (serial | jax; the "
                          "process backend is VariabilityPipeline's)")
-
-    if interval_ns is None:
-        plan = ShardPlan(man.t_start, man.t_end, man.n_shards)
-    else:
-        plan = ShardPlan.from_interval(man.t_start, man.t_end, interval_ns)
-    mlist = list(metrics) if metrics is not None else [metric]
-    if not mlist:
-        raise ValueError("metrics must name at least one shard column")
-    suite = normalize_reducers(reducers)
-    precision = "float32" if backend == "jax" else "exact"
-
-    key = None
-    if use_cache:
-        key, cached = lookup_summary(store, plan, mlist, group_by, t0,
-                                     precision=precision, reducers=suite)
-        if cached is not None:
-            return cached
-
-    compute_fn = None
-    if backend == "jax":
-        def compute_fn(dirty, qkey):
-            return compute_partials_jax(store, dirty, plan, mlist,
-                                        group_by, suite, qkey)
-    return run_incremental(store, man.n_shards, plan, mlist, group_by, P,
-                           use_cache, key, t0, reducers=suite,
-                           compute_fn=compute_fn, precision=precision)
+    if query is None:
+        mlist = list(metrics) if metrics is not None else [metric]
+        if not mlist:
+            raise ValueError("metrics must name at least one shard column")
+        query = Query(metrics=tuple(mlist), group_by=group_by,
+                      reducers=normalize_reducers(reducers),
+                      interval_ns=interval_ns)
+    return run_queries(store, [query], n_ranks=n_ranks, backend=backend,
+                       use_cache=use_cache)[0].result

@@ -27,20 +27,28 @@ reducer state is picked automatically).
 from __future__ import annotations
 
 import dataclasses
-import re
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 from .aggregation import AggregationResult, BinStats
+# score-spec parsing lives with the declarative Query (whose canonical
+# form folds a quantile score's implied reducer into the suite);
+# re-exported here because this is the detector module callers reach for
+from .query import Query, _PCT_RE, is_quantile_score  # noqa: F401
 from .reducers import QuantileSketch
 
-_PCT_RE = re.compile(r"^p(\d{1,2}(?:\.\d+)?)$")
 
-
-def is_quantile_score(score: str) -> bool:
-    """True for scores answered by the quantile sketch ("pNN" / "iqr")."""
-    return score == "iqr" or _PCT_RE.match(score) is not None
+def report_for_query(result: AggregationResult, query: Query,
+                     k: float = 1.5, top_k: int = 5,
+                     metric_idx: int = 0) -> "IQRReport":
+    """Fence a query's result on the query's own ``anomaly_score`` spec —
+    the detector-side half of the declarative surface (the aggregation
+    half already guaranteed the needed reducer is in the suite, because
+    the canonical form folds it in)."""
+    return anomalous_bins(result, k=k, top_k=top_k,
+                          boundaries=result.plan.boundaries(),
+                          score=query.anomaly_score, metric_idx=metric_idx)
 
 
 def quartiles(x: np.ndarray) -> Tuple[float, float, float]:

@@ -17,6 +17,16 @@ additive histogram counts ride the same psum collective on the jax
 backend). ``anomaly_score`` picks what the IQR fences run on: a moment
 score ("mean"/"std"/...) or a distribution score ("p99"/"iqr"/...).
 
+Declarative queries. :meth:`VariabilityPipeline.query` runs a BATCH of
+:class:`~repro.core.query.Query` objects (metric subsets, group columns,
+reducer suites, time-window / rank / kernel-name / transfer-kind
+predicates, per-query anomaly-score specs) as ONE fused execution:
+shared shard scan with predicates pushed down, per-query reducer lanes
+riding the same pass, each result bit-identical to running that query
+alone and fenced on its own score spec. :meth:`aggregate` is the
+config-shaped adapter over the same engine (``PipelineConfig.to_query``),
+so config-style and Query-style analyses share one cache.
+
 Incremental engine. ALL THREE backends aggregate through the two-level
 cache in :mod:`repro.core.aggregation`: an unchanged store is answered
 from the merged summary (``summary_{key}.npz``, validated against the
@@ -54,13 +64,12 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from .aggregation import (AggregationResult, compute_partials,
-                          compute_partials_jax, lookup_summary,
-                          run_incremental, DEFAULT_METRIC,
-                          DEFAULT_REDUCERS)
+from .aggregation import (AggregationResult, compute_lane_partials,
+                          DEFAULT_METRIC, DEFAULT_REDUCERS)
+from .query import LanePlan, Query, QueryPlan, QueryResult
 from .reducers import normalize_reducers
 from .anomaly import (IQRReport, anomalous_bins, is_quantile_score,
-                      top_variability_bins)
+                      report_for_query, top_variability_bins)
 from .events import table_rowid_hi
 from .generation import (AppendReport, GenerationConfig, GenerationReport,
                          generate_rank, global_time_range, run_append,
@@ -104,6 +113,18 @@ class PipelineConfig:
                  else ())
         return normalize_reducers(tuple(self.reducers) + extra)
 
+    def to_query(self) -> Query:
+        """The declarative Query this config's aggregation settings
+        describe — the back-compat shim that makes config-style and
+        Query-style analyses share one engine and one cache (the Query's
+        canonical form folds the anomaly score's implied reducer in,
+        mirroring :attr:`reducer_suite`)."""
+        return Query(metrics=tuple(self.metric_list),
+                     group_by=self.group_by,
+                     reducers=tuple(self.reducers),
+                     anomaly_score=self.anomaly_score,
+                     interval_ns=self.agg_interval_ns)
+
 
 @dataclasses.dataclass
 class PipelineResult:
@@ -131,16 +152,23 @@ def _gen_worker(args) -> Dict[str, int]:
                          store, cfg, contiguous=(cfg.partitioning == "block"))
 
 
-def _partial_worker(args):
-    """One work-queue chunk: compute (and, with ``qkey``, persist) the
-    partials for a handful of dirty shards. Atomic partial writes make a
-    dying worker leave complete cache entries or none."""
-    store_dir, shard_ids, plan_tuple, metrics, group_by, reducers, \
-        qkey = args
-    plan = ShardPlan(*plan_tuple)
+def _fused_worker(args):
+    """One work-queue chunk of the FUSED query batch: each shard file in
+    the chunk is read once and every query lane that marked it dirty
+    reduces its own metrics/groups/predicates off the shared columns
+    (the same :func:`compute_lane_partials` producer the serial backend
+    runs, background writer thread included); with a lane ``qkey`` set,
+    its partial is atomically persisted as soon as it is produced
+    (crash-safe: a dying worker leaves complete cache entries or none).
+    Returns ``{lane index -> [ShardPartial]}``."""
+    store_dir, chunk, lane_specs = args
     store = TraceStore(store_dir)
-    return compute_partials(store, shard_ids, plan, metrics, group_by,
-                            reducers, qkey)
+    lanes = [LanePlan(query=query, plan=ShardPlan(*plan_t),
+                      metrics=tuple(metrics), reducers=tuple(reducers),
+                      precision="exact", summary_key=None,
+                      qkey=qkey or "", pruned=None, shards_pruned=0)
+             for plan_t, metrics, reducers, qkey, query in lane_specs]
+    return dict(compute_lane_partials(store, chunk, lanes, persist=True))
 
 
 class VariabilityPipeline:
@@ -204,76 +232,72 @@ class VariabilityPipeline:
 
     # -- phase 2 -------------------------------------------------------------
     def aggregate(self, store_dir: str) -> AggregationResult:
-        """Incremental phase 2 on EVERY backend: summary hit → done;
-        otherwise recompute only dirty/new shards and merge them with the
-        clean shards' cached partials. The backends plug different
-        dirty-shard producers into the one clean/dirty driver: a serial
-        loop, the work-stealing process pool, or — jax — one batched SPMD
-        collective over the dirty shards' raw events whose per-shard
-        device partials are cached for the next delta."""
+        """Incremental phase 2 on EVERY backend — a thin adapter over the
+        declarative query engine: the config's metrics/group_by/reducers
+        become one :class:`Query` and run through the same fused
+        :func:`~repro.core.aggregation.execute_plan` core as
+        :meth:`query` (summary hit → done; otherwise only dirty/new
+        shards are recomputed and merged with the clean shards' cached
+        partials). The backends plug different dirty-shard producers in:
+        a serial loop, the work-stealing process pool, or — jax — one
+        batched SPMD collective whose per-shard device partials are
+        cached for the next delta."""
+        return self._run_queries(store_dir,
+                                 [self.cfg.to_query()])[0].result
+
+    def query(self, store_dir: str,
+              queries: Sequence[Query]) -> List[QueryResult]:
+        """Run a BATCH of declarative queries as one fused execution:
+        shared shard scan (each dirty file read once, every query's
+        reducer lanes riding the same pass, time-window predicates pushed
+        down to shard pruning and row predicates into the scan), per-
+        query results split back out with provenance — each bit-identical
+        to running that query alone on the same backend. Every result's
+        ``anomalies`` is fenced on ITS query's ``anomaly_score`` spec."""
+        out = self._run_queries(store_dir, list(queries))
+        for qr in out:
+            qr.anomalies = report_for_query(qr.result, qr.query,
+                                            k=self.cfg.iqr_k,
+                                            top_k=self.cfg.top_k)
+        return out
+
+    def _run_queries(self, store_dir: str,
+                     queries: Sequence[Query]) -> List[QueryResult]:
         cfg = self.cfg
-        t0 = time.perf_counter()
-        store = TraceStore(store_dir)
-        man = store.read_manifest()
-        plan = (ShardPlan(man.t_start, man.t_end, man.n_shards)
-                if cfg.agg_interval_ns is None
-                else ShardPlan.from_interval(man.t_start, man.t_end,
-                                             cfg.agg_interval_ns))
-        metrics = cfg.metric_list
-        suite = cfg.reducer_suite
+        qplan = QueryPlan.compile(store_dir, list(queries),
+                                  backend=cfg.backend,
+                                  n_ranks=cfg.n_ranks)
+        compute_fn = (self._pool_compute if cfg.backend == "process"
+                      else None)
+        return qplan.execute(use_cache=cfg.use_summary_cache,
+                             compute_fn=compute_fn)
 
-        # jax results come from float32 collectives — summaries AND
-        # device partials are keyed/namespaced separately so they are
-        # never served where exact float64 moments are expected.
-        precision = "float32" if cfg.backend == "jax" else "exact"
-        key = None
-        if cfg.use_summary_cache:
-            key, cached = lookup_summary(store, plan, metrics,
-                                         cfg.group_by, t0,
-                                         precision=precision,
-                                         reducers=suite)
-            if cached is not None:
-                return cached
-
-        compute_fn = None
-        if cfg.backend == "process":
-            def compute_fn(dirty, qkey):
-                return self._compute_partials_pool(
-                    store_dir, dirty, plan, metrics, suite, qkey)
-        elif cfg.backend == "jax":
-            def compute_fn(dirty, qkey):
-                return compute_partials_jax(store, dirty, plan, metrics,
-                                            cfg.group_by, suite, qkey)
-        return run_incremental(store, man.n_shards, plan, metrics,
-                               cfg.group_by, cfg.n_ranks,
-                               cfg.use_summary_cache, key, t0,
-                               reducers=suite, compute_fn=compute_fn,
-                               precision=precision)
-
-    def _compute_partials_pool(self, store_dir: str, dirty: List[int],
-                               plan: ShardPlan, metrics: List[str],
-                               suite, qkey: Optional[str]):
-        """Work-stealing scheduler for dirty-shard recomputation: the
-        shard list is split into small chunks consumed from a shared
-        queue (``imap_unordered``), so a straggler chunk — an anomaly-
-        burst shard with 10x the rows — delays only itself, not a whole
-        static rank block like the old per-rank ``pool.map``. Completion
-        order is irrelevant: the merge sorts partials by shard index, so
-        the result is bit-identical to the serial backend."""
-        if not dirty:
-            return []
+    def _pool_compute(self, work_items, qplan: QueryPlan, persist: bool):
+        """Work-stealing scheduler for the fused dirty-shard scan: the
+        (shard, lanes) work list is split into small chunks consumed from
+        a shared queue (``imap_unordered``), so a straggler chunk — an
+        anomaly-burst shard with 10x the rows — delays only itself, not a
+        whole static rank block. Completion order is irrelevant: the
+        merge sorts partials by shard index, so the result is
+        bit-identical to the serial backend."""
+        if not work_items:
+            return {}
+        lane_specs = [
+            ((lane.plan.t_start, lane.plan.t_end, lane.plan.n_shards),
+             list(lane.metrics), lane.reducers,
+             lane.qkey if persist else None, lane.query)
+            for lane in qplan.lanes]
         workers = min(self.cfg.n_ranks, os.cpu_count() or 1)
         # ~4 chunks per worker: fine enough to absorb skew, coarse enough
         # to amortize task dispatch
-        chunk = max(1, -(-len(dirty) // (workers * 4)))
-        jobs = [(store_dir, dirty[i:i + chunk],
-                 (plan.t_start, plan.t_end, plan.n_shards),
-                 metrics, self.cfg.group_by, suite, qkey)
-                for i in range(0, len(dirty), chunk)]
-        out = []
+        chunk = max(1, -(-len(work_items) // (workers * 4)))
+        jobs = [(qplan.store.root, work_items[i:i + chunk], lane_specs)
+                for i in range(0, len(work_items), chunk)]
+        out: Dict[int, List] = {}
         with mp.get_context(_MP_CONTEXT).Pool(workers) as pool:
-            for res in pool.imap_unordered(_partial_worker, jobs):
-                out.extend(res)
+            for res in pool.imap_unordered(_fused_worker, jobs):
+                for li, parts in res.items():
+                    out.setdefault(li, []).extend(parts)
         return out
 
     # -- end to end ----------------------------------------------------------

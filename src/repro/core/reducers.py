@@ -129,6 +129,16 @@ class MergeableReducer:
         """Slice group ``gi`` off a dense (n_bins, G, ...) tensor."""
         return self._map(lambda a: a[:, gi])
 
+    def take_metrics(self, idx: np.ndarray):
+        """Reorder/select the metric axis of a dense (n_bins, G, M, ...)
+        tensor by index vector — how the query engine presents tensors
+        computed in canonical metric order back in the caller's order
+        (exact: metrics accumulate independently, so this is a pure
+        relabeling). Subclasses whose private axes trail the metric axis
+        (the quantile sketch's bucket axis) override."""
+        idx = np.asarray(idx, np.int64)
+        return self._map(lambda a: a[..., idx])
+
     @classmethod
     def stack_groups(cls, parts: Sequence["MergeableReducer"]):
         """Densify: stack per-group states into the (n_bins, G, ...)
@@ -276,18 +286,18 @@ class BinStats(MergeableReducer):
             return out
         flat = plan.shard_of(timestamps) * n_groups + np.asarray(group_ids)
         nbg = n_bins * n_groups
-        cnt = np.zeros(nbg)
-        np.add.at(cnt, flat, 1.0)
+        # additive channels go through np.bincount, which accumulates in
+        # input order exactly like np.add.at (bitwise-identical float64
+        # sums) but several times faster; min/max have no bincount form
+        cnt = np.bincount(flat, minlength=nbg).astype(np.float64)
         out.count[...] = np.broadcast_to(
             cnt.reshape(n_bins, n_groups, 1), out.count.shape)
         for j in range(n_metrics):
             v = values[:, j]
-            s = np.zeros(nbg)
-            ss = np.zeros(nbg)
+            s = np.bincount(flat, weights=v, minlength=nbg)
+            ss = np.bincount(flat, weights=v * v, minlength=nbg)
             mn = np.full(nbg, np.inf)
             mx = np.full(nbg, -np.inf)
-            np.add.at(s, flat, v)
-            np.add.at(ss, flat, v * v)
             np.minimum.at(mn, flat, v)
             np.maximum.at(mx, flat, v)
             out.sum[:, :, j] = s.reshape(n_bins, n_groups)
@@ -408,6 +418,10 @@ class QuantileSketch(MergeableReducer):
             return self
         return QuantileSketch(counts=self.counts[..., j, :])
 
+    def take_metrics(self, idx: np.ndarray) -> "QuantileSketch":
+        idx = np.asarray(idx, np.int64)
+        return QuantileSketch(counts=self.counts[..., idx, :])
+
     @classmethod
     def bin_grouped(cls, timestamps: np.ndarray, values: np.ndarray,
                     group_ids: np.ndarray, n_groups: int,
@@ -425,8 +439,7 @@ class QuantileSketch(MergeableReducer):
         size = n_bins * n_groups * N_BUCKETS
         for j in range(n_metrics):
             flat = bg * N_BUCKETS + bucket_of(values[:, j])
-            c = np.zeros(size)
-            np.add.at(c, flat, 1.0)
+            c = np.bincount(flat, minlength=size).astype(np.float64)
             out.counts[:, :, j, :] = c.reshape(n_bins, n_groups,
                                                N_BUCKETS)
         return out

@@ -20,11 +20,17 @@ the shards, both round-tripped through the reducer ``to_payload`` /
 
 ``partial_{idx:06d}_{qkey}.npy`` — per-shard partial cache
     One shard's pre-merge reducer states for one query. The 16-hex
-    ``qkey`` hashes the QUERY only: (SUMMARY_VERSION, plan triple,
-    metrics, group_by, reducer suite, and — for the jax backend's
+    ``qkey`` hashes the QUERY only: the canonical form of a
+    :class:`repro.core.query.Query` (version-stamped; order-insensitive
+    metrics, group_by, reducer suite, and the row predicates — time
+    window, rank / kernel-name / transfer-kind subsets), the plan's
+    ``(t_start, width)``, and — for the jax backend's
     DEVICE partials — a ``precision="float32"`` namespace salt, so the
     float32 post-segment-reduce tensors never masquerade as exact host
-    partials). The payload embeds the
+    partials. Payload tensors are stored in CANONICAL metric order
+    (readers permute back to the caller's order), which is what lets
+    ``metrics=("a", "b")`` and ``("b", "a")`` share one entry.
+    The payload embeds the
     ``(size, mtime_ns)`` fingerprint of the shard file it was computed
     from; a fingerprint mismatch at read time is a miss, so a partial can
     never be served for rewritten shard data. ``write_shard`` invalidates
@@ -51,9 +57,9 @@ the shards, both round-tripped through the reducer ``to_payload`` /
 
 ``summary_{key}.npz`` — merged-suite summary cache
     The fully merged result of one query over the whole store. The
-    ``key`` hashes the same query blob plus ``precision`` (host float64
-    paths share ``"exact"``; the jax float32 collective path is keyed
-    apart). The shard fingerprint is NOT in the key any more: the payload
+    ``key`` hashes the same canonical query form plus the full plan
+    triple and ``precision`` (host float64 paths share ``"exact"``; the
+    jax float32 collective path is keyed apart). The shard fingerprint is NOT in the key any more: the payload
     records the ``covered`` fingerprint list — sorted
     ``(shard_idx, size, mtime_ns)`` triples — and
     :func:`repro.core.aggregation.lookup_summary` treats any mismatch
@@ -80,20 +86,16 @@ import collections
 import dataclasses
 import hashlib
 import io
+import itertools
 import json
 import os
-import tempfile
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-# Bump when the summary/partial payload layout changes; old caches miss.
-# v2: pluggable reducer suite — "reducers" array + per-reducer prefixed
-#     payload arrays joined the v1 moment tensor.
-# v3: incremental engine — summaries record the ``covered`` shard
-#     fingerprints instead of hashing them into the key; per-shard
-#     ``partial_*`` payloads share the version stamp.
-SUMMARY_VERSION = 3
+# SUMMARY_VERSION lives with the canonical query form (the cache keys
+# hash it); re-exported here because every payload reader stamps it.
+from .query import Query, SUMMARY_VERSION  # noqa: F401  (re-export)
 
 
 def shard_filename(idx: int) -> str:
@@ -214,59 +216,70 @@ class TraceStore:
 
     # -- cache keys --------------------------------------------------------
     @staticmethod
-    def _query_blob(plan_key: Sequence[int], metrics: Sequence[str],
-                    group_by: Optional[str],
-                    reducers: Sequence[str]) -> Dict:
-        return {
-            "version": SUMMARY_VERSION,
-            "plan": [int(x) for x in plan_key],
-            "metrics": list(metrics),
-            "group_by": group_by,
-            "reducers": list(reducers),
-        }
+    def _as_query(metrics: Optional[Sequence[str]],
+                  group_by: Optional[str], reducers: Sequence[str],
+                  query: Optional[Query]) -> Query:
+        """Canonical-query carrier for both key methods. Legacy callers
+        pass (metrics, group_by, reducers) and get a Query built for
+        them — which is the back-compat contract: an old-style call and
+        a Query-style call describing the same question mint the SAME
+        key (order-insensitive in metrics and reducers)."""
+        if query is not None:
+            return query
+        if metrics is None:
+            raise ValueError("either metrics or query must be given")
+        return Query(metrics=tuple(metrics), group_by=group_by,
+                     reducers=tuple(reducers))
 
-    def summary_key(self, plan_key: Sequence[int], metrics: Sequence[str],
-                    group_by: Optional[str],
+    def summary_key(self, plan_key: Sequence[int],
+                    metrics: Optional[Sequence[str]] = None,
+                    group_by: Optional[str] = None,
                     precision: str = "exact",
-                    reducers: Sequence[str] = ("moments",)) -> str:
-        """Cache key over the QUERY: (plan, metrics, group_by, precision,
-        reducer suite). ``precision`` keeps numerically distinct producers
-        apart: the float64 host paths (serial/process — bit-identical to
-        each other) share ``"exact"`` entries, while the jax backend's
-        float32 collective results are keyed ``"float32"`` so they are
-        never served to a caller expecting exact moments. The shard
-        fingerprint is NOT part of the key — the payload's ``covered``
-        array is validated against the live store at read time instead,
-        so a recompute after a shard write overwrites the stale entry
-        in place."""
-        blob = self._query_blob(plan_key, metrics, group_by, reducers)
-        blob["precision"] = precision
+                    reducers: Sequence[str] = ("moments",),
+                    query: Optional[Query] = None) -> str:
+        """Cache key over the QUERY: the canonical query form
+        (:meth:`repro.core.query.Query.canonical` — version-stamped,
+        order-insensitive in metrics/reducers, predicates included) plus
+        the bin plan and ``precision``. ``precision`` keeps numerically
+        distinct producers apart: the float64 host paths (serial/process
+        — bit-identical to each other) share ``"exact"`` entries, while
+        the jax backend's float32 collective results are keyed
+        ``"float32"`` so they are never served to a caller expecting
+        exact moments. The shard fingerprint is NOT part of the key — the
+        payload's ``covered`` array is validated against the live store
+        at read time instead, so a recompute after a shard write
+        overwrites the stale entry in place."""
+        q = self._as_query(metrics, group_by, reducers, query)
+        blob = {"plan": [int(x) for x in plan_key],
+                "precision": precision, "query": q.canonical()}
         return hashlib.sha256(
             json.dumps(blob, sort_keys=True).encode()).hexdigest()[:16]
 
-    def partial_key(self, plan_key: Sequence[int], metrics: Sequence[str],
-                    group_by: Optional[str],
+    def partial_key(self, plan_key: Sequence[int],
+                    metrics: Optional[Sequence[str]] = None,
+                    group_by: Optional[str] = None,
                     precision: str = "exact",
-                    reducers: Sequence[str] = ("moments",)) -> str:
-        """Per-shard partial-cache key over the same query blob (salted
-        apart from summary keys), EXCEPT that the plan is keyed by
-        ``(t_start, shard width)`` rather than its end: an append-extended
-        plan (``ShardPlan.extended_to``) keeps every existing boundary, so
-        pre-append partials remain addressable — and valid — after the
-        store grows. ``precision`` namespaces the two partial producers
-        apart, exactly like the summary key: the float64 host scan writes
-        ``"exact"`` partials, the jax backend's DEVICE partials (the
-        post-segment-reduce float32 tensors) live under ``"float32"`` and
-        are never merged into an exact-path result. Both namespaces share
-        the ``partial_{idx}_{qkey}`` file shape, so per-shard
-        invalidation (:meth:`write_shard` → :meth:`clear_partials`) and
-        the liveness sweep (:meth:`gc_stale`) cover device partials with
-        no extra machinery."""
+                    reducers: Sequence[str] = ("moments",),
+                    query: Optional[Query] = None) -> str:
+        """Per-shard partial-cache key over the same canonical query form
+        (salted apart from summary keys), EXCEPT that the plan is keyed
+        by ``(t_start, shard width)`` rather than its end: an
+        append-extended plan (``ShardPlan.extended_to``) keeps every
+        existing boundary, so pre-append partials remain addressable —
+        and valid — after the store grows. ``precision`` namespaces the
+        two partial producers apart, exactly like the summary key: the
+        float64 host scan writes ``"exact"`` partials, the jax backend's
+        DEVICE partials (the post-segment-reduce float32 tensors) live
+        under ``"float32"`` and are never merged into an exact-path
+        result. Both namespaces share the ``partial_{idx}_{qkey}`` file
+        shape, so per-shard invalidation (:meth:`write_shard` →
+        :meth:`clear_partials`) and the liveness sweep (:meth:`gc_stale`)
+        cover device partials with no extra machinery."""
         t_start, t_end, n_shards = (int(x) for x in plan_key)
-        blob = self._query_blob(
-            [t_start], metrics, group_by, reducers)
-        blob["kind"] = "partial"
-        blob["width"] = (t_end - t_start) / n_shards
+        q = self._as_query(metrics, group_by, reducers, query)
+        blob = {"kind": "partial", "t_start": t_start,
+                "width": (t_end - t_start) / n_shards,
+                "query": q.canonical()}
         if precision != "exact":      # legacy keys predate the namespace
             blob["precision"] = precision
         return hashlib.sha256(
@@ -488,35 +501,36 @@ class TraceStore:
             n_head = int.from_bytes(f.read(8), "little")
             return json.loads(f.read(n_head).decode())
 
+    # unique-per-process tmp names without tempfile.mkstemp's random-name
+    # probe loop — at partial-cache write rates (one write per dirty
+    # shard per query lane) mkstemp's extra syscalls were a measurable
+    # slice of the fused scan
+    _tmp_seq = itertools.count()
+
     def _atomic_save_packed(self, path: str, packed: np.ndarray) -> None:
-        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "wb") as f:
-                np.save(f, packed)
-            os.replace(tmp, path)
-        except BaseException:
-            if os.path.exists(tmp):
-                os.remove(tmp)
-            raise
+        buf = io.BytesIO()
+        np.save(buf, packed)
+        self._atomic_write(path, buf.getbuffer())
 
     def _atomic_savez(self, path: str, arrays: Dict[str, np.ndarray]) -> None:
-        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "wb") as f:
-                np.savez(f, **arrays)
-            os.replace(tmp, path)
-        except BaseException:
-            if os.path.exists(tmp):
-                os.remove(tmp)
-            raise
+        # serialize FULLY before touching the filesystem: a writer that
+        # dies materializing an array leaves no file at all, not a torn
+        # tmp (the crash-safety tests pin this)
+        buf = io.BytesIO()
+        np.savez(buf, **arrays)
+        self._atomic_write(path, buf.getbuffer())
 
-    @staticmethod
-    def _atomic_write(path: str, data: bytes) -> None:
-        d = os.path.dirname(path)
-        fd, tmp = tempfile.mkstemp(dir=d)
+    @classmethod
+    def _atomic_write(cls, path: str, data) -> None:
+        tmp = f"{path}.{os.getpid()}.{next(cls._tmp_seq)}.tmp"
+        fd = os.open(tmp, os.O_WRONLY | os.O_CREAT | os.O_EXCL, 0o644)
         try:
-            with os.fdopen(fd, "wb") as f:
-                f.write(data)
+            try:
+                view = memoryview(data)
+                while view.nbytes:            # write(2) may be short
+                    view = view[os.write(fd, view):]
+            finally:
+                os.close(fd)
             os.replace(tmp, path)
         except BaseException:
             if os.path.exists(tmp):

@@ -1,0 +1,428 @@
+"""Declarative Query API tests: canonical-hash stability across
+processes, order-insensitive cache keys (a reordered re-query is a PURE
+summary hit — zero shard reads), back-compat shims (old-style kwargs and
+Query-style calls bit-identical and sharing cache entries), predicate
+pushdown vs a scan-then-mask oracle (time windows straddling shard
+boundaries, empty-result predicates), fused N-query batches bit-identical
+to N sequential single-query runs on all three backends (append/delta
+runs included), and pre-Query-era cache entries missing gracefully and
+being swept by the manifest-write GC."""
+
+import dataclasses
+import os
+import shutil
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (PipelineConfig, Query, SyntheticSpec, TraceStore,
+                        VariabilityPipeline, append_rank_db,
+                        generate_synthetic, run_aggregation, run_append,
+                        run_generation, run_queries, trace_remainder,
+                        truncate_trace, write_rank_db)
+from repro.core.query import QueryPlan, SUMMARY_VERSION
+from repro.core.sharding import ShardPlan
+from repro.core.tracestore import partial_filename, summary_filename
+
+_NS = 1_000_000_000
+STAT_FIELDS = ("count", "sum", "sumsq", "min", "max")
+
+
+@pytest.fixture(scope="module")
+def base(tmp_path_factory):
+    """One generated store (and its source DBs + the full trace for the
+    append tests); each test works on a cheap directory copy."""
+    spec = SyntheticSpec(n_ranks=2, kernels_per_rank=4000,
+                        memcpys_per_rank=600, duration_s=40.0,
+                        n_anomaly_windows=2, seed=11)
+    ds = generate_synthetic(spec)
+    t0 = int(ds.traces[0].kernels.start.min())
+    cutoff = (t0 // _NS) * _NS + 30 * _NS
+    root = tmp_path_factory.mktemp("query_base")
+    paths = []
+    for tr in ds.traces:
+        p = str(root / f"rank{tr.rank}.sqlite")
+        write_rank_db(p, truncate_trace(tr, cutoff))
+        paths.append(p)
+    store_dir = str(root / "store")
+    run_generation(paths, store_dir, n_ranks=2)
+    return ds, paths, cutoff, store_dir
+
+
+@pytest.fixture
+def store(base, tmp_path):
+    _, _, _, store_dir = base
+    dst = str(tmp_path / "s")
+    shutil.copytree(store_dir, dst)
+    return TraceStore(dst)
+
+
+def _assert_results_equal(a, b, perm=None):
+    """Bit-identity between two AggregationResults; ``perm`` maps b's
+    metric axis onto a's (for reordered-metrics comparisons)."""
+    idx = np.arange(len(a.metrics)) if perm is None else np.asarray(perm)
+    for f in STAT_FIELDS:
+        np.testing.assert_array_equal(getattr(a.grouped, f),
+                                      getattr(b.grouped, f)[..., idx])
+    np.testing.assert_array_equal(a.group_keys, b.group_keys)
+    if "quantile" in a.reduced:
+        np.testing.assert_array_equal(
+            a.reduced["quantile"].counts,
+            b.reduced["quantile"].counts[..., idx, :])
+    assert set(a.copy_kind_bytes) == set(b.copy_kind_bytes)
+    for k in a.copy_kind_bytes:
+        np.testing.assert_array_equal(a.copy_kind_bytes[k],
+                                      b.copy_kind_bytes[k])
+
+
+# --- canonical form ---------------------------------------------------------
+
+def test_canonical_form_is_order_insensitive():
+    a = Query(metrics=("m_bytes", "k_stall"), group_by="m_kind",
+              reducers=("quantile", "moments"), ranks=(1, 0, 1),
+              transfer_kinds=(8, 1))
+    b = Query(metrics=("k_stall", "m_bytes"), group_by="m_kind",
+              reducers=("moments", "quantile"), ranks=(0, 1),
+              transfer_kinds=(1, 8))
+    assert a.canonical() == b.canonical()
+    assert a.cache_key() == b.cache_key()
+    # different predicates / metrics do change the key
+    assert a.cache_key() != Query(metrics=("k_stall",)).cache_key()
+    assert a.cache_key() != dataclasses.replace(
+        a, transfer_kinds=(1,)).cache_key()
+
+
+def test_quantile_score_folds_reducer_into_canonical_suite():
+    a = Query(metrics=("k_stall",), anomaly_score="p99")
+    b = Query(metrics=("k_stall",), reducers=("moments", "quantile"))
+    assert a.canonical_reducers == ("moments", "quantile")
+    assert a.cache_key() == b.cache_key()
+    # the score itself is NOT part of the identity
+    assert a.cache_key() == dataclasses.replace(
+        a, anomaly_score="iqr").cache_key()
+
+
+def test_query_json_roundtrip():
+    q = Query(metrics=("k_stall", "m_bytes"), group_by="m_kind",
+              time_window=(100, 200), ranks=(0,), anomaly_score="p95",
+              interval_ns=1000)
+    assert Query.from_json(q.to_json()) == q
+    with pytest.raises(ValueError):
+        Query.from_spec({"metrics": ["k_stall"], "bogus_field": 1})
+    with pytest.raises(ValueError):
+        Query(metrics=("k_stall",), time_window=(200, 100))
+    with pytest.raises(ValueError):
+        Query(metrics=())
+
+
+def test_cache_key_stable_across_processes():
+    """The canonical hash is the on-disk cache identity — it must not
+    depend on PYTHONHASHSEED or any per-process state."""
+    q = Query(metrics=("m_bytes", "k_stall"), group_by="m_kind",
+              transfer_kinds=(2, 1), time_window=(10, 20))
+    code = ("from repro.core import Query; "
+            "print(Query(metrics=('m_bytes', 'k_stall'), "
+            "group_by='m_kind', transfer_kinds=(2, 1), "
+            "time_window=(10, 20)).cache_key())")
+    keys = []
+    for seed in ("0", "1"):
+        env = dict(os.environ, PYTHONHASHSEED=seed,
+                   PYTHONPATH="src" + os.pathsep
+                   + os.environ.get("PYTHONPATH", ""))
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, check=True,
+                             cwd=os.path.dirname(os.path.dirname(
+                                 os.path.abspath(__file__))))
+        keys.append(out.stdout.strip())
+    assert keys[0] == keys[1] == q.cache_key()
+
+
+# --- order-insensitive cache (satellite: reorder = pure hit) ---------------
+
+def test_reordered_requery_is_pure_cache_hit(store):
+    r1 = run_aggregation(store, metrics=["m_duration", "k_stall"],
+                         group_by="m_kind",
+                         reducers=("moments", "quantile"))
+    assert not r1.from_cache
+    assert len(store.summary_keys()) == 1
+    fresh = TraceStore(store.root)
+    r2 = run_aggregation(fresh, metrics=["k_stall", "m_duration"],
+                         group_by="m_kind",
+                         reducers=("quantile", "moments"))
+    assert r2.from_cache
+    assert fresh.io_counts["shard_reads"] == 0
+    assert fresh.io_counts["partial_reads"] == 0
+    assert len(fresh.summary_keys()) == 1       # no second entry minted
+    assert r2.metrics == ["k_stall", "m_duration"]
+    # same answer, axis permuted back to the caller's order
+    _assert_results_equal(r1, r2, perm=[1, 0])
+
+
+def test_old_style_and_query_style_share_cache_and_results(store):
+    old = run_aggregation(store, metrics=["k_stall", "m_bytes"],
+                          group_by="m_kind")
+    fresh = TraceStore(store.root)
+    qr = run_queries(fresh, [Query(metrics=("k_stall", "m_bytes"),
+                                   group_by="m_kind")])[0]
+    assert qr.cache_hit
+    assert fresh.io_counts["shard_reads"] == 0
+    _assert_results_equal(old, qr.result)
+    # and the other way: a Query-made entry serves an old-style call
+    q2 = Query(metrics=("m_duration",), group_by="k_device")
+    run_queries(store, [q2])
+    fresh2 = TraceStore(store.root)
+    r2 = run_aggregation(fresh2, metrics=["m_duration"],
+                         group_by="k_device")
+    assert r2.from_cache and fresh2.io_counts["shard_reads"] == 0
+
+
+def test_pipeline_config_to_query_shares_engine_and_cache(store):
+    cfg = PipelineConfig(backend="serial", metrics=["k_stall"],
+                         group_by="m_kind", anomaly_score="p99")
+    pipe = VariabilityPipeline(cfg)
+    agg = pipe.aggregate(store.root)
+    assert "quantile" in agg.reduced        # score pulled the sketch in
+    out = pipe.query(store.root, [cfg.to_query()])
+    assert out[0].cache_hit
+    _assert_results_equal(agg, out[0].result)
+    assert out[0].anomalies is not None     # fenced on the query's score
+
+
+# --- predicate pushdown vs scan-then-mask oracle ---------------------------
+
+def _masked_store(store, query, out_dir):
+    """The oracle: a store holding ONLY the mask-passing rows (written in
+    the same shard layout), to be aggregated with the predicate-free rest
+    of the query. Pushdown is correct iff the filtered engine run equals
+    this unfiltered run bit for bit."""
+    dst = TraceStore(out_dir)
+    for idx in store.shard_indices():
+        cols = store.read_shard(idx)
+        mask = query.row_mask(cols)
+        if mask is not None:
+            cols = {c: np.asarray(v)[mask] for c, v in cols.items()}
+        dst.write_shard(idx, cols)
+    dst.write_manifest(store.read_manifest())
+    return dst
+
+
+def _strip_predicates(q):
+    return dataclasses.replace(q, time_window=None, ranks=None,
+                               kernel_names=None, transfer_kinds=None)
+
+
+@pytest.mark.parametrize("case", ["straddle", "kinds_ranks", "names",
+                                  "empty", "combined"])
+def test_pushdown_matches_scan_then_mask_oracle(store, tmp_path, case):
+    man = store.read_manifest()
+    plan = ShardPlan(man.t_start, man.t_end, man.n_shards)
+    edges = plan.boundaries()
+    # a window straddling shard boundaries mid-shard on both ends
+    straddle = (int(edges[2] + (edges[3] - edges[2]) // 3),
+                int(edges[7] + (edges[8] - edges[7]) // 2))
+    kernel_names = None
+    for idx in store.shard_indices():
+        cols = TraceStore(store.root).read_shard(idx)
+        if len(cols["k_name"]):
+            kernel_names = tuple(np.unique(cols["k_name"])[:2].astype(int))
+            break
+    q = {
+        "straddle": Query(metrics=("k_stall", "m_duration"),
+                          group_by="m_kind", time_window=straddle),
+        "kinds_ranks": Query(metrics=("m_bytes",), group_by="m_kind",
+                             transfer_kinds=(1, 2), ranks=(0,)),
+        "names": Query(metrics=("k_stall",), group_by="k_device",
+                       kernel_names=kernel_names),
+        "empty": Query(metrics=("k_stall",), group_by="m_kind",
+                       transfer_kinds=(9999,)),
+        "combined": Query(metrics=("k_stall", "m_bytes"),
+                          reducers=("moments", "quantile"),
+                          time_window=straddle, ranks=(1,),
+                          transfer_kinds=(1, 8)),
+    }[case]
+    got = run_queries(store, [q])[0]
+    oracle_store = _masked_store(TraceStore(store.root), q,
+                                 str(tmp_path / "oracle"))
+    want = run_queries(oracle_store, [_strip_predicates(q)])[0]
+    _assert_results_equal(want.result, got.result)
+    if case == "empty":
+        assert got.result.stats.count.sum() == 0
+        assert got.rows_filtered == got.rows_scanned > 0
+
+
+def test_time_window_prunes_shard_reads(store):
+    man = store.read_manifest()
+    plan = ShardPlan(man.t_start, man.t_end, man.n_shards)
+    edges = plan.boundaries()
+    q = Query(metrics=("k_stall",),
+              time_window=(int(edges[3]), int(edges[6])))
+    qplan = QueryPlan.compile(store, [q])
+    assert qplan.lanes[0].pruned == [3, 4, 5]
+    assert qplan.lanes[0].shards_pruned == man.n_shards - 3
+    fresh = TraceStore(store.root)
+    qr = run_queries(fresh, [q])[0]
+    assert fresh.io_counts["shard_reads"] == 3
+    assert qr.shards_pruned == man.n_shards - 3
+    assert qr.recomputed_shards == 3
+    # a window entirely below the plan start still scans file 0 (clipped
+    # rows live there), never crashes, and returns the empty answer
+    q_below = Query(metrics=("k_stall",),
+                    time_window=(man.t_start - 10 * _NS,
+                                 man.t_start - 5 * _NS))
+    qp2 = QueryPlan.compile(store, [q_below])
+    assert qp2.lanes[0].pruned == [0]
+    assert run_queries(TraceStore(store.root),
+                       [q_below])[0].result.stats.count.sum() == 0
+
+
+# --- fusion: batch == sequential, on all three backends --------------------
+
+def _mixed_queries(man):
+    plan = ShardPlan(man.t_start, man.t_end, man.n_shards)
+    edges = plan.boundaries()
+    return [
+        Query(metrics=("k_stall",), group_by="m_kind"),
+        Query(metrics=("m_duration", "m_bytes"), group_by="m_kind",
+              transfer_kinds=(1, 2)),
+        Query(metrics=("k_stall", "m_duration"),
+              reducers=("moments", "quantile"), ranks=(0,)),
+        Query(metrics=("m_bytes",),
+              time_window=(int(edges[1]), int(edges[5]))),
+    ]
+
+
+def _fused_vs_sequential(store_dir, backend, tmp_path):
+    man = TraceStore(store_dir).read_manifest()
+    queries = _mixed_queries(man)
+    cfg = PipelineConfig(backend=backend, n_ranks=2)
+    pipe = VariabilityPipeline(cfg)
+
+    fused_dir = str(tmp_path / f"fused_{backend}")
+    shutil.copytree(store_dir, fused_dir)
+    fused = pipe.query(fused_dir, queries)
+    assert not any(qr.cache_hit for qr in fused)
+
+    for q, qf in zip(queries, fused):
+        solo_dir = str(tmp_path / f"solo_{backend}_{q.cache_key()}")
+        shutil.copytree(store_dir, solo_dir)
+        solo = pipe.query(solo_dir, [q])[0]
+        assert not solo.cache_hit
+        _assert_results_equal(solo.result, qf.result)
+        np.testing.assert_array_equal(solo.anomalies.scores,
+                                      qf.anomalies.scores)
+
+
+def test_fused_batch_equals_sequential_serial(base, tmp_path):
+    _fused_vs_sequential(base[3], "serial", tmp_path)
+
+
+def test_fused_batch_equals_sequential_process(base, tmp_path):
+    _fused_vs_sequential(base[3], "process", tmp_path)
+
+
+def test_fused_batch_equals_sequential_jax(base, tmp_path):
+    pytest.importorskip("jax")
+    _fused_vs_sequential(base[3], "jax", tmp_path)
+
+
+@pytest.mark.parametrize("backend", ["serial", "jax"])
+def test_fused_delta_after_append_bit_identical_to_cold(base, tmp_path,
+                                                        backend):
+    """The acceptance bar's delta leg: warm a fused batch, append new
+    trace, re-run the batch as a DELTA (clean shards from each lane's
+    partial cache), and compare every query against a cold standalone
+    run over the appended store — bit-identical, with fewer shard reads
+    than shards."""
+    if backend == "jax":
+        pytest.importorskip("jax")
+    ds, base_paths, cutoff, _ = base
+    work = tmp_path / "delta"
+    os.makedirs(work)
+    paths = []
+    for tr in ds.traces:
+        p = str(work / f"rank{tr.rank}.sqlite")
+        write_rank_db(p, truncate_trace(tr, cutoff))
+        paths.append(p)
+    store_dir = str(work / "s")
+    run_generation(paths, store_dir, n_ranks=2)
+    man = TraceStore(store_dir).read_manifest()
+    queries = _mixed_queries(man)
+
+    run_queries(store_dir, queries, backend=backend)   # warm partials
+    for tr, p in zip(ds.traces, paths):
+        append_rank_db(p, trace_remainder(tr, cutoff))
+    rep = run_append(paths, store_dir)
+    assert rep.n_new_shards > 0
+
+    fresh = TraceStore(store_dir)
+    delta = run_queries(fresh, queries, backend=backend)
+    n_files = fresh.read_manifest().n_shards
+    assert fresh.io_counts["shard_reads"] < n_files
+    assert all(not qr.cache_hit and qr.partial_hits > 0 for qr in delta)
+
+    for q, qd in zip(queries, delta):
+        cold_dir = str(work / f"cold_{q.cache_key()}")
+        shutil.copytree(store_dir, cold_dir)
+        cs = TraceStore(cold_dir)
+        cs.clear_summaries()
+        cs.clear_partials()
+        cold = run_queries(cs, [q], backend=backend)[0]
+        _assert_results_equal(cold.result, qd.result)
+
+
+def test_batch_dedupes_canonically_equal_lanes(store):
+    """Two queries in ONE batch whose canonical forms coincide (reordered
+    metrics/reducers, re-ordered predicate subsets) share a single
+    computation — and both answers come back in their own metric order."""
+    a = Query(metrics=("k_stall", "m_duration"), group_by="m_kind",
+              transfer_kinds=(1, 2))
+    b = Query(metrics=("m_duration", "k_stall"), group_by="m_kind",
+              transfer_kinds=(2, 1))
+    out = run_queries(store, [a, b])
+    n_files = store.read_manifest().n_shards
+    assert store.io_counts["shard_reads"] == n_files   # one scan, not two
+    _assert_results_equal(out[0].result, out[1].result, perm=[1, 0])
+    assert out[0].result.metrics == ["k_stall", "m_duration"]
+    assert out[1].result.metrics == ["m_duration", "k_stall"]
+
+
+# --- stale-cache migration -------------------------------------------------
+
+def test_pre_query_scheme_entries_miss_and_are_gcd(store):
+    """Entries written under the pre-Query key scheme (SUMMARY_VERSION 3)
+    must never be served — including a version-3 payload planted AT the
+    current key — and the manifest-write GC must sweep them."""
+    # plant: an old-scheme summary under a foreign key, an old-version
+    # payload at the CURRENT key, and an old-scheme partial file
+    q = Query(metrics=("k_stall",), group_by="m_kind")
+    man = store.read_manifest()
+    plan_key = (man.t_start, man.t_end, man.n_shards)
+    cur_key = store.summary_key(plan_key, query=q)
+    old_payload = {"version": np.asarray(3, np.int64),
+                   "covered": np.zeros((0, 3), np.int64)}
+    store.write_summary(cur_key, old_payload)
+    store.write_summary("00ddba11deadbeef", old_payload)
+    store.write_partial(0, "00ddba11deadbeef", {
+        "version": np.asarray(3, np.int64),
+        "fingerprint": np.asarray([0, 1, 2], np.int64)})
+
+    res = run_aggregation(store, query=q)
+    assert not res.from_cache                    # graceful miss, no crash
+    assert len(res.recomputed_shards) == man.n_shards
+
+    store.write_manifest(man)                    # triggers gc_stale
+    assert "00ddba11deadbeef" not in store.summary_keys()
+    assert not os.path.exists(os.path.join(
+        store.root, partial_filename(0, "00ddba11deadbeef")))
+    # the recompute's own (version-4) entries survived the sweep
+    assert os.path.exists(os.path.join(store.root,
+                                       summary_filename(cur_key)))
+    again = run_aggregation(TraceStore(store.root), query=q)
+    assert again.from_cache
+
+
+def test_summary_version_is_bumped_for_query_scheme():
+    # the migration story above rests on this — pre-Query stores carried 3
+    assert SUMMARY_VERSION >= 4
