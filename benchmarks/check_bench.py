@@ -16,6 +16,8 @@ Floors (the repo's banked acceptance bars):
                                         ``append_plus_delta_speedup`` >= 5x
   query_fusion  8 mixed filtered queries fused vs sequential
                                         ``fusion_speedup``          >= 3x
+  diff          warm fused trace diff vs two cold sequential analyses
+                                        ``diff_speedup``            >= 5x
 
 Records produced with ``--smoke`` carry ``"smoke": true`` and are held
 only to STRUCTURAL checks (schema, finite positive timings, the bench's
@@ -24,10 +26,15 @@ floors to be meaningful on a noisy CI clock. The nightly workflow runs
 the benches at ``--scale medium`` without ``--smoke``, where the floors
 bind for real.
 
+On top of the pass/fail gate, the checker writes a markdown table of
+every record's speedup vs its floor — to ``$GITHUB_STEP_SUMMARY`` when
+that file is available (the GitHub Actions job-summary panel), to
+stdout otherwise.
+
 Usage (exit code 0 = all green):
 
   python -m benchmarks.check_bench BENCH_quantile.json \\
-      BENCH_incremental.json BENCH_incremental_jax.json
+      BENCH_incremental.json BENCH_incremental_jax.json BENCH_diff.json
 """
 
 from __future__ import annotations
@@ -35,8 +42,9 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import os
 import sys
-from typing import List
+from typing import List, Optional, Tuple
 
 # bench name -> (speedup field, timing fields that must be finite & > 0,
 #                speedup floor)
@@ -50,7 +58,19 @@ SCHEMAS = {
                     ("cold_rescan_us", "delta_us", "append_us"), 5.0),
     "query_fusion": ("fusion_speedup",
                      ("fused_us", "sequential_us"), 3.0),
+    "diff": ("diff_speedup",
+             ("fused_warm_us", "naive_sequential_us"), 5.0),
 }
+
+
+def _speedup_field(rec: dict) -> Tuple[str, float]:
+    """(speedup field, floor) for a record, resolving variants."""
+    speedup_field, _, floor = SCHEMAS[rec["bench"]]
+    if rec["bench"] == "incremental" and rec.get("backend") == "jax":
+        # the jax loop's acceptance bar covers the whole online round
+        # trip: append ingest + delta vs a cold device re-scan
+        speedup_field = "append_plus_delta_speedup"
+    return speedup_field, floor
 
 
 def check_record(path: str, rec: dict) -> List[str]:
@@ -58,11 +78,8 @@ def check_record(path: str, rec: dict) -> List[str]:
     bench = rec.get("bench")
     if bench not in SCHEMAS:
         return [f"{path}: unknown bench kind {bench!r}"]
-    speedup_field, timing_fields, floor = SCHEMAS[bench]
-    if bench == "incremental" and rec.get("backend") == "jax":
-        # the jax loop's acceptance bar covers the whole online round
-        # trip: append ingest + delta vs a cold device re-scan
-        speedup_field = "append_plus_delta_speedup"
+    _, timing_fields, floor = SCHEMAS[bench]
+    speedup_field, _ = _speedup_field(rec)
     problems = []
     for f in timing_fields + (speedup_field,):
         v = rec.get(f)
@@ -86,25 +103,64 @@ def check_record(path: str, rec: dict) -> List[str]:
     return problems
 
 
+def summary_table(checked: List[Tuple[str, Optional[dict], List[str]]]) -> str:
+    """Markdown table of every bench record vs its floor."""
+    lines = ["### Bench regression gate", "",
+             "| record | bench | mode | speedup | floor | status |",
+             "| --- | --- | --- | ---: | ---: | --- |"]
+    for path, rec, found in checked:
+        if rec is None or rec.get("bench") not in SCHEMAS:
+            lines.append(f"| `{path}` | ? | — | — | — | FAIL |")
+            continue
+        bench = rec["bench"]
+        if rec.get("backend") == "jax":
+            bench += "/jax"
+        speedup_field, floor = _speedup_field(rec)
+        v = rec.get(speedup_field)
+        speedup = (f"{float(v):.2f}x"
+                   if isinstance(v, (int, float)) and math.isfinite(v)
+                   else f"{v!r}")
+        mode = "smoke" if rec.get("smoke") else "full"
+        floor_cell = "n/a" if rec.get("smoke") else f"{floor:.0f}x"
+        status = "OK" if not found else "FAIL"
+        lines.append(f"| `{path}` | {bench} | {mode} | {speedup} "
+                     f"| {floor_cell} | {status} |")
+    return "\n".join(lines) + "\n"
+
+
+def write_summary(table: str) -> None:
+    """Job-summary panel on GitHub Actions, plain stdout locally."""
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write(table + "\n")
+    else:
+        print(table)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("records", nargs="+",
                     help="BENCH_*.json files to gate on")
     args = ap.parse_args()
+    checked: List[Tuple[str, Optional[dict], List[str]]] = []
     problems: List[str] = []
     for path in args.records:
         try:
             with open(path) as f:
                 rec = json.load(f)
         except (OSError, ValueError) as e:
+            checked.append((path, None, [f"{path}: unreadable ({e})"]))
             problems.append(f"{path}: unreadable bench record ({e})")
             continue
         found = check_record(path, rec)
+        checked.append((path, rec, found))
         problems.extend(found)
         mode = "smoke" if rec.get("smoke") else "full"
         if not found:
             print(f"OK   {path} [{mode}] bench={rec.get('bench')}"
                   f"{'/' + rec['backend'] if rec.get('backend') else ''}")
+    write_summary(summary_table(checked))
     if problems:
         print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)
         for p in problems:

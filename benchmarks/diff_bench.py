@@ -1,0 +1,194 @@
+"""Trace-diff benchmark: fused diff vs naive two-sequential-analyses.
+
+The diff engine's claim (PR 6): ``pipeline.diff(A, B)`` answers "what got
+slower and where" from the per-(bin, group) quantile sketches the
+reducer suite already caches — ONE fused scan per store when cold,
+ZERO shard reads when both stores' summaries are warm. The naive
+alternative a consumer would write is two sequential cold analyses
+(full shard scan of each store) followed by the same report math.
+
+Both arms run the identical report code (``VariabilityPipeline.diff``);
+only the cache state differs, and each arm is labeled with the
+``io_counts`` shard-read provenance of the run it timed, so a
+mislabeled warm/cold run fails loudly instead of lying:
+
+  naive_sequential_us   caches cleared before every repeat — the diff
+                        degenerates to two sequential full scans
+                        (``shard_reads == n_shards`` per store);
+  fused_warm_us         summaries warm — the verdict is computed
+                        entirely from cached sketches
+                        (``shard_reads == 0`` per store).
+
+The record also embeds the diff verdict itself: the store pair is the
+same seed-3 workload spelled with respecialized kernel names
+(``name_variant=1``) plus a 1.5x slowdown injected into one kernel
+family, so the bench doubles as an end-to-end check that the injected
+family is ranked top of the report and flips the verdict to
+``regressed`` (``verdict_regressed_ok`` / ``top_ranked_ok``), while a
+self-diff stays ``pass`` (``clean_pass_ok``).
+
+  PYTHONPATH=src python -m benchmarks.diff_bench [--scale medium]
+  PYTHONPATH=src python -m benchmarks.diff_bench --smoke --out BENCH_diff.json
+
+``--smoke`` keeps the dataset small and skips the speedup floor (CI
+containers have noisy clocks); the JSON artifact is still emitted with
+``"smoke": true`` so :mod:`benchmarks.check_bench` holds it to the
+structural checks and ``*_ok`` flags only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import (PipelineConfig, SyntheticSpec, TraceStore,
+                        VariabilityPipeline, generate_synthetic,
+                        inject_slowdown, normalize_kernel_name,
+                        run_generation, write_synthetic_dbs)
+
+from . import common
+
+# one kernel family (ids congruent mod 21 = "layer_norm") across three
+# spelling styles — same injection the diff tests use
+SLOW_IDS = (3, 24, 45)
+SLOW_FAMILY = "layer_norm"
+SLOW_FACTOR = 1.5
+
+_SPECS = {
+    "small": dict(n_ranks=2, kernels_per_rank=5_000, memcpys_per_rank=700,
+                  duration_s=60, seed=3),
+    "medium": dict(n_ranks=4, kernels_per_rank=40_000,
+                   memcpys_per_rank=5_000, duration_s=120, seed=3),
+}
+
+_STORE_CACHE = {}
+
+
+def _stores(scale: str):
+    """(baseline_store, candidate_store, n_ranks) — same seed-3 workload,
+    candidate respecialized (``name_variant=1``) with a 1.5x slowdown
+    injected into the :data:`SLOW_IDS` family."""
+    if scale in _STORE_CACHE:
+        return _STORE_CACHE[scale]
+    cfg = _SPECS[scale]
+    ds_a = generate_synthetic(SyntheticSpec(**cfg, name_variant=0))
+    ds_b = inject_slowdown(
+        generate_synthetic(SyntheticSpec(**cfg, name_variant=1)),
+        SLOW_FACTOR, SLOW_IDS)
+    work = tempfile.mkdtemp(prefix=f"repro_diffbench_{scale}_")
+    stores = []
+    for tag, ds in (("a", ds_a), ("b", ds_b)):
+        dbs = write_synthetic_dbs(ds, os.path.join(work, f"dbs_{tag}"))
+        store = os.path.join(work, f"store_{tag}")
+        run_generation(dbs, store, n_ranks=cfg["n_ranks"])
+        stores.append(store)
+    _STORE_CACHE[scale] = (stores[0], stores[1], cfg["n_ranks"])
+    return _STORE_CACHE[scale]
+
+
+def _clear_caches(*stores: str) -> None:
+    for s in stores:
+        ts = TraceStore(s)
+        ts.clear_summaries()
+        ts.clear_partials()
+
+
+def _median_us(fn, setup=None, repeat: int = 3):
+    """(median µs, last result) with per-repeat setup excluded from
+    the timed region."""
+    times, out = [], None
+    for _ in range(repeat):
+        if setup is not None:
+            setup()
+        t0 = time.perf_counter()
+        out = fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6), out
+
+
+def run(scale: str, smoke: bool = False) -> dict:
+    store_a, store_b, n_ranks = _stores(scale)
+    n_shards = TraceStore(store_a).read_manifest().n_shards
+    pipe = VariabilityPipeline(PipelineConfig(n_ranks=n_ranks,
+                                              backend="serial"))
+
+    # naive: every repeat starts cache-cold, so the diff is forced to
+    # run two sequential full analyses (one complete scan per store)
+    naive_us, cold = _median_us(
+        lambda: pipe.diff(store_a, store_b),
+        setup=lambda: _clear_caches(store_a, store_b))
+    cold_scan_ok = (cold.shard_reads_a == n_shards
+                    and cold.shard_reads_b == n_shards)
+
+    # fused: summaries are warm (the last naive repeat wrote them) —
+    # the verdict comes off the cached sketches, zero shard reads
+    warm_us, warm = _median_us(lambda: pipe.diff(store_a, store_b))
+    zero_read_ok = warm.shard_reads_a == 0 and warm.shard_reads_b == 0
+
+    top = warm.groups[:len(SLOW_IDS)]
+    top_ranked_ok = (
+        len(top) == len(SLOW_IDS)
+        and all(SLOW_FAMILY in normalize_kernel_name(g.name_a) for g in top)
+        and {g.name_a for g in warm.regressions()}
+        == {g.name_a for g in top})
+    clean_pass_ok = pipe.diff(store_a, store_a).verdict == "pass"
+
+    rec = warm.to_record(smoke=smoke)
+    rec.update({
+        "bench": "diff",
+        "scale": scale,
+        "n_shards": int(n_shards),
+        "naive_sequential_us": naive_us,
+        "fused_warm_us": warm_us,
+        "diff_speedup": naive_us / warm_us,
+        "verdict_regressed_ok": warm.verdict == "regressed",
+        "top_ranked_ok": top_ranked_ok,
+        "zero_read_ok": zero_read_ok,
+        "cold_single_scan_ok": cold_scan_ok,
+        "clean_pass_ok": clean_pass_ok,
+    })
+    return rec
+
+
+def rows(rec: dict) -> List[common.Row]:
+    return [
+        common.Row("diff/fused_warm", rec["fused_warm_us"],
+                   f"x{rec['diff_speedup']:.1f} vs naive, "
+                   f"reads={rec['shard_reads_b']}"),
+        common.Row("diff/naive_two_cold_analyses", rec["naive_sequential_us"],
+                   f"{rec['n_shards']} shards/store rescanned"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="small",
+                    choices=sorted(_SPECS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="emit the record with smoke=true (structural "
+                         "checks only, no speedup floor)")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON record here (BENCH_diff.json)")
+    args = ap.parse_args()
+
+    rec = run(args.scale, smoke=args.smoke)
+    for r in rows(rec):
+        print(r.csv())
+    blob = json.dumps(rec, indent=2)
+    print(blob)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(blob + "\n")
+    bad = [k for k in rec if k.endswith("_ok") and rec[k] is not True]
+    if bad:
+        raise SystemExit(f"diff bench self-check failed: {bad}")
+
+
+if __name__ == "__main__":
+    main()

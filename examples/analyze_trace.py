@@ -13,6 +13,18 @@ score (``--score p99`` / ``p95`` / ``iqr``) adds the quantile-sketch
 reducer and fences on the within-bin duration distribution instead of the
 bin mean. Repeat aggregations over the same store are answered from the
 summary cache (``summary_*.npz``) without re-reading shards.
+
+Trace diff & regression gating (the CI verdict pipeline):
+
+  # build a baseline store and a candidate store (same workload, the
+  # candidate respecialized + slowed 1.5x on one kernel family) ...
+  python examples/analyze_trace.py --prepare-store /tmp/base --seed 7
+  python examples/analyze_trace.py --prepare-store /tmp/cand --seed 7 \\
+      --name-variant 1 --slowdown 1.5
+  # ... then diff them: ranked "what got slower and where" report,
+  # exit 1 when the verdict is "regressed"
+  python examples/analyze_trace.py --diff /tmp/base /tmp/cand \\
+      --diff-out verdict.json
 """
 
 import argparse
@@ -51,6 +63,28 @@ def main() -> None:
                     help="after the analysis, append a late-arriving "
                          "synthetic rank DB and delta-aggregate (only "
                          "dirty/new shards are rescanned)")
+    ap.add_argument("--prepare-store", default=None, metavar="DIR",
+                    help="generate a synthetic trace store at DIR and "
+                         "exit (for --diff / the trace-regression CI "
+                         "workflow); shaped by --seed, --name-variant "
+                         "and --slowdown")
+    ap.add_argument("--seed", type=int, default=7,
+                    help="synthetic workload seed for --prepare-store")
+    ap.add_argument("--name-variant", type=int, default=0,
+                    help="kernel-name respecialization variant for "
+                         "--prepare-store (same data, different "
+                         "mangled/Triton spellings)")
+    ap.add_argument("--slowdown", type=float, default=None,
+                    help="with --prepare-store: inject this slowdown "
+                         "factor into one kernel family (layer_norm)")
+    ap.add_argument("--diff", nargs=2, metavar=("STORE_A", "STORE_B"),
+                    default=None,
+                    help="diff two trace stores: print the ranked "
+                         "regression report and exit 1 if the verdict "
+                         "is 'regressed'")
+    ap.add_argument("--diff-out", default=None, metavar="FILE",
+                    help="with --diff: also write the machine-readable "
+                         "verdict record (check_bench shape) to FILE")
     ap.add_argument("--query", default=None,
                     help="JSON list of declarative query specs (inline, "
                          "or @file.json) — run as ONE fused batch over "
@@ -60,6 +94,13 @@ def main() -> None:
                          "[\"k_stall\"], \"group_by\": \"m_kind\", "
                          "\"transfer_kinds\": [1, 2]}]'")
     args = ap.parse_args()
+
+    if args.prepare_store:
+        _prepare_store(args)
+        return
+    if args.diff:
+        _diff(args)
+        return
 
     tmp = tempfile.mkdtemp(prefix="repro_analyze_")
     db_paths = args.db
@@ -130,6 +171,46 @@ def main() -> None:
 
     if args.append_demo:
         _append_demo(pipe, os.path.join(tmp, "store"), db_paths, tmp)
+
+
+# one kernel family ("layer_norm": synthetic name ids congruent mod 21)
+# across its mangled / Triton / template spellings
+_SLOW_IDS = (3, 24, 45)
+
+
+def _prepare_store(args) -> None:
+    """Generate a synthetic store for the trace-regression workflow:
+    same seed = same workload; --name-variant respecializes the kernel
+    spellings; --slowdown injects a regression into one family."""
+    from repro.core import inject_slowdown, run_generation
+
+    ds = generate_synthetic(SyntheticSpec(
+        n_ranks=args.ranks, seed=args.seed,
+        name_variant=args.name_variant))
+    if args.slowdown is not None:
+        ds = inject_slowdown(ds, args.slowdown, _SLOW_IDS)
+    tmp = tempfile.mkdtemp(prefix="repro_prepare_")
+    dbs = write_synthetic_dbs(ds, os.path.join(tmp, "dbs"))
+    rep = run_generation(dbs, args.prepare_store, n_ranks=args.ranks)
+    print(f"store ready: {args.prepare_store} ({rep.n_shards} shards, "
+          f"seed={args.seed}, variant={args.name_variant}"
+          + (f", slowdown x{args.slowdown:g} on ids {list(_SLOW_IDS)}"
+             if args.slowdown is not None else "") + ")")
+
+
+def _diff(args) -> None:
+    """Diff two stores and gate on the verdict (exit 1 = regressed)."""
+    cfg = PipelineConfig(n_ranks=args.ranks, backend=args.backend,
+                         metrics=args.metric or ["k_stall"])
+    rep = VariabilityPipeline(cfg).diff(args.diff[0], args.diff[1])
+    print(rep.render())
+    print(f"\nprovenance: {rep.provenance()}")
+    if args.diff_out:
+        with open(args.diff_out, "w") as f:
+            f.write(rep.to_json() + "\n")
+        print(f"verdict record written to {args.diff_out}")
+    if rep.verdict == "regressed":
+        raise SystemExit(1)
 
 
 def _query_demo(pipe, store_dir, spec_arg) -> None:

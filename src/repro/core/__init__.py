@@ -22,7 +22,11 @@ Layout (one module per paper concept — see DESIGN.md §2/§3):
                 clean/dirty classification -> suite-generic merge ->
                 covered summary; only dirty shards are ever rescanned
   anomaly       IQR fences (mean/std/max/sum + p50/p95/p99/iqr scores),
-                top-k anomalous shards
+                top-k anomalous shards; sketch-vs-sketch shift scores
+  diff          trace diff & regression engine: fuzzy kernel-name
+                alignment across stores, per-(bin, group) distribution
+                shift off the cached sketches, ranked DiffReport with a
+                pass/regressed verdict CI can gate on
   distributed   jax backend (shard_map + psum_scatter/all_gather) with
                 flat-segment dirty-only collective entry points
   pipeline      end-to-end driver (serial | process | jax backends) with a
@@ -32,18 +36,22 @@ Layout (one module per paper concept — see DESIGN.md §2/§3):
 
 from .events import (EventTable, GpuInfo, RankTrace, SyntheticSpec,
                      SyntheticDataset, append_rank_db, generate_synthetic,
+                     inject_slowdown, read_kernel_names,
+                     synthetic_kernel_names,
                      trace_remainder, truncate_trace, write_synthetic_dbs,
                      read_rank_db, write_rank_db)
 from .sharding import (ShardPlan, assignment, block_assignment,
                        cyclic_assignment, owner_of_shards)
 from .tracestore import StoreManifest, TraceStore
 from .generation import (AppendReport, GenerationConfig, GenerationReport,
-                         run_append, run_generation, window_left_join)
+                         run_append, run_generation, union_kernel_names,
+                         window_left_join)
 from .reducers import (MergeableReducer, QuantileSketch, get_reducer,
                        normalize_reducers, register_reducer,
                        REDUCER_REGISTRY, QUANTILE_REL_ERR)
 from .query import (LanePlan, Query, QueryPlan, QueryResult,
-                    SUMMARY_VERSION, is_quantile_score)
+                    SUMMARY_VERSION, diff_cache_key, diff_from_spec,
+                    diff_query, diff_spec, is_quantile_score)
 from .aggregation import (AggregationResult, BinStats, GroupedPartial,
                           ShardPartial, bin_samples, bin_samples_grouped,
                           classify_shards, compute_partials_jax,
@@ -52,5 +60,8 @@ from .aggregation import (AggregationResult, BinStats, GroupedPartial,
                           run_aggregation, run_incremental, run_queries,
                           DEFAULT_METRIC)
 from .anomaly import (IQRReport, anomalous_bins, iqr_detect, recovered,
-                      report_for_query)
+                      report_for_query, sketch_shift)
+from .diff import (DiffReport, DiffThresholds, GroupDiff, MatchResult,
+                   NameMatch, diff_results, kernel_name_tokens,
+                   match_kernel_names, normalize_kernel_name)
 from .pipeline import PipelineConfig, PipelineResult, VariabilityPipeline

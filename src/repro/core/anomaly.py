@@ -36,7 +36,7 @@ from .aggregation import AggregationResult, BinStats
 # form folds a quantile score's implied reducer into the suite);
 # re-exported here because this is the detector module callers reach for
 from .query import Query, _PCT_RE, is_quantile_score  # noqa: F401
-from .reducers import QuantileSketch
+from .reducers import SUBDIV, QuantileSketch
 
 
 def report_for_query(result: AggregationResult, query: Query,
@@ -184,6 +184,41 @@ def anomalous_bins(stats, k: float = 1.5, top_k: int = 5,
     mean — see :func:`score_values` for the full score list."""
     s = score_values(stats, score, metric_idx)
     return iqr_detect(s, k=k, top_k=top_k, boundaries=boundaries)
+
+
+def sketch_shift(counts_a: np.ndarray, counts_b: np.ndarray,
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Distribution-shift scores between two quantile-sketch histograms,
+    in OCTAVES (doublings of the metric) — the diff engine's core score.
+
+    Both inputs are log2-bucket count tensors with the bucket axis LAST
+    (any leading batch axes, broadcast together). Because the sketch
+    buckets are uniform in log2 at ``SUBDIV`` buckets per octave, the
+    area between the two normalized CDFs *is* the 1-D earth mover's
+    distance on the log scale:
+
+      signed  = sum_k (CDF_a[k] - CDF_b[k]) / SUBDIV
+              = E_b[log2 x] - E_a[log2 x]   (bucket-midpoint estimate)
+      spread  = sum_k |CDF_a[k] - CDF_b[k]| / SUBDIV   (total EMD)
+
+    ``signed > 0`` means distribution B sits higher (slower);
+    ``2**signed`` estimates the geometric-mean slowdown ratio, which is
+    robust to the heavy tails that wreck arithmetic-mean ratios. The
+    unsigned ``spread`` additionally catches reshaped distributions
+    whose means cancel (e.g. a bimodal split). Empty histograms on
+    either side score 0 — no evidence, no shift.
+    """
+    a = np.asarray(counts_a, np.float64)
+    b = np.asarray(counts_b, np.float64)
+    ta = a.sum(axis=-1, keepdims=True)
+    tb = b.sum(axis=-1, keepdims=True)
+    occupied = (ta[..., 0] > 0) & (tb[..., 0] > 0)
+    cdf_a = np.cumsum(a, axis=-1) / np.maximum(ta, 1.0)
+    cdf_b = np.cumsum(b, axis=-1) / np.maximum(tb, 1.0)
+    d = cdf_a - cdf_b
+    signed = np.where(occupied, d.sum(axis=-1) / SUBDIV, 0.0)
+    spread = np.where(occupied, np.abs(d).sum(axis=-1) / SUBDIV, 0.0)
+    return signed, spread
 
 
 def top_variability_bins(stats: BinStats, quantile: float = 0.95,

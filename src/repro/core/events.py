@@ -50,6 +50,7 @@ COPY_KIND_NAMES = {
 KERNEL_TABLE = "CUPTI_ACTIVITY_KIND_KERNEL"
 MEMCPY_TABLE = "CUPTI_ACTIVITY_KIND_MEMCPY"
 GPU_TABLE = "TARGET_INFO_GPU"
+STRING_TABLE = "StringIds"   # Nsight's id -> kernel-name string table
 
 _KERNEL_COLUMNS = [
     ("start", "INTEGER"),          # ns
@@ -161,12 +162,18 @@ class GpuInfo:
 
 @dataclasses.dataclass
 class RankTrace:
-    """One profiling rank's trace: kernels + memcpys + GPU inventory."""
+    """One profiling rank's trace: kernels + memcpys + GPU inventory.
+
+    ``names`` maps kernel ``name_id`` -> demangle-worthy kernel name
+    string (the ``StringIds`` table ``shortName`` references in Nsight
+    exports). Empty for traces read from DBs that predate the table.
+    """
 
     rank: int
     kernels: EventTable
     memcpys: EventTable
     gpus: List[GpuInfo]
+    names: Dict[int, str] = dataclasses.field(default_factory=dict)
 
     def time_range(self) -> Tuple[int, int]:
         """Dataset boundaries, defined by *kernel* timestamps (per paper)."""
@@ -186,6 +193,8 @@ def _create_schema(conn: sqlite3.Connection) -> None:
     conn.execute(f"CREATE TABLE IF NOT EXISTS {KERNEL_TABLE} ({k_cols})")
     conn.execute(f"CREATE TABLE IF NOT EXISTS {MEMCPY_TABLE} ({m_cols})")
     conn.execute(f"CREATE TABLE IF NOT EXISTS {GPU_TABLE} ({g_cols})")
+    conn.execute(f"CREATE TABLE IF NOT EXISTS {STRING_TABLE} "
+                 "(id INTEGER PRIMARY KEY, value TEXT)")
     conn.execute(
         f"CREATE INDEX IF NOT EXISTS idx_kernel_start ON {KERNEL_TABLE}(start)")
     conn.execute(
@@ -213,6 +222,16 @@ def _insert_events(conn: sqlite3.Connection, trace: RankTrace) -> None:
         f"INSERT INTO {MEMCPY_TABLE} VALUES (?,?,?,?,?,?,?)", rows)
 
 
+def _insert_names(conn: sqlite3.Connection, names: Dict[int, str]) -> None:
+    if not names:
+        return
+    conn.execute(f"CREATE TABLE IF NOT EXISTS {STRING_TABLE} "
+                 "(id INTEGER PRIMARY KEY, value TEXT)")
+    conn.executemany(
+        f"INSERT OR REPLACE INTO {STRING_TABLE} VALUES (?,?)",
+        [(int(i), str(n)) for i, n in sorted(names.items())])
+
+
 def write_rank_db(path: str, trace: RankTrace) -> None:
     """Write one profiling rank's trace as an Nsight-shaped SQLite DB."""
     if os.path.exists(path):
@@ -225,6 +244,7 @@ def write_rank_db(path: str, trace: RankTrace) -> None:
             f"INSERT INTO {GPU_TABLE} VALUES (?,?,?,?,?,?,?)",
             [(g.id, g.name, g.bandwidth, g.memory, g.sm_count,
               g.cc_major, g.cc_minor) for g in trace.gpus])
+        _insert_names(conn, trace.names)
         conn.commit()
     finally:
         conn.close()
@@ -234,10 +254,12 @@ def append_rank_db(path: str, trace: RankTrace) -> None:
     """Append ``trace``'s kernel/memcpy rows to an EXISTING rank DB —
     the profiler growth model (the GPU inventory is static and left
     alone). Appended rows get fresh, larger rowids, which is what the
-    append-mode ingest watermark keys on."""
+    append-mode ingest watermark keys on. The string table is upserted:
+    a growing run can introduce new kernel name ids."""
     conn = sqlite3.connect(path)
     try:
         _insert_events(conn, trace)
+        _insert_names(conn, trace.names)
         conn.commit()
     finally:
         conn.close()
@@ -304,6 +326,11 @@ def read_rank_db(path: str, rank: int,
             f"SELECT id, name, globalMemoryBandwidth, globalMemorySize,"
             f" smCount, computeCapabilityMajor, computeCapabilityMinor"
             f" FROM {GPU_TABLE}")
+        try:
+            s_rows = _read_query(conn,
+                                 f"SELECT id, value FROM {STRING_TABLE}")
+        except sqlite3.OperationalError:
+            s_rows = []          # pre-string-table DB: ids stay numeric
     finally:
         conn.close()
 
@@ -336,7 +363,23 @@ def read_rank_db(path: str, rank: int,
                     memory=int(r[3]), sm_count=int(r[4]),
                     cc_major=int(r[5]), cc_minor=int(r[6])) for r in g_rows]
     return RankTrace(rank=rank, kernels=_kernels(k_rows),
-                     memcpys=_memcpys(m_rows), gpus=gpus)
+                     memcpys=_memcpys(m_rows), gpus=gpus,
+                     names={int(r[0]): str(r[1]) for r in s_rows})
+
+
+def read_kernel_names(path: str) -> Dict[int, str]:
+    """The ``StringIds`` kernel-name table of one rank DB, ``{} `` when
+    the DB predates the table (older stores keep working, with numeric
+    fallback names downstream)."""
+    conn = sqlite3.connect(path)
+    try:
+        try:
+            rows = _read_query(conn, f"SELECT id, value FROM {STRING_TABLE}")
+        except sqlite3.OperationalError:
+            return {}
+    finally:
+        conn.close()
+    return {int(r[0]): str(r[1]) for r in rows}
 
 
 def table_rowid_hi(path: str) -> Tuple[int, int]:
@@ -371,6 +414,50 @@ def kernel_time_range_db(path: str) -> Tuple[int, int]:
 # Synthetic workload generator (ground-truth anomalies injected)
 # ---------------------------------------------------------------------------
 
+_KERNEL_FAMILIES = [
+    "gemm", "flash_attention_fwd", "flash_attention_bwd", "layer_norm",
+    "softmax", "reduce_sum", "elementwise_add", "dropout",
+    "embedding_lookup", "conv2d_winograd", "transpose_tiled",
+    "all_reduce_ring", "rms_norm", "rotary_embedding", "cross_entropy",
+    "adamw_step", "scatter_add", "gather_nd", "topk_select",
+    "histogram_bincount", "im2col",
+]
+
+
+def synthetic_kernel_names(n_names: int = 64,
+                           variant: int = 0) -> Dict[int, str]:
+    """Deterministic, realistic kernel names for synthetic ``name_id``s.
+
+    Spelling styles cycle across ids: Itanium-mangled template
+    instantiations, Triton-style names with arg-specialization + hash
+    suffixes, plain SASS-style names, and demangled C++ templates.
+    ``variant`` perturbs only the *specialization* parts (template
+    arguments, Triton suffixes) while keeping the base kernel identity —
+    two stores generated with different variants exercise the fuzzy
+    cross-store matcher end to end (the plain style is variant-invariant
+    and covers the exact-match fast path).
+    """
+    names: Dict[int, str] = {}
+    for i in range(n_names):
+        fam = _KERNEL_FAMILIES[i % len(_KERNEL_FAMILIES)]
+        style = (i // len(_KERNEL_FAMILIES)) % 4
+        if style == 0:
+            width = 128 << (variant % 3)
+            base = f"{fam}_kernel"
+            names[i] = f"_Z{len(base)}{base}ILi{width}ELi4EfEvPfPKfS1_i"
+        elif style == 1:
+            h = (0x9E3779B9 * (i + 1) + 0x85EBCA6B * (variant + 1))
+            names[i] = (f"triton_{fam}_kernel_0d1d2d3de4de"
+                        f"_{h & 0xFFFFFFFF:08x}")
+        elif style == 2:
+            names[i] = f"sm80_xmma_{fam}_f16f16_f32_128x128_nn"
+        else:
+            width = 256 << (variant % 2)
+            names[i] = (f"void {fam}_kernel<float, {width}>"
+                        "(float*, float const*, int)")
+    return names
+
+
 @dataclasses.dataclass
 class SyntheticSpec:
     """Knobs for a Table-1-shaped synthetic dataset."""
@@ -388,6 +475,10 @@ class SyntheticSpec:
     anomaly_stall_scale: float = 12.0
     pingpong_fraction: float = 0.75
     seed: int = 0
+    # kernel-name spelling variant (see :func:`synthetic_kernel_names`):
+    # same base kernels, different mangling/specialization suffixes —
+    # what two builds of the same application look like to a profiler
+    name_variant: int = 0
 
 
 @dataclasses.dataclass
@@ -409,6 +500,7 @@ def generate_synthetic(spec: SyntheticSpec) -> SyntheticDataset:
     windows = np.stack([centers.astype(np.int64) - half,
                         centers.astype(np.int64) + half], axis=1) + t0
     windows = windows[np.argsort(windows[:, 0])]
+    names = synthetic_kernel_names(64, variant=spec.name_variant)
 
     traces = []
     for rank in range(spec.n_ranks):
@@ -475,8 +567,35 @@ def generate_synthetic(spec: SyntheticSpec) -> SyntheticDataset:
                         memory=40 * 2**30, sm_count=108)
                 for g in range(spec.n_gpus)]
         traces.append(RankTrace(rank=rank, kernels=kernels,
-                                memcpys=memcpys, gpus=gpus))
+                                memcpys=memcpys, gpus=gpus, names=names))
     return SyntheticDataset(traces=traces, anomaly_windows=windows, spec=spec)
+
+
+def inject_slowdown(ds: SyntheticDataset, factor: float,
+                    name_ids: Sequence[int]) -> SyntheticDataset:
+    """Ground-truth regression injector for the diff engine: scale the
+    duration and memory stall of every kernel whose ``name_id`` is in
+    ``name_ids`` by ``factor`` (other kernels untouched). A dataset pair
+    (clean, injected) is what the ``trace-regression`` CI workflow and
+    the diff tests/benchmarks compare."""
+    ids = np.asarray(sorted(set(int(i) for i in name_ids)), np.int32)
+    traces = []
+    for tr in ds.traces:
+        k = tr.kernels
+        hit = np.isin(k.name_id, ids)
+        dur = (k.end - k.start).astype(np.float64)
+        new_end = np.where(hit, k.start + (dur * factor).astype(np.int64),
+                           k.end)
+        new_stall = np.where(hit, k.memory_stall * factor, k.memory_stall)
+        traces.append(RankTrace(
+            rank=tr.rank,
+            kernels=dataclasses.replace(
+                k, end=new_end.astype(np.int64),
+                memory_stall=new_stall.astype(np.float32)),
+            memcpys=tr.memcpys, gpus=tr.gpus, names=tr.names))
+    return SyntheticDataset(traces=traces,
+                            anomaly_windows=ds.anomaly_windows,
+                            spec=ds.spec)
 
 
 def truncate_trace(trace: RankTrace, t_cutoff: int) -> RankTrace:
@@ -491,7 +610,7 @@ def truncate_trace(trace: RankTrace, t_cutoff: int) -> RankTrace:
         rank=trace.rank,
         kernels=trace.kernels.select(trace.kernels.end <= t_cutoff),
         memcpys=trace.memcpys.select(trace.memcpys.end <= t_cutoff),
-        gpus=trace.gpus)
+        gpus=trace.gpus, names=trace.names)
 
 
 def trace_remainder(trace: RankTrace, t_cutoff: int) -> RankTrace:
@@ -502,7 +621,7 @@ def trace_remainder(trace: RankTrace, t_cutoff: int) -> RankTrace:
         rank=trace.rank,
         kernels=trace.kernels.select(trace.kernels.end > t_cutoff),
         memcpys=trace.memcpys.select(trace.memcpys.end > t_cutoff),
-        gpus=trace.gpus)
+        gpus=trace.gpus, names=trace.names)
 
 
 def write_synthetic_dbs(ds: SyntheticDataset, out_dir: str) -> List[str]:

@@ -30,7 +30,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .events import (EventTable, RankTrace, read_rank_db,
+from .events import (EventTable, RankTrace, read_kernel_names, read_rank_db,
                      kernel_time_range_db, table_rowid_hi)
 from .sharding import (ShardPlan, assignment, contiguous_rank_range,
                        owner_of_shards)
@@ -84,6 +84,17 @@ class AppendReport:
     t_start: int
     t_end: int                    # new plan end
     seconds: float
+
+
+def union_kernel_names(db_paths: Sequence[str]) -> Dict[str, str]:
+    """Union of every DB's kernel-name string table, JSON-manifest shaped
+    (``{str(name_id): name}``). Conflicting spellings for one id resolve
+    last-DB-wins — profiling ranks of one run share a build, so real
+    conflicts do not arise."""
+    names: Dict[str, str] = {}
+    for p in db_paths:
+        names.update({str(i): n for i, n in read_kernel_names(p).items()})
+    return names
 
 
 def global_time_range(db_paths: Sequence[str]) -> Tuple[int, int]:
@@ -267,6 +278,7 @@ def run_generation(db_paths: Sequence[str], out_dir: str,
         extra={"interval_ns": cfg.interval_ns,
                "join_window_ns": cfg.join_window_ns,
                "join_cap": cfg.join_cap,
+               "kernel_names": union_kernel_names(db_paths),
                "db_paths": [os.path.abspath(p) for p in db_paths],
                "db_rowid_hi": {os.path.abspath(p): list(table_rowid_hi(p))
                                for p in db_paths}}))
@@ -450,6 +462,9 @@ def run_append(db_paths: Sequence[str], out_dir: str,
     extra = dict(man.extra)
     extra["db_paths"] = all_dbs
     extra["db_rowid_hi"] = rowid_hi
+    # refresh the name table: appended rows can introduce new name ids
+    extra["kernel_names"] = {**dict(extra.get("kernel_names", {})),
+                             **union_kernel_names(db_paths)}
     store.write_manifest(StoreManifest(
         t_start=plan.t_start, t_end=plan.t_end, n_shards=plan.n_shards,
         n_ranks=man.n_ranks, partitioning=man.partitioning,

@@ -66,14 +66,15 @@ import numpy as np
 
 from .aggregation import (AggregationResult, compute_lane_partials,
                           DEFAULT_METRIC, DEFAULT_REDUCERS)
-from .query import LanePlan, Query, QueryPlan, QueryResult
+from .query import (LanePlan, Query, QueryPlan, QueryResult,
+                    diff_cache_key, diff_query)
 from .reducers import normalize_reducers
 from .anomaly import (IQRReport, anomalous_bins, is_quantile_score,
                       report_for_query, top_variability_bins)
 from .events import table_rowid_hi
 from .generation import (AppendReport, GenerationConfig, GenerationReport,
                          generate_rank, global_time_range, run_append,
-                         run_generation)
+                         run_generation, union_kernel_names)
 from .sharding import ShardPlan, assignment, owner_of_shards
 from .tracestore import StoreManifest, TraceStore
 
@@ -213,6 +214,7 @@ class VariabilityPipeline:
             extra={"interval_ns": gen.interval_ns,
                    "join_window_ns": gen.join_window_ns,
                    "join_cap": gen.join_cap,
+                   "kernel_names": union_kernel_names(db_paths),
                    "db_paths": [os.path.abspath(p) for p in db_paths],
                    "db_rowid_hi": {
                        os.path.abspath(p): list(table_rowid_hi(p))
@@ -260,6 +262,46 @@ class VariabilityPipeline:
                                             k=self.cfg.iqr_k,
                                             top_k=self.cfg.top_k)
         return out
+
+    def diff(self, store_a: str, store_b: str,
+             query: Optional[Query] = None, thresholds=None):
+        """Two-store trace diff with a CI-consumable verdict: "what got
+        slower between run A and run B, where, and is it bad enough to
+        fail the job?" (see :mod:`repro.core.diff`).
+
+        Each store is answered by ONE fused kernel-grouped query
+        (:func:`~repro.core.query.diff_query` derived from ``query`` /
+        the config) on this pipeline's backend — a warm store serves it
+        from the summary cache with zero shard reads, a cold one costs
+        exactly one dirty-shard scan; the per-store read counts land in
+        the report (``shard_reads_a/b``). Alignment, shift scoring and
+        the verdict are pure post-processing of the two cached results.
+        """
+        from .diff import diff_results
+        t0 = time.perf_counter()
+        base = query if query is not None else self.cfg.to_query()
+        dq = diff_query(base)
+        sides = []
+        for sd in (store_a, store_b):
+            qplan = QueryPlan.compile(sd, [dq], backend=self.cfg.backend,
+                                      n_ranks=self.cfg.n_ranks)
+            res = qplan.execute(
+                use_cache=self.cfg.use_summary_cache,
+                compute_fn=(self._pool_compute
+                            if self.cfg.backend == "process" else None))[0]
+            names = {int(i): str(n) for i, n in
+                     qplan.store.read_manifest().extra.get(
+                         "kernel_names", {}).items()}
+            sides.append((res, names,
+                          int(qplan.store.io_counts["shard_reads"])))
+        (res_a, names_a, reads_a), (res_b, names_b, reads_b) = sides
+        return diff_results(
+            res_a.result, res_b.result, metric=base.metrics[0],
+            names_a=names_a, names_b=names_b, thresholds=thresholds,
+            store_a=str(store_a), store_b=str(store_b),
+            key=diff_cache_key(dq, dq),
+            shard_reads_a=reads_a, shard_reads_b=reads_b,
+            seconds=time.perf_counter() - t0)
 
     def _run_queries(self, store_dir: str,
                      queries: Sequence[Query]) -> List[QueryResult]:

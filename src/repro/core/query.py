@@ -62,6 +62,7 @@ from .sharding import ShardPlan
 __all__ = [
     "SUMMARY_VERSION", "DEFAULT_METRIC", "Query", "QueryPlan", "LanePlan",
     "QueryResult", "is_quantile_score",
+    "diff_query", "diff_cache_key", "diff_spec", "diff_from_spec",
 ]
 
 # Bump when the summary/partial payload layout OR the cache-key scheme
@@ -274,6 +275,42 @@ class Query:
         return keep
 
 
+# -- diff specs (two-store comparison; see repro.core.diff) -----------------
+
+def diff_query(base: Query) -> Query:
+    """The per-store query a trace diff runs: ``base``'s predicates,
+    metrics and binning, re-grouped by kernel name with the quantile
+    sketch pulled into the suite (the shift scores are sketch-vs-sketch,
+    the mean/p99 deltas come from the same pass). Canonical like any
+    Query — when the store already holds this summary, the diff side
+    reads zero shards."""
+    reducers = tuple(sorted(set(base.reducers) | {"moments", "quantile"}))
+    return dataclasses.replace(base, group_by="k_name", reducers=reducers)
+
+
+def diff_spec(query_a: Query, query_b: Query) -> Dict[str, Any]:
+    """Round-trippable plain-dict form of a diff request — the pair of
+    per-store specs (CLI/CI surface; see :func:`diff_from_spec`)."""
+    return {"a": query_a.to_spec(), "b": query_b.to_spec()}
+
+
+def diff_from_spec(spec: Dict[str, Any]) -> Tuple[Query, Query]:
+    unknown = set(spec) - {"a", "b"}
+    if unknown:
+        raise ValueError(f"unknown diff-spec fields {sorted(unknown)}")
+    return Query.from_spec(spec["a"]), Query.from_spec(spec["b"])
+
+
+def diff_cache_key(query_a: Query, query_b: Query) -> str:
+    """16-hex identity of one diff: the PAIR of canonical per-store query
+    forms (ordered — diff(A, B) and diff(B, A) are different questions),
+    hashed the same way single-query cache keys are."""
+    blob = json.dumps({"diff_version": 1,
+                       "a": query_a.canonical(),
+                       "b": query_b.canonical()}, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
 @dataclasses.dataclass
 class LanePlan:
     """One query's compiled slot in a fused batch."""
@@ -350,7 +387,17 @@ class QueryPlan:
             plan = (file_plan if q.interval_ns is None
                     else ShardPlan.from_interval(man.t_start, man.t_end,
                                                  int(q.interval_ns)))
-            plan_key = (plan.t_start, plan.t_end, plan.n_shards)
+            if plan != file_plan:
+                plan_key = (plan.t_start, plan.t_end, plan.n_shards)
+            else:
+                # interval_ns spelling that re-derives the store's own
+                # layout (e.g. the generation interval): mint the
+                # manifest plan itself so both spellings share one
+                # summary/partial entry, structurally — not just while
+                # the two derivations happen to agree numerically
+                plan = file_plan
+                plan_key = (file_plan.t_start, file_plan.t_end,
+                            file_plan.n_shards)
             pruned = q.pruned_file_indices(file_plan)
             lanes.append(LanePlan(
                 query=q, plan=plan, metrics=q.canonical_metrics,

@@ -1,0 +1,256 @@
+"""Trace diff & regression engine tests: fuzzy matcher properties
+(variant spellings pair with their base kernel, unrelated names never
+cross-match, symmetric, stable under enumeration order), sketch-shift
+math, and the end-to-end verdict — an injected 1.5x slowdown on one
+kernel family is ranked top of the DiffReport and flips the verdict,
+with io_counts proving one fused scan per cold store and zero reads
+when both summaries are warm."""
+
+import random
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import (DiffThresholds, PipelineConfig, SyntheticSpec,
+                        TraceStore, VariabilityPipeline, diff_cache_key,
+                        diff_from_spec, diff_query, diff_spec,
+                        generate_synthetic, inject_slowdown,
+                        kernel_name_tokens, match_kernel_names,
+                        normalize_kernel_name, run_generation,
+                        sketch_shift, synthetic_kernel_names,
+                        write_synthetic_dbs, Query)
+from repro.core.reducers import SUBDIV, N_BUCKETS
+
+# one kernel family (ids congruent mod 21) across three spelling styles:
+# Itanium-mangled, Triton-suffixed, plain SASS-style
+SLOW_IDS = (3, 24, 45)
+SLOW_FAMILY = "layer_norm"
+
+
+@pytest.fixture(scope="module")
+def stores(tmp_path_factory):
+    """Three stores over the SAME workload (one seed): baseline
+    (name variant 0), a clean rebuild (variant 1 — respecialized
+    spellings, identical data), and the rebuild with a 1.5x slowdown
+    injected into one kernel family."""
+    root = tmp_path_factory.mktemp("diff_base")
+    common = dict(n_ranks=2, kernels_per_rank=4000, memcpys_per_rank=400,
+                  duration_s=20.0, n_anomaly_windows=2, seed=7)
+    ds_a = generate_synthetic(SyntheticSpec(**common, name_variant=0))
+    ds_b = generate_synthetic(SyntheticSpec(**common, name_variant=1))
+    ds_c = inject_slowdown(ds_b, 1.5, SLOW_IDS)
+    out = {}
+    for tag, ds in (("a", ds_a), ("b", ds_b), ("c", ds_c)):
+        dbs = write_synthetic_dbs(ds, str(root / f"dbs_{tag}"))
+        store = str(root / f"store_{tag}")
+        run_generation(dbs, store, n_ranks=2)
+        out[tag] = store
+    return out
+
+
+@pytest.fixture
+def fresh_stores(stores, tmp_path):
+    """Cache-cold copies for io-provenance tests."""
+    out = {}
+    for tag, src in stores.items():
+        dst = str(tmp_path / tag)
+        shutil.copytree(src, dst)
+        ts = TraceStore(dst)
+        ts.clear_summaries()
+        ts.clear_partials()
+        out[tag] = dst
+    return out
+
+
+def _pipe(backend="serial"):
+    return VariabilityPipeline(PipelineConfig(n_ranks=2, backend=backend))
+
+
+# --- fuzzy matcher properties (satellite: property tests) -------------------
+
+def test_normalize_strips_specialization_noise():
+    assert normalize_kernel_name(
+        "_Z11gemm_kernelILi128ELi4EfEvPfPKfS1_i") == "gemm_kernel"
+    assert normalize_kernel_name(
+        "_ZN7cutlass6KernelI4GemmEEvNT_6ParamsE") == "cutlass::kernel"
+    assert normalize_kernel_name(
+        "triton_softmax_kernel_0d1d2d3de4de_9f86d081") == \
+        "triton_softmax_kernel"
+    assert normalize_kernel_name(
+        "void rms_norm_kernel<float, 256>(float*, float const*, int)") == \
+        "rms_norm_kernel"
+    # a plain name is already canonical (modulo case)
+    assert normalize_kernel_name("sm80_xmma_gemm_f16f16_f32_128x128_nn") \
+        == "sm80_xmma_gemm_f16f16_f32_128x128_nn"
+
+
+def test_variant_spellings_match_their_base_kernel():
+    """Every id's variant-0 spelling pairs with the SAME id's variant-1
+    spelling — mangled/Triton/template respecializations all resolve."""
+    v0 = synthetic_kernel_names(64, variant=0)
+    v1 = synthetic_kernel_names(64, variant=1)
+    res = match_kernel_names(list(v0.values()), list(v1.values()))
+    assert not res.unmatched_a and not res.unmatched_b
+    pair = {m.name_a: m.name_b for m in res.matches}
+    assert pair == {v0[i]: v1[i] for i in range(64)}
+    vias = {m.via for m in res.matches}
+    assert "exact" in vias          # plain style is variant-invariant
+    assert "normalized" in vias     # respecialized styles
+
+
+def test_unrelated_names_never_cross_match():
+    a = ["_Z11gemm_kernelILi128EEvPf",
+         "triton_softmax_kernel_0d1d2d3de4de_11aabb22",
+         "sm80_xmma_reduce_sum_f16f16_f32_128x128_nn"]
+    b = ["_Z16layer_norm_kernelILi256EEvPf",
+         "triton_rope_embedding_kernel_0d1d2d3de4de_33ccdd44",
+         "void adamw_step_kernel<float, 512>(float*)"]
+    res = match_kernel_names(a, b)
+    assert res.matches == []
+    assert res.unmatched_a == sorted(a)
+    assert res.unmatched_b == sorted(b)
+
+
+def test_matching_is_symmetric_and_order_stable():
+    v0 = list(synthetic_kernel_names(64, variant=0).values())
+    v1 = list(synthetic_kernel_names(64, variant=1).values())
+    fwd = match_kernel_names(v0, v1)
+    rev = match_kernel_names(v1, v0)
+    assert {(m.name_a, m.name_b) for m in fwd.matches} == \
+        {(m.name_b, m.name_a) for m in rev.matches}
+    # enumeration order of the inputs must not matter
+    rng = random.Random(13)
+    for _ in range(3):
+        sa, sb = list(v0), list(v1)
+        rng.shuffle(sa)
+        rng.shuffle(sb)
+        shuffled = match_kernel_names(sa, sb)
+        assert shuffled == fwd
+
+
+def test_token_fallback_requires_real_overlap():
+    # same informative tokens, different decoration -> matches
+    res = match_kernel_names(["fused_attention_rope_fwd_v2"],
+                             ["fused_rope_attention_fwd"])
+    assert len(res.matches) == 1 and res.matches[0].via == "tokens"
+    # one shared generic token is not enough
+    res = match_kernel_names(["flash_attention_fwd_kernel"],
+                             ["flash_decode_split_kernel"])
+    assert res.matches == []
+    assert kernel_name_tokens("void kernel<int>(int*)") == frozenset()
+
+
+# --- sketch shift math ------------------------------------------------------
+
+def test_sketch_shift_recovers_bucket_translation():
+    rng = np.random.default_rng(0)
+    counts = np.zeros(N_BUCKETS)
+    idx = rng.integers(40, 200, size=500)
+    np.add.at(counts, idx, 1.0)
+    for k in (4, 12):               # k buckets = k / SUBDIV octaves
+        shifted = np.zeros(N_BUCKETS)
+        np.add.at(shifted, idx + k, 1.0)
+        signed, spread = sketch_shift(counts, shifted)
+        assert signed == pytest.approx(k / SUBDIV, abs=1e-9)
+        assert spread == pytest.approx(k / SUBDIV, abs=1e-9)
+        back, _ = sketch_shift(shifted, counts)
+        assert back == pytest.approx(-k / SUBDIV, abs=1e-9)
+    # no evidence -> no shift
+    assert sketch_shift(counts, np.zeros(N_BUCKETS)) == (0.0, 0.0)
+
+
+def test_diff_spec_roundtrip_and_key():
+    qa = Query(metrics=("k_stall",), ranks=(0, 1))
+    qb = Query(metrics=("k_stall",))
+    assert diff_from_spec(diff_spec(qa, qb)) == (qa, qb)
+    with pytest.raises(ValueError):
+        diff_from_spec({"a": qa.to_spec(), "bogus": 1})
+    # ordered pair: diff(A,B) and diff(B,A) are different questions
+    assert diff_cache_key(qa, qb) != diff_cache_key(qb, qa)
+    # derived diff queries of equivalent bases share an identity
+    assert diff_cache_key(diff_query(qa), diff_query(qb)) == \
+        diff_cache_key(diff_query(dataclasses_replace_ranks(qa)),
+                       diff_query(qb))
+
+
+def dataclasses_replace_ranks(q):
+    import dataclasses
+    return dataclasses.replace(q, ranks=(1, 0))
+
+
+# --- end-to-end verdicts ----------------------------------------------------
+
+def test_self_diff_and_clean_rebuild_pass(stores):
+    pipe = _pipe()
+    rep = pipe.diff(stores["a"], stores["a"])
+    assert rep.verdict == "pass" and not rep.regressions()
+    # same workload, respecialized kernel spellings: all 64 groups align
+    # across variants and nothing shifts (the data is identical)
+    rep = pipe.diff(stores["a"], stores["b"])
+    assert rep.verdict == "pass"
+    assert len(rep.groups) == 64
+    assert not rep.unmatched_a and not rep.unmatched_b
+    assert all(abs(g.shift_octaves) < 1e-12 for g in rep.groups)
+    assert all(g.mean_ratio == pytest.approx(1.0) for g in rep.groups)
+
+
+def test_injected_slowdown_ranked_top_and_flips_verdict(stores):
+    rep = _pipe().diff(stores["a"], stores["c"])
+    assert rep.verdict == "regressed"
+    top = rep.groups[:len(SLOW_IDS)]
+    assert all(SLOW_FAMILY in normalize_kernel_name(g.name_a)
+               for g in top)
+    assert {g.name_a for g in rep.regressions()} == {g.name_a for g in top}
+    for g in top:
+        # geometric ratio recovers the injected 1.5x within sketch
+        # quantization (1/8 octave buckets ~= 9% relative)
+        assert g.geo_ratio == pytest.approx(1.5, rel=0.12)
+        assert g.mean_ratio == pytest.approx(1.5, rel=0.05)
+        assert g.top_bins and g.top_windows.shape == (len(g.top_bins), 2)
+    # thresholds are configurable: an absurdly high bar passes the diff
+    lax = _pipe().diff(stores["a"], stores["c"],
+                       thresholds=DiffThresholds(mean_ratio=10.0,
+                                                 p99_ratio=10.0,
+                                                 shift_octaves=5.0))
+    assert lax.verdict == "pass"
+
+
+def test_diff_is_fused_and_warm_diff_reads_zero_shards(fresh_stores):
+    pipe = _pipe()
+    n_shards = TraceStore(fresh_stores["a"]).read_manifest().n_shards
+    cold = pipe.diff(fresh_stores["a"], fresh_stores["c"])
+    # exactly ONE scan of each store's shard files, no re-reads
+    assert cold.shard_reads_a == n_shards
+    assert cold.shard_reads_b == n_shards
+    warm = pipe.diff(fresh_stores["a"], fresh_stores["c"])
+    assert warm.shard_reads_a == 0 and warm.shard_reads_b == 0
+    # deterministic: the machine verdict is identical cold vs warm
+    ra, rw = cold.to_record(), warm.to_record()
+    for r in (ra, rw):
+        r.pop("seconds")
+        r.pop("shard_reads_a")
+        r.pop("shard_reads_b")
+    assert ra == rw
+
+
+def test_process_backend_diff_matches_serial(stores):
+    serial = _pipe("serial").diff(stores["a"], stores["c"])
+    proc = _pipe("process").diff(stores["a"], stores["c"])
+    assert proc.verdict == serial.verdict
+    assert [g.name_a for g in proc.groups] == \
+        [g.name_a for g in serial.groups]
+    np.testing.assert_array_equal(
+        [g.shift_octaves for g in proc.groups],
+        [g.shift_octaves for g in serial.groups])
+
+
+def test_record_shape_is_check_bench_consumable(stores):
+    rec = _pipe().diff(stores["a"], stores["c"]).to_record(smoke=True)
+    assert rec["kind"] == "diff" and rec["smoke"] is True
+    assert rec["verdict"] in ("pass", "regressed")
+    assert rec["matched_groups"] == 64
+    assert len(rec["top"]) == 5
+    assert rec["top"][0]["regressed"]
+    shifts = [t["shift_octaves"] for t in rec["top"]]
+    assert shifts == sorted(shifts, reverse=True)

@@ -160,6 +160,34 @@ def test_reordered_requery_is_pure_cache_hit(store):
     _assert_results_equal(r1, r2, perm=[1, 0])
 
 
+def test_interval_spelling_of_store_layout_is_pure_cache_hit(store):
+    """``interval_ns=<generation interval>`` re-derives the manifest plan
+    — the planner must mint the manifest-plan key so both spellings
+    share ONE summary entry (structurally, not by numeric coincidence)."""
+    gen_interval = int(store.read_manifest().extra["interval_ns"])
+    r1 = run_aggregation(store, metrics=["k_stall"], group_by="m_kind")
+    assert not r1.from_cache
+    assert len(store.summary_keys()) == 1
+    fresh = TraceStore(store.root)
+    r2 = run_aggregation(fresh, metrics=["k_stall"], group_by="m_kind",
+                         interval_ns=gen_interval)
+    assert r2.from_cache
+    assert fresh.io_counts["shard_reads"] == 0
+    assert fresh.io_counts["partial_reads"] == 0
+    assert len(fresh.summary_keys()) == 1       # no second entry minted
+    _assert_results_equal(r1, r2)
+    # the coinciding spelling resolves to the manifest plan OBJECT
+    qplan = QueryPlan.compile(TraceStore(store.root),
+                              [Query(metrics=("k_stall",),
+                                     interval_ns=gen_interval)])
+    assert qplan.lanes[0].plan is qplan.file_plan
+    # a genuinely different granularity still gets its own entry
+    r3 = run_aggregation(TraceStore(store.root), metrics=["k_stall"],
+                         group_by="m_kind", interval_ns=2 * gen_interval)
+    assert not r3.from_cache
+    assert len(TraceStore(store.root).summary_keys()) == 2
+
+
 def test_old_style_and_query_style_share_cache_and_results(store):
     old = run_aggregation(store, metrics=["k_stall", "m_bytes"],
                           group_by="m_kind")
