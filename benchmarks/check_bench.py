@@ -15,9 +15,17 @@ Floors (the repo's banked acceptance bars):
   incremental   (backend jax) append+delta vs cold jax re-scan
                                         ``append_plus_delta_speedup`` >= 5x
   query_fusion  8 mixed filtered queries fused vs sequential
-                                        ``fusion_speedup``          >= 3x
+                                        ``fusion_speedup``          >= 4x
+                (raised from 3x when consolidated partial packs landed;
+                the record's own ``partial_io_reduction_ok`` flag also
+                binds: >= 1.5x fewer physical partial-IO ops than
+                logical entries on the warm fused re-analysis)
   diff          warm fused trace diff vs two cold sequential analyses
                                         ``diff_speedup``            >= 5x
+  serve         sustained mixed-query load through the HTTP front door
+                                        ``sustained_qps``      >= 50 qps
+                (plus the record's own ``p99_ok`` latency ceiling and
+                ``batched_fused_ok`` concurrency-fusion assertions)
 
 Records produced with ``--smoke`` carry ``"smoke": true`` and are held
 only to STRUCTURAL checks (schema, finite positive timings, the bench's
@@ -57,9 +65,12 @@ SCHEMAS = {
     "incremental": ("incremental_speedup",
                     ("cold_rescan_us", "delta_us", "append_us"), 5.0),
     "query_fusion": ("fusion_speedup",
-                     ("fused_us", "sequential_us"), 3.0),
+                     ("fused_us", "sequential_us", "warm_fused_us"), 4.0),
     "diff": ("diff_speedup",
              ("fused_warm_us", "naive_sequential_us"), 5.0),
+    # serve's gated number is a rate, not a ratio — the same "must not
+    # drop below the floor" check applies (higher is better either way)
+    "serve": ("sustained_qps", ("p50_ms", "p99_ms", "wall_s"), 50.0),
 }
 
 
@@ -116,12 +127,13 @@ def summary_table(checked: List[Tuple[str, Optional[dict], List[str]]]) -> str:
         if rec.get("backend") == "jax":
             bench += "/jax"
         speedup_field, floor = _speedup_field(rec)
+        unit = " qps" if rec["bench"] == "serve" else "x"
         v = rec.get(speedup_field)
-        speedup = (f"{float(v):.2f}x"
+        speedup = (f"{float(v):.2f}{unit}"
                    if isinstance(v, (int, float)) and math.isfinite(v)
                    else f"{v!r}")
         mode = "smoke" if rec.get("smoke") else "full"
-        floor_cell = "n/a" if rec.get("smoke") else f"{floor:.0f}x"
+        floor_cell = "n/a" if rec.get("smoke") else f"{floor:.0f}{unit}"
         status = "OK" if not found else "FAIL"
         lines.append(f"| `{path}` | {bench} | {mode} | {speedup} "
                      f"| {floor_cell} | {status} |")

@@ -1,0 +1,195 @@
+"""Query-serving front door benchmark (BENCH_serve.json).
+
+Two phases against one in-process :class:`~repro.serve.query_service.
+QueryService` (real HTTP over loopback — the numbers include JSON
+encode/decode and the admission-batching tick, not just engine time):
+
+  1. **Concurrent cold burst** — 32 clients POST a mixed query set at
+     once against a freshly generated store. The admission batcher must
+     fuse them: the record's ``batched_fused_ok`` asserts at least one
+     tick carried more than one lane (this is the CI smoke leg's
+     provenance assertion — concurrency actually batched, not serialized).
+  2. **Sustained load** — N client threads issue R sequential requests
+     each over the now-warm store (summary hits through the shared
+     cache). The record reports ``sustained_qps`` (the gated number),
+     p50/p99 request latency, and the mean fused width the ticks saw.
+
+Usage:
+
+  PYTHONPATH=src python -m benchmarks.serve_bench --smoke \\
+      --out BENCH_serve.json
+  PYTHONPATH=src python -m benchmarks.serve_bench --scale medium \\
+      --out BENCH_serve.json
+
+``--smoke`` shrinks the load (8 threads x 4 requests) and exempts the
+record from the QPS floor in :mod:`benchmarks.check_bench` (structural
+checks — every ``*_ok`` flag, finite timings — still bind). The nightly
+medium run is held to the floor for real.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+import urllib.error
+import urllib.request
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import run_generation
+from repro.serve.query_service import QueryService, ServiceConfig
+
+from .common import dataset
+
+# the mixed workload: distinct canonical queries (distinct summary keys)
+# plus repeats, so ticks see both dedupe and genuine multi-lane fusion
+QUERY_MIX: List[Dict] = [
+    {"metrics": ["k_stall"], "group_by": "m_kind"},
+    {"metrics": ["m_duration", "m_bytes"], "group_by": "m_kind"},
+    {"metrics": ["k_stall"], "reducers": ["moments", "quantile"],
+     "anomaly_score": "p99"},
+    {"metrics": ["m_bytes"], "group_by": "k_device"},
+    {"metrics": ["k_stall", "m_duration"], "ranks": [0]},
+    {"metrics": ["m_duration"], "transfer_kinds": [1, 2]},
+    {"metrics": ["k_stall"], "group_by": "m_kind"},          # repeat
+    {"metrics": ["m_bytes"], "group_by": "k_device"},        # repeat
+]
+
+P99_CEILING_MS = 250.0
+
+
+def _post(port: int, spec: Dict, timeout: float = 120.0,
+          ) -> Tuple[int, Dict, float]:
+    """(status, body, latency_s) for one POST /query."""
+    req = urllib.request.Request(
+        f"http://127.0.0.1:{port}/query",
+        data=json.dumps([spec]).encode(),
+        headers={"Content-Type": "application/json"})
+    t0 = time.perf_counter()
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as r:
+            body = json.loads(r.read())
+            status = r.status
+    except urllib.error.HTTPError as e:
+        body, status = json.loads(e.read()), e.code
+    except (urllib.error.URLError, OSError) as e:
+        body, status = {"error": str(e)}, 0     # counted as a failure
+    return status, body, time.perf_counter() - t0
+
+
+def _burst(port: int, n: int) -> Tuple[int, int]:
+    """n concurrent one-query requests; (n_200, max fused width seen)."""
+    out: List[Tuple[int, Dict, float]] = [None] * n  # type: ignore
+    barrier = threading.Barrier(n)
+
+    def go(i: int) -> None:
+        barrier.wait()
+        out[i] = _post(port, QUERY_MIX[i % len(QUERY_MIX)])
+
+    threads = [threading.Thread(target=go, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    ok = sum(1 for s, _, _ in out if s == 200)
+    width = max((b["tick"]["fused_width"] for s, b, _ in out if s == 200),
+                default=0)
+    return ok, width
+
+
+def _sustained(port: int, n_threads: int, n_reqs: int,
+               ) -> Tuple[float, List[float], int]:
+    """(wall_s, per-request latencies_s, n_200) for the warm-load phase."""
+    lat: List[List[float]] = [[] for _ in range(n_threads)]
+    oks = [0] * n_threads
+    barrier = threading.Barrier(n_threads + 1)
+
+    def client(t: int) -> None:
+        barrier.wait()
+        for i in range(n_reqs):
+            s, _, dt = _post(port, QUERY_MIX[(t + i) % len(QUERY_MIX)])
+            lat[t].append(dt)
+            oks[t] += s == 200
+
+    threads = [threading.Thread(target=client, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    return wall, [x for per in lat for x in per], sum(oks)
+
+
+def run(scale: str, smoke: bool) -> Dict:
+    ds, paths, work = dataset(scale)
+    store_dir = os.path.join(work, "serve_store")
+    if not os.path.exists(os.path.join(store_dir, "manifest.json")):
+        run_generation(paths, store_dir, n_ranks=len(paths))
+
+    svc = QueryService(store_dir, ServiceConfig(tick_ms=5.0, port=0))
+    svc.start(serve_http=True)
+    try:
+        n_burst = 32
+        burst_ok, burst_width = _burst(svc.cfg.port, n_burst)
+
+        n_threads, n_reqs = (8, 4) if smoke else (16, 25)
+        wall, lats, sus_ok = _sustained(svc.cfg.port, n_threads, n_reqs)
+        stats = svc.stats()
+    finally:
+        svc.stop()
+
+    n_requests = n_threads * n_reqs
+    qps = n_requests / wall
+    p50 = float(np.percentile(lats, 50) * 1e3)
+    p99 = float(np.percentile(lats, 99) * 1e3)
+    rec = {
+        "bench": "serve",
+        "smoke": smoke,
+        "scale": scale,
+        "n_burst": n_burst,
+        "burst_max_fused_width": burst_width,
+        "batched_fused_ok": burst_width > 1,
+        "n_threads": n_threads,
+        "n_requests": n_requests,
+        "wall_s": wall,
+        "sustained_qps": qps,
+        "p50_ms": p50,
+        "p99_ms": p99,
+        "p99_ceiling_ms": P99_CEILING_MS,
+        "p99_ok": bool(smoke or p99 <= P99_CEILING_MS),
+        "all_responses_ok": bool(burst_ok == n_burst
+                                 and sus_ok == n_requests),
+        "ticks": stats["ticks"],
+        "mean_fused_width": stats["mean_fused_width"],
+        "summary_evictions": stats["evictions"],
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="small",
+                    choices=["small", "medium"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny load; floors don't bind in check_bench")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON record here (BENCH_serve.json)")
+    args = ap.parse_args()
+    rec = run(args.scale, args.smoke)
+    blob = json.dumps(rec, indent=2, sort_keys=True)
+    print(blob)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(blob + "\n")
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

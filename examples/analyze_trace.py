@@ -85,6 +85,11 @@ def main() -> None:
     ap.add_argument("--diff-out", default=None, metavar="FILE",
                     help="with --diff: also write the machine-readable "
                          "verdict record (check_bench shape) to FILE")
+    ap.add_argument("--diff-cached", action="store_true",
+                    help="with --diff: require the report to come from "
+                         "the diff-result cache (exit non-zero if it "
+                         "was recomputed) — for workflows asserting a "
+                         "repeat comparison is free")
     ap.add_argument("--query", default=None,
                     help="JSON list of declarative query specs (inline, "
                          "or @file.json) — run as ONE fused batch over "
@@ -205,6 +210,11 @@ def _diff(args) -> None:
     rep = VariabilityPipeline(cfg).diff(args.diff[0], args.diff[1])
     print(rep.render())
     print(f"\nprovenance: {rep.provenance()}")
+    print(f"diff-cached: {rep.from_cache}")
+    if args.diff_cached and not rep.from_cache:
+        raise SystemExit(
+            "--diff-cached: report was recomputed, not served from the "
+            "diff-result cache")
     if args.diff_out:
         with open(args.diff_out, "w") as f:
             f.write(rep.to_json() + "\n")

@@ -50,7 +50,8 @@ suite-generic merge (:func:`rank_partial_from_shards` +
     store is answered from this O(n_bins) cache without touching shards,
     and a payload written by an older engine version (or covering a
     different store state) is a miss, never a crash.
-  * ``partial_{idx}_{qkey}.npy`` — one shard's pre-merge states. On a
+  * ``pack_{idx}.bin`` — one shard's pre-merge states, ALL queries'
+    entries consolidated in one append-friendly pack file. On a
     summary miss, :func:`run_aggregation` classifies each shard clean or
     dirty against its (size, mtime_ns) fingerprint, loads cached partials
     for the clean ones, recomputes ONLY the dirty/new ones, and re-merges
@@ -439,7 +440,7 @@ def shard_partial_payload(sp: ShardPartial, plan: ShardPlan,
                           metrics: Sequence[str], group_by: Optional[str],
                           fingerprint: Sequence[int],
                           ) -> Dict[str, np.ndarray]:
-    """Flat array dict for ``partial_{idx}_{qkey}.npy`` — the reducer
+    """Flat array dict for one (shard, query) pack entry — the reducer
     ``to_payload`` round trip plus the shard fingerprint it covers."""
     payload = {
         "version": np.asarray(SUMMARY_VERSION, np.int64),
@@ -589,20 +590,19 @@ def compute_lane_partials(store: TraceStore,
     ``persist``, each partial is atomically written to its lane's
     partial-cache namespace as soon as it is produced.
 
-    Persistence runs on ONE background writer thread: pack + write
-    syscalls overlap the next shard's scan (both release the GIL), each
-    file write stays atomic (a crash still leaves complete cache entries
-    or none), and the single writer serializes the io-counter updates.
-    All futures are drained before returning, so callers observe fully
-    persisted partials and any write error surfaces here."""
+    Persistence runs on ONE background writer thread, and ALL lanes of a
+    shard are batched into one pack operation
+    (:meth:`~repro.core.tracestore.TraceStore.write_partials`): pack +
+    write syscalls overlap the next shard's scan (both release the GIL),
+    an L-lane batch costs one file write instead of L (the syscall floor
+    the consolidated packs exist to remove), each pack write stays
+    atomic/self-healing, and the single writer serializes against its
+    own pack read-modify-write cycle. All futures are drained before
+    returning, so callers observe fully persisted partials and any write
+    error surfaces here."""
     import concurrent.futures
 
     fresh: Dict[int, List[ShardPartial]] = collections.defaultdict(list)
-
-    def _persist(idx, lane, sp, fp):
-        store.write_partial(idx, lane.qkey, shard_partial_payload(
-            sp, lane.plan, lane.metrics, lane.query.group_by, fp))
-
     pending = []
     with concurrent.futures.ThreadPoolExecutor(max_workers=1) as writer:
         for idx, lane_ids in work_items:
@@ -610,6 +610,7 @@ def compute_lane_partials(store: TraceStore,
                 continue
             fp = store.stat_shard(int(idx))
             cols = store.read_shard(int(idx))
+            batch = {}
             for li in lane_ids:
                 lane = lanes[li]
                 sp = compute_shard_partial(
@@ -617,9 +618,13 @@ def compute_lane_partials(store: TraceStore,
                     lane.query.group_by, lane.reducers, query=lane.query,
                     cols=cols)
                 if persist and lane.qkey and fp is not None:
-                    pending.append(writer.submit(_persist, int(idx),
-                                                 lane, sp, fp))
+                    batch[lane.qkey] = shard_partial_payload(
+                        sp, lane.plan, lane.metrics, lane.query.group_by,
+                        fp)
                 fresh[li].append(sp)
+            if batch:
+                pending.append(writer.submit(store.write_partials,
+                                             int(idx), batch))
     for f in pending:
         f.result()
     return fresh
@@ -772,12 +777,17 @@ def compute_lane_partials_jax(store: TraceStore,
                 for name in lane.reducers}
 
     out: Dict[int, List[ShardPartial]] = collections.defaultdict(list)
+    batches: Dict[int, Dict] = collections.defaultdict(dict)
     for li, fp, sp, _ in scans:
         lane = lanes[li]
         if persist and lane.qkey and fp is not None:
-            store.write_partial(sp.idx, lane.qkey, shard_partial_payload(
-                sp, lane.plan, lane.metrics, lane.query.group_by, fp))
+            batches[sp.idx][lane.qkey] = shard_partial_payload(
+                sp, lane.plan, lane.metrics, lane.query.group_by, fp)
         out[li].append(sp)
+    # one pack write per shard, all lanes batched — same consolidation
+    # as the host producer
+    for idx, batch in batches.items():
+        store.write_partials(int(idx), batch)
     return out
 
 

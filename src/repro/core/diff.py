@@ -268,6 +268,7 @@ class DiffReport:
     shard_reads_a: int             # fused-pass proof: 0 when warm,
     shard_reads_b: int             # n_shards on a cold store
     seconds: float = 0.0
+    from_cache: bool = False       # served from the diff-result cache
 
     @property
     def verdict(self) -> str:
@@ -278,11 +279,45 @@ class DiffReport:
         return [g for g in self.groups if g.regressed]
 
     def provenance(self) -> str:
+        if self.from_cache:
+            return (f"diff-result cache hit (key {self.key}, no "
+                    f"queries run)")
         warm = self.shard_reads_a == 0 and self.shard_reads_b == 0
         how = ("both summaries warm" if warm
                else "one fused scan per cold store")
         return (f"{self.shard_reads_a} + {self.shard_reads_b} shard "
                 f"reads ({how})")
+
+    # -- diff-result cache round trip ---------------------------------------
+    def to_payload(self) -> Dict[str, Any]:
+        """Full-fidelity JSON form (unlike ``to_record``, nothing is
+        rounded or truncated) — what the diff-result cache persists."""
+        d = dataclasses.asdict(self)
+        d["thresholds"] = self.thresholds.to_dict()
+        for g in d["groups"]:
+            g["bin_shift"] = np.asarray(g["bin_shift"]).tolist()
+            g["top_windows"] = np.asarray(g["top_windows"]).tolist()
+            g["top_bins"] = [int(b) for b in g["top_bins"]]
+        d.pop("from_cache")        # a load is marked at load time
+        return d
+
+    @classmethod
+    def from_payload(cls, d: Dict[str, Any]) -> "DiffReport":
+        groups = []
+        for g in d["groups"]:
+            g = dict(g)
+            g["bin_shift"] = np.asarray(g["bin_shift"], np.float64)
+            g["top_windows"] = np.asarray(
+                g["top_windows"], np.int64).reshape(-1, 2)
+            groups.append(GroupDiff(**g))
+        return cls(store_a=d["store_a"], store_b=d["store_b"],
+                   metric=d["metric"], key=d["key"],
+                   thresholds=DiffThresholds(**d["thresholds"]),
+                   groups=groups, unmatched_a=list(d["unmatched_a"]),
+                   unmatched_b=list(d["unmatched_b"]),
+                   shard_reads_a=int(d["shard_reads_a"]),
+                   shard_reads_b=int(d["shard_reads_b"]),
+                   seconds=float(d["seconds"]), from_cache=True)
 
     def to_record(self, smoke: bool = False) -> Dict[str, Any]:
         """The machine-readable verdict in the shape
@@ -293,6 +328,7 @@ class DiffReport:
             "name": "diff_verdict",
             "kind": "diff",
             "smoke": bool(smoke),
+            "diff_cached": bool(self.from_cache),
             "verdict": self.verdict,
             "diff_key": self.key,
             "metric": self.metric,

@@ -32,7 +32,8 @@ cache in :mod:`repro.core.aggregation`: an unchanged store is answered
 from the merged summary (``summary_{key}.npz``, validated against the
 shard fingerprints it covers); a changed store rescans ONLY the
 dirty/new shards and merges them with the clean shards' cached partials
-(``partial_{idx}_{qkey}.npy``) — bit-identical to a cold run on the
+(entries of the per-shard ``pack_{idx}.bin``) — bit-identical to a cold
+run on the
 same backend. The backends differ only in the dirty-shard producer the
 shared clean/dirty driver (``run_incremental``) is handed: an in-process
 loop (serial), the work-stealing pool below (process), or one batched
@@ -276,11 +277,36 @@ class VariabilityPipeline:
         exactly one dirty-shard scan; the per-store read counts land in
         the report (``shard_reads_a/b``). Alignment, shift scoring and
         the verdict are pure post-processing of the two cached results.
+
+        Repeated diffs skip even that: the finished report is persisted
+        in a diff-result cache in store B's root
+        (``diff_{diff_cache_key}.json``), validated against BOTH stores'
+        shard fingerprints and the thresholds — an unchanged repeat of
+        the same comparison loads the report without running a single
+        query, and the loaded report says so (``from_cache`` /
+        ``provenance()`` / the CLI's ``diff-cached`` line). Disabled
+        along with the rest of the caches by ``use_summary_cache=False``.
         """
-        from .diff import diff_results
+        import json as _json
+
+        from .diff import DiffReport, diff_results
         t0 = time.perf_counter()
         base = query if query is not None else self.cfg.to_query()
         dq = diff_query(base)
+        key = diff_cache_key(dq, dq)
+        cache_path = os.path.join(str(store_b), f"diff_{key}.json")
+        fp = None
+        if self.cfg.use_summary_cache:
+            fp = self._diff_fingerprint(store_a, store_b, thresholds)
+            try:
+                with open(cache_path) as f:
+                    payload = _json.load(f)
+                if payload.get("store_fingerprint") == fp:
+                    rep = DiffReport.from_payload(payload["report"])
+                    rep.seconds = time.perf_counter() - t0
+                    return rep
+            except (OSError, ValueError, KeyError, TypeError):
+                pass                   # stale/corrupt cache: recompute
         sides = []
         for sd in (store_a, store_b):
             qplan = QueryPlan.compile(sd, [dq], backend=self.cfg.backend,
@@ -295,13 +321,37 @@ class VariabilityPipeline:
             sides.append((res, names,
                           int(qplan.store.io_counts["shard_reads"])))
         (res_a, names_a, reads_a), (res_b, names_b, reads_b) = sides
-        return diff_results(
+        rep = diff_results(
             res_a.result, res_b.result, metric=base.metrics[0],
             names_a=names_a, names_b=names_b, thresholds=thresholds,
             store_a=str(store_a), store_b=str(store_b),
-            key=diff_cache_key(dq, dq),
+            key=key,
             shard_reads_a=reads_a, shard_reads_b=reads_b,
             seconds=time.perf_counter() - t0)
+        if fp is not None:
+            tmp = cache_path + ".tmp"
+            with open(tmp, "w") as f:
+                _json.dump({"store_fingerprint": fp,
+                            "report": rep.to_payload()}, f)
+            os.replace(tmp, cache_path)
+        return rep
+
+    def _diff_fingerprint(self, store_a: str, store_b: str,
+                          thresholds) -> Dict:
+        """Validity token for one persisted diff report: any shard
+        rewrite/append on EITHER store, a different A-store path, or
+        different thresholds must miss (the report's query identity is
+        already in the cache filename via ``diff_cache_key``)."""
+        from .tracestore import TraceStore
+        return {
+            "paths": [os.path.abspath(str(store_a)),
+                      os.path.abspath(str(store_b))],
+            "shards": [[list(t) for t in
+                        TraceStore(s).shard_fingerprint()]
+                       for s in (store_a, store_b)],
+            "thresholds": (None if thresholds is None
+                           else thresholds.to_dict()),
+        }
 
     def _run_queries(self, store_dir: str,
                      queries: Sequence[Query]) -> List[QueryResult]:

@@ -18,34 +18,58 @@ The incremental analysis engine keeps TWO kinds of derived files next to
 the shards, both round-tripped through the reducer ``to_payload`` /
 ``from_payload`` contract (:mod:`repro.core.reducers`):
 
-``partial_{idx:06d}_{qkey}.npy`` — per-shard partial cache
-    One shard's pre-merge reducer states for one query. The 16-hex
-    ``qkey`` hashes the QUERY only: the canonical form of a
-    :class:`repro.core.query.Query` (version-stamped; order-insensitive
-    metrics, group_by, reducer suite, and the row predicates — time
-    window, rank / kernel-name / transfer-kind subsets), the plan's
-    ``(t_start, width)``, and — for the jax backend's
-    DEVICE partials — a ``precision="float32"`` namespace salt, so the
-    float32 post-segment-reduce tensors never masquerade as exact host
-    partials. Payload tensors are stored in CANONICAL metric order
-    (readers permute back to the caller's order), which is what lets
-    ``metrics=("a", "b")`` and ``("b", "a")`` share one entry.
-    The payload embeds the
-    ``(size, mtime_ns)`` fingerprint of the shard file it was computed
-    from; a fingerprint mismatch at read time is a miss, so a partial can
-    never be served for rewritten shard data. ``write_shard`` invalidates
-    ONLY the written shard's partials (one prefix-filtered directory
-    scan; the unlinks are bounded by that shard's own entries, and no
-    summary files are touched) — which is what makes appending new trace
-    O(dirty shards): every clean shard's partial survives and the next
-    aggregation merges it back in without touching the raw shard.
-    On disk the payload is PACKED into one ``.npy`` uint8 buffer
-    (length-prefixed json index + concatenated array bytes) so a bulk
-    load costs a single sequential read — plain npz spends ~0.8 ms of
-    zipfile member overhead per ~20-array payload, which would rival
-    rescanning the shard and erase the incremental win. Logical payload
-    arrays (bin axis = the ``bins`` actually touched, so a partial is
-    O(rows-of-one-shard), not O(n_bins)):
+``pack_{idx:06d}.bin`` — per-shard partial PACK
+    ALL of one shard's pre-merge reducer states, one logical entry per
+    query. Each 16-hex entry key (``qkey``) hashes the QUERY only: the
+    canonical form of a :class:`repro.core.query.Query`
+    (version-stamped; order-insensitive metrics, group_by, reducer
+    suite, and the row predicates — time window, rank / kernel-name /
+    transfer-kind subsets), the plan's ``(t_start, width)``, and — for
+    the jax backend's DEVICE partials — a ``precision="float32"``
+    namespace salt, so the float32 post-segment-reduce tensors never
+    masquerade as exact host partials. Payload tensors are stored in
+    CANONICAL metric order (readers permute back to the caller's
+    order), which is what lets ``metrics=("a", "b")`` and ``("b", "a")``
+    share one entry. Each payload embeds the ``(size, mtime_ns)``
+    fingerprint of the shard file it was computed from; a fingerprint
+    mismatch at read time is a miss, so a partial can never be served
+    for rewritten shard data. ``write_shard`` invalidates ONLY the
+    written shard's pack (one unlink, no summary files touched) — which
+    is what makes appending new trace O(dirty shards): every clean
+    shard's pack survives and the next aggregation merges it back in
+    without touching the raw shard.
+
+    On-disk pack layout (append-friendly: a new batch of entries lands
+    as ONE in-place append; entry removal is an atomic tmp+rename
+    rewrite — see :meth:`TraceStore.write_partials` /
+    :meth:`TraceStore.compact_pack`)::
+
+      [record bytes ...]                 one packed payload per entry
+      [json footer]                      {"entries": {qkey: [off, len,
+                                          {"version", "fingerprint"}]}}
+      [8-byte LE footer length][8-byte magic "RPPACK01"]
+
+    The footer rides the END of the file so an append never rewrites
+    existing records, and its per-entry ``meta`` duplicates each
+    payload's version + fingerprint stamps so liveness sweeps
+    (:meth:`TraceStore.gc_stale`) and classification probes validate
+    every entry of a shard from ONE O(footer) tail read. A torn or
+    corrupt footer makes every entry a miss (never a crash): the shard
+    is reclassified dirty, rescanned, and the next write rewrites the
+    pack clean. Each record is the payload packed into one buffer
+    (length-prefixed json index + concatenated array bytes,
+    :meth:`TraceStore._pack_arrays`) so a bulk delta load costs one
+    sequential read per SHARD — not one file open per (query, shard),
+    the syscall floor that capped fused-batch speedup when every entry
+    was its own ``partial_{idx:06d}_{qkey}.npy`` file. Those per-file
+    entries are still READ as a migration path (pack entry first, then
+    the legacy file) and swept by gc; new writes only ever produce
+    packs. ``io_counts`` tallies both views: ``partial_reads`` /
+    ``partial_writes`` count logical entries (what the per-file scheme
+    would have done), ``pack_reads`` / ``pack_writes`` count physical
+    pack file operations — the fused-batch IO win is the ratio.
+    Logical payload arrays (bin axis = the ``bins`` actually touched,
+    so a partial is O(rows-of-one-shard), not O(n_bins)):
 
       ``version, t_start, t_end, n_shards``  engine + plan stamp
       ``idx, fingerprint``                   shard index + (size, mtime_ns)
@@ -89,6 +113,7 @@ import io
 import itertools
 import json
 import os
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -107,11 +132,18 @@ def summary_filename(key: str) -> str:
 
 
 def partial_filename(idx: int, qkey: str) -> str:
-    # .npy, not .npz: a partial is a single packed buffer (see
-    # TraceStore._pack_arrays) so the bulk delta load costs ONE read per
-    # clean shard — zipfile's per-member overhead at ~20 arrays/payload
-    # would rival rescanning the shard.
+    """LOGICAL name of one (shard, query) partial entry. Pre-pack
+    stores hold these as real ``.npy`` files (still readable — the
+    migration path); pack-era stores only synthesize the names so
+    per-entry bookkeeping (``partial_names`` counts, gc accounting)
+    stays comparable across layouts."""
     return f"partial_{idx:06d}_{qkey}.npy"
+
+
+def pack_filename(idx: int) -> str:
+    """One consolidated partial PACK per shard (module docstring has
+    the record + footer layout)."""
+    return f"pack_{idx:06d}.bin"
 
 
 @dataclasses.dataclass
@@ -138,16 +170,36 @@ class TraceStore:
 
     ``io_counts`` tallies this instance's file traffic (``shard_reads``,
     ``partial_reads``, ``partial_writes``, ``summary_reads``,
-    ``summary_writes``) — the incremental-path tests assert through it
-    that a delta aggregation touches only dirty shard files.
+    ``summary_writes`` count logical entries; ``pack_reads``,
+    ``pack_writes`` count physical partial-pack file operations) — the
+    incremental-path tests assert through it that a delta aggregation
+    touches only dirty shard files, and the fused-batch IO claim is the
+    logical/physical ratio. Updates are lock-protected: the background
+    partial writer and concurrent serving threads share one instance.
     """
 
     MANIFEST = "manifest.json"
+    _PACK_MAGIC = b"RPPACK01"
+    # raw pack bytes cached per shard (stat-validated); bounds a
+    # long-lived serving instance without an explicit byte budget —
+    # packs are O(active queries x one shard's touched bins)
+    _PACK_CACHE_MAX = 512
 
     def __init__(self, root: str):
         self.root = root
         os.makedirs(root, exist_ok=True)
         self.io_counts: collections.Counter = collections.Counter()
+        self._io_lock = threading.Lock()
+        # serializes pack read-modify-write cycles within this process;
+        # cross-process safety comes from tmp+rename (and from the
+        # schedulers never handing one shard to two writers)
+        self._pack_lock = threading.RLock()
+        # idx -> [stat key, entries|None (None = corrupt), data_end, raw]
+        self._pack_cache: collections.OrderedDict = collections.OrderedDict()
+
+    def _count(self, name: str, n: int = 1) -> None:
+        with self._io_lock:
+            self.io_counts[name] += n
 
     # -- manifest ----------------------------------------------------------
     def write_manifest(self, manifest: StoreManifest) -> None:
@@ -178,7 +230,7 @@ class TraceStore:
 
     def read_shard(self, idx: int) -> Dict[str, np.ndarray]:
         path = os.path.join(self.root, shard_filename(idx))
-        self.io_counts["shard_reads"] += 1
+        self._count("shard_reads")
         return self._load_npz(path)
 
     def has_shard(self, idx: int) -> bool:
@@ -271,8 +323,8 @@ class TraceStore:
         float64 host scan writes ``"exact"`` partials, the jax backend's
         DEVICE partials (the post-segment-reduce float32 tensors) live
         under ``"float32"`` and are never merged into an exact-path
-        result. Both namespaces share the ``partial_{idx}_{qkey}`` file
-        shape, so per-shard invalidation (:meth:`write_shard` →
+        result. Both namespaces are entries of the SAME per-shard pack,
+        so per-shard invalidation (:meth:`write_shard` →
         :meth:`clear_partials`) and the liveness sweep (:meth:`gc_stale`)
         cover device partials with no extra machinery."""
         t_start, t_end, n_shards = (int(x) for x in plan_key)
@@ -285,65 +337,328 @@ class TraceStore:
         return hashlib.sha256(
             json.dumps(blob, sort_keys=True).encode()).hexdigest()[:16]
 
-    # -- per-shard partial cache -------------------------------------------
+    # -- per-shard partial pack --------------------------------------------
     def write_partial(self, idx: int, qkey: str,
                       arrays: Dict[str, np.ndarray]) -> str:
-        """Atomically persist one shard's partial payload, packed into a
-        single ``.npy`` buffer (see module docstring for the layout and
-        why). The engine-version and shard-fingerprint stamps are
-        duplicated into the packed header so liveness sweeps
-        (:meth:`gc_stale`) validate from an O(header) prefix read."""
-        meta = {}
-        if "version" in arrays:
-            meta["version"] = int(np.asarray(arrays["version"]))
-        if "fingerprint" in arrays:
-            meta["fingerprint"] = [
-                int(x) for x in np.asarray(arrays["fingerprint"]).ravel()]
-        path = os.path.join(self.root, partial_filename(idx, qkey))
-        self._atomic_save_packed(path, self._pack_arrays(arrays, meta))
-        self.io_counts["partial_writes"] += 1
+        """Persist ONE shard partial (single-entry form of
+        :meth:`write_partials`)."""
+        return self.write_partials(idx, {qkey: arrays})
+
+    def write_partials(self, idx: int,
+                       payloads: Dict[str, Dict[str, np.ndarray]]) -> str:
+        """Persist many queries' partial payloads for ONE shard in a
+        single pack operation — the fused producer hands every lane of a
+        shard here at once, so L lanes cost one file write, not L.
+
+        Every payload is serialized FULLY before the filesystem is
+        touched (a writer that dies materializing an array leaves the
+        existing pack intact — the crash-safety tests pin this). Disjoint
+        new entries take the in-place append fast path (records never
+        move; the footer is rewritten at the tail). A qkey collision or
+        a corrupt/absent existing pack takes the atomic tmp+rename
+        rewrite path; sibling entries ride along untouched — dropping
+        STALE ones is :meth:`gc_stale` / :meth:`compact_pack`'s job,
+        exactly as per-file partials were only ever unlinked by gc."""
+        path = self._pack_path(idx)
+        if not payloads:
+            return path
+        records = {}
+        for qkey, arrays in payloads.items():
+            meta = {}
+            if "version" in arrays:
+                meta["version"] = int(np.asarray(arrays["version"]))
+            if "fingerprint" in arrays:
+                meta["fingerprint"] = [
+                    int(x)
+                    for x in np.asarray(arrays["fingerprint"]).ravel()]
+            records[qkey] = (self._pack_arrays(arrays, meta).tobytes(),
+                             meta)
+        with self._pack_lock:
+            hit = self._load_pack(idx, want_raw=True)
+            entries = hit[1] if hit else None
+            if (entries is not None and hit[3] is not None
+                    and not set(records) & set(entries)):
+                self._append_pack(idx, path, hit, records)
+            else:
+                self._rewrite_pack(idx, path, hit, records)
+        self._count("partial_writes", len(records))
         return path
 
     def read_partial(self, idx: int,
                      qkey: str) -> Optional[Dict[str, np.ndarray]]:
-        """Partial payload for (shard, query), or None on a miss."""
+        """Partial payload for (shard, query), or None on a miss. Pack
+        entry first; a pre-pack ``partial_{idx}_{qkey}.npy`` file is the
+        read-only migration fallback."""
+        rec = self._pack_record(idx, qkey)
+        if rec is not None:
+            try:
+                payload = self._unpack_raw(rec)
+            except (ValueError, TypeError, KeyError):
+                return None            # torn record -> miss
+            self._count("partial_reads")
+            return payload
         path = os.path.join(self.root, partial_filename(idx, qkey))
         try:
             payload = self._unpack_arrays(np.load(path))
         except (OSError, ValueError, TypeError, KeyError):
             return None                # absent or torn/corrupt -> miss
-        self.io_counts["partial_reads"] += 1
+        self._count("partial_reads")
         return payload
 
     def has_partial(self, idx: int, qkey: str) -> bool:
+        hit = self._load_pack(idx, want_raw=False)
+        if hit and hit[1] is not None and qkey in hit[1]:
+            return True
         return os.path.exists(
             os.path.join(self.root, partial_filename(idx, qkey)))
 
     def partial_names(self, idx: Optional[int] = None) -> List[str]:
-        """Partial-cache filenames, optionally for one shard index.
-
-        One unsorted ``scandir`` pass filtered by prefix — a directory
-        scan, not a per-file stat; with a per-shard ``idx`` the unlink
-        work that follows is bounded by that shard's own entries."""
+        """LOGICAL partial-entry names (``partial_{idx}_{qkey}.npy``
+        shaped), optionally for one shard index — pack entries
+        synthesized from the O(footer) tail index, plus any real
+        pre-pack files still on disk. Corrupt packs contribute no names
+        (their entries are unservable)."""
+        names = set()
+        indices = [idx] if idx is not None else self._pack_indices()
+        for i in indices:
+            hit = self._load_pack(i, want_raw=False)
+            if hit and hit[1] is not None:
+                names.update(partial_filename(i, q) for q in hit[1])
         prefix = ("partial_" if idx is None else f"partial_{idx:06d}_")
         with os.scandir(self.root) as it:
-            names = [e.name for e in it
-                     if e.name.startswith(prefix)
-                     and e.name.endswith(".npy")]
+            names.update(e.name for e in it
+                         if e.name.startswith(prefix)
+                         and e.name.endswith(".npy"))
         return sorted(names)
 
     def clear_partials(self, idx: Optional[int] = None) -> int:
         """Drop cached partials — for one shard (``write_shard``'s
-        per-shard invalidation) or the whole store. Tolerant of a
-        concurrent writer unlinking the same files."""
+        per-shard invalidation: ONE unlink) or the whole store. Returns
+        the number of logical entries dropped. Tolerant of a concurrent
+        writer unlinking the same files."""
         n = 0
-        for name in self.partial_names(idx):
-            try:
-                os.remove(os.path.join(self.root, name))
-                n += 1
-            except FileNotFoundError:
-                pass
+        indices = [idx] if idx is not None else self._pack_indices()
+        with self._pack_lock:
+            for i in indices:
+                hit = self._load_pack(i, want_raw=False)
+                if hit is not None:
+                    n += len(hit[1]) if hit[1] is not None else 1
+                self._quiet_remove(self._pack_path(i))
+                self._pack_cache.pop(i, None)
+        prefix = ("partial_" if idx is None else f"partial_{idx:06d}_")
+        with os.scandir(self.root) as it:
+            legacy = [e.name for e in it
+                      if e.name.startswith(prefix)
+                      and e.name.endswith(".npy")]
+        for name in legacy:
+            n += self._quiet_remove(os.path.join(self.root, name))
         return n
+
+    def compact_pack(self, idx: int) -> int:
+        """Rewrite shard ``idx``'s pack keeping only LIVE entries
+        (version == engine version, fingerprint == the shard file's
+        current ``(size, mtime_ns)``) via atomic tmp+rename; a pack left
+        with no live entries — or an unparseable one — is removed
+        outright. Returns the number of entries dropped (a corrupt pack
+        counts as one). No-op (0) when every entry is live."""
+        with self._pack_lock:
+            hit = self._load_pack(idx, want_raw=True)
+            if hit is None:
+                return 0
+            _, entries, _, raw = hit
+            if entries is None or raw is None:
+                self._quiet_remove(self._pack_path(idx))
+                self._pack_cache.pop(idx, None)
+                return 1
+            fp = self.stat_shard(idx)
+            live = {q: (raw[off:off + ln], meta)
+                    for q, (off, ln, meta) in entries.items()
+                    if self._entry_is_live(meta, fp)}
+            dropped = len(entries) - len(live)
+            if not dropped:
+                return 0
+            if live:
+                self._write_pack_file(idx, self._pack_path(idx), live)
+            else:
+                self._quiet_remove(self._pack_path(idx))
+                self._pack_cache.pop(idx, None)
+            return dropped
+
+    # -- pack internals ----------------------------------------------------
+    def _pack_path(self, idx: int) -> str:
+        return os.path.join(self.root, pack_filename(idx))
+
+    def _pack_indices(self) -> List[int]:
+        out = []
+        with os.scandir(self.root) as it:
+            for e in it:
+                if e.name.startswith("pack_") and e.name.endswith(".bin"):
+                    out.append(int(e.name[len("pack_"):-len(".bin")]))
+        return sorted(out)
+
+    @classmethod
+    def _parse_pack(cls, raw: bytes) -> Tuple[Dict, int]:
+        """(entries, data_end) from full pack bytes; raises ValueError
+        on any structural damage (callers treat that as all-miss)."""
+        if len(raw) < 16 or raw[-8:] != cls._PACK_MAGIC:
+            raise ValueError("bad pack magic")
+        n_foot = int.from_bytes(raw[-16:-8], "little")
+        data_end = len(raw) - 16 - n_foot
+        if n_foot <= 0 or data_end < 0:
+            raise ValueError("bad pack footer length")
+        entries = json.loads(raw[data_end:-16].decode())["entries"]
+        for off, ln, _meta in entries.values():
+            if not (0 <= off and 0 <= ln and off + ln <= data_end):
+                raise ValueError("pack entry out of range")
+        return entries, data_end
+
+    def _load_pack(self, idx: int, want_raw: bool) -> Optional[list]:
+        """Stat-validated cache entry ``[stat key, entries, data_end,
+        raw]`` for shard ``idx``'s pack — ``entries is None`` marks a
+        corrupt pack (negative result cached too, so L lanes probing it
+        cost one read, not L); returns None when the file is absent.
+        ``want_raw=False`` settles for the O(footer) tail read that
+        serves footer-only callers (names, liveness, has_partial)."""
+        path = self._pack_path(idx)
+        with self._pack_lock:
+            try:
+                st = os.stat(path)
+            except OSError:
+                self._pack_cache.pop(idx, None)
+                return None
+            key = (int(st.st_size), int(st.st_mtime_ns))
+            hit = self._pack_cache.get(idx)
+            if (hit is not None and hit[0] == key
+                    and (hit[3] is not None or not want_raw
+                         or hit[1] is None)):
+                self._pack_cache.move_to_end(idx)
+                return hit
+            size = key[0]
+            try:
+                if want_raw or size <= 1 << 16:
+                    with open(path, "rb") as f:
+                        raw = f.read()
+                    entries, data_end = self._parse_pack(raw)
+                else:
+                    entries, data_end, raw = *self._read_pack_footer(
+                        path, size), None
+            except (OSError, ValueError, KeyError, TypeError):
+                hit = [key, None, 0, None]
+            else:
+                hit = [key, entries, data_end, raw]
+            self._count("pack_reads")
+            self._pack_cache[idx] = hit
+            self._pack_cache.move_to_end(idx)
+            while len(self._pack_cache) > self._PACK_CACHE_MAX:
+                self._pack_cache.popitem(last=False)
+            return hit
+
+    @classmethod
+    def _read_pack_footer(cls, path: str, size: int) -> Tuple[Dict, int]:
+        """(entries, data_end) from the pack's tail only — O(footer), no
+        record bytes read. Raises ValueError on damage."""
+        with open(path, "rb") as f:
+            if size < 16:
+                raise ValueError("pack too small")
+            f.seek(size - 16)
+            tail = f.read(16)
+            if tail[8:] != cls._PACK_MAGIC:
+                raise ValueError("bad pack magic")
+            n_foot = int.from_bytes(tail[:8], "little")
+            data_end = size - 16 - n_foot
+            if n_foot <= 0 or data_end < 0:
+                raise ValueError("bad pack footer length")
+            f.seek(data_end)
+            entries = json.loads(f.read(n_foot).decode())["entries"]
+        for off, ln, _meta in entries.values():
+            if not (0 <= off and 0 <= ln and off + ln <= data_end):
+                raise ValueError("pack entry out of range")
+        return entries, data_end
+
+    def _pack_record(self, idx: int, qkey: str) -> Optional[bytes]:
+        """Raw record bytes for one pack entry, or None."""
+        with self._pack_lock:
+            hit = self._load_pack(idx, want_raw=True)
+            if hit is None or hit[1] is None or qkey not in hit[1]:
+                return None
+            off, ln, _meta = hit[1][qkey]
+            return hit[3][off:off + ln]
+
+    @staticmethod
+    def _entry_is_live(meta: Dict,
+                       fp: Optional[Tuple[int, int, int]]) -> bool:
+        if fp is None:
+            return False              # shard file gone
+        return (int(meta.get("version", -1)) == SUMMARY_VERSION
+                and meta.get("fingerprint") == [int(x) for x in fp])
+
+    def _append_pack(self, idx: int, path: str, hit: list,
+                     records: Dict[str, Tuple[bytes, Dict]]) -> None:
+        """In-place append: new records land where the old footer stood,
+        then footer + length + magic are re-laid at the tail. A writer
+        torn mid-append leaves a bad tail -> every entry misses -> the
+        next rescan's write rewrites the pack clean (self-healing)."""
+        _, entries, data_end, raw = hit
+        new_entries = dict(entries)
+        chunks, off = [], data_end
+        for q, (blob, _meta) in records.items():
+            new_entries[q] = [off, len(blob), records[q][1]]
+            chunks.append(blob)
+            off += len(blob)
+        foot = json.dumps({"entries": new_entries}).encode()
+        tail = (b"".join(chunks) + foot
+                + len(foot).to_bytes(8, "little") + self._PACK_MAGIC)
+        with open(path, "r+b") as f:
+            f.seek(data_end)
+            f.write(tail)
+            f.truncate()
+        self._count("pack_writes")
+        self._refresh_pack_cache(idx, path, new_entries, off,
+                                 raw[:data_end] + tail)
+
+    def _rewrite_pack(self, idx: int, path: str, hit: Optional[list],
+                      records: Dict[str, Tuple[bytes, Dict]]) -> None:
+        """Atomic tmp+rename rewrite: every non-colliding entry of the
+        existing pack + the new records (an unparseable existing pack
+        contributes nothing — the self-heal). The path every collision,
+        corrupt pack, and first write takes."""
+        keep: Dict[str, Tuple[bytes, Dict]] = {}
+        if hit is not None and hit[1] is not None and hit[3] is not None:
+            for q, (off, ln, meta) in hit[1].items():
+                if q not in records:
+                    keep[q] = (hit[3][off:off + ln], meta)
+        keep.update(records)
+        self._write_pack_file(idx, path, keep)
+
+    def _write_pack_file(self, idx: int, path: str,
+                         records: Dict[str, Tuple[bytes, Dict]]) -> None:
+        """Serialize a whole pack (records in key order + footer) and
+        land it with the shared atomic tmp+rename writer."""
+        entries, chunks, off = {}, [], 0
+        for q in sorted(records):
+            blob, meta = records[q]
+            entries[q] = [off, len(blob), meta]
+            chunks.append(blob)
+            off += len(blob)
+        foot = json.dumps({"entries": entries}).encode()
+        raw = (b"".join(chunks) + foot
+               + len(foot).to_bytes(8, "little") + self._PACK_MAGIC)
+        self._atomic_write(path, raw)
+        self._count("pack_writes")
+        self._refresh_pack_cache(idx, path, entries, off, raw)
+
+    def _refresh_pack_cache(self, idx: int, path: str, entries: Dict,
+                            data_end: int, raw: bytes) -> None:
+        with self._pack_lock:
+            try:
+                st = os.stat(path)
+            except OSError:
+                self._pack_cache.pop(idx, None)
+                return
+            self._pack_cache[idx] = [
+                (int(st.st_size), int(st.st_mtime_ns)),
+                entries, data_end, raw]
+            self._pack_cache.move_to_end(idx)
 
     # -- summary cache -----------------------------------------------------
     def has_summary(self, key: str) -> bool:
@@ -354,7 +669,7 @@ class TraceStore:
         """Atomically persist one summary payload (see module docstring)."""
         path = os.path.join(self.root, summary_filename(key))
         self._atomic_savez(path, arrays)
-        self.io_counts["summary_writes"] += 1
+        self._count("summary_writes")
         return path
 
     def read_summary(self, key: str) -> Optional[Dict[str, np.ndarray]]:
@@ -362,7 +677,7 @@ class TraceStore:
         path = os.path.join(self.root, summary_filename(key))
         if not os.path.exists(path):
             return None
-        self.io_counts["summary_reads"] += 1
+        self._count("summary_reads")
         return self._load_npz(path)
 
     def summary_keys(self) -> List[str]:
@@ -386,12 +701,16 @@ class TraceStore:
 
     # -- garbage collection ------------------------------------------------
     def gc_stale(self) -> int:
-        """One sweep dropping derived files the live store can no longer
+        """One sweep dropping derived data the live store can no longer
         serve: summaries whose ``covered`` fingerprints (or version) no
-        longer match, and partials whose embedded shard fingerprint is
-        stale or whose shard file is gone. Runs once per manifest write —
-        the amortized replacement for the old purge-on-every-shard-write.
-        Returns the number of files removed."""
+        longer match, pack entries whose embedded shard fingerprint is
+        stale or whose shard file is gone (each pack compacted in place
+        via :meth:`compact_pack` — one O(footer) read per pack decides,
+        only packs with casualties are rewritten), and any pre-pack
+        per-file partials failing the same liveness test. Runs once per
+        manifest write — the amortized replacement for the old
+        purge-on-every-shard-write. Returns the number of stale
+        summaries + partial entries removed."""
         removed = 0
         current = {fp[0]: fp for fp in self.shard_fingerprint()}
         cur_sorted = sorted(current.values())
@@ -399,7 +718,13 @@ class TraceStore:
             path = os.path.join(self.root, summary_filename(key))
             if not self._summary_is_live(path, cur_sorted):
                 removed += self._quiet_remove(path)
-        for name in self.partial_names():
+        for idx in self._pack_indices():
+            removed += self.compact_pack(idx)
+        with os.scandir(self.root) as it:
+            legacy = [e.name for e in it
+                      if e.name.startswith("partial_")
+                      and e.name.endswith(".npy")]
+        for name in sorted(legacy):
             path = os.path.join(self.root, name)
             # split, don't slice: {idx:06d} widens past 6 digits at 1e6+
             idx = int(name.split("_")[1])
@@ -475,11 +800,16 @@ class TraceStore:
         raw = len(head).to_bytes(8, "little") + head + b"".join(chunks)
         return np.frombuffer(raw, np.uint8)
 
-    @staticmethod
-    def _unpack_arrays(packed: np.ndarray) -> Dict[str, np.ndarray]:
+    @classmethod
+    def _unpack_arrays(cls, packed: np.ndarray) -> Dict[str, np.ndarray]:
         """Inverse of :meth:`_pack_arrays` (raises on a malformed
         buffer — callers treat that as a cache miss)."""
-        raw = packed.tobytes()
+        return cls._unpack_raw(packed.tobytes())
+
+    @staticmethod
+    def _unpack_raw(raw: bytes) -> Dict[str, np.ndarray]:
+        """Bytes form of :meth:`_unpack_arrays` — what pack records are
+        decoded with (no intermediate ndarray copy)."""
         n_head = int.from_bytes(raw[:8], "little")
         index = json.loads(raw[8:8 + n_head].decode())["arrays"]
         base = 8 + n_head
@@ -506,11 +836,6 @@ class TraceStore:
     # shard per query lane) mkstemp's extra syscalls were a measurable
     # slice of the fused scan
     _tmp_seq = itertools.count()
-
-    def _atomic_save_packed(self, path: str, packed: np.ndarray) -> None:
-        buf = io.BytesIO()
-        np.save(buf, packed)
-        self._atomic_write(path, buf.getbuffer())
 
     def _atomic_savez(self, path: str, arrays: Dict[str, np.ndarray]) -> None:
         # serialize FULLY before touching the filesystem: a writer that

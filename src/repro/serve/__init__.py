@@ -1,2 +1,9 @@
-"""Serving: prefill/decode steps, cache sharding, batched engine."""
-from .engine import ServeConfig, ServeEngine, cache_specs, make_decode_fn, make_prefill_fn
+"""Serving: prefill/decode steps, cache sharding, batched engine, and
+the concurrent query-serving front door (:mod:`.query_service`)."""
+try:  # the batched engine needs jax; the query service does not
+    from .engine import (ServeConfig, ServeEngine, cache_specs,
+                         make_decode_fn, make_prefill_fn)
+except ImportError:  # pragma: no cover - jax-less environments
+    pass
+from .query_service import (BudgetExceeded, QueryService, ServiceConfig,
+                            SummaryCacheLRU)

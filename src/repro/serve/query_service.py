@@ -1,0 +1,479 @@
+"""Concurrent query-serving front door over the declarative Query API.
+
+The paper's promise is low-latency exploration integrated into
+automated workflows; the library alone is one-caller-at-a-time. This
+module puts the Query engine behind a small HTTP service
+(``ThreadingHTTPServer`` — one handler thread per connection) with the
+properties a shared analysis plane needs:
+
+Admission batching (one fused plan per tick)
+    Requests arriving within a ``tick_ms`` window are drained into ONE
+    :class:`~repro.core.query.QueryPlan` and executed as a single fused
+    ``execute_plan`` — every dirty shard file read once for ALL
+    concurrent users' lanes, identical queries deduplicated for free by
+    the engine's lane dedupe, clean shards served from the consolidated
+    per-shard partial packs. Each response carries the provenance a
+    client (and the CI smoke leg) can assert on: ``fused_width`` (how
+    many lanes rode the tick's plan) and ``batched_fused`` (width > 1).
+
+Shared summary cache
+    All ticks execute against one :class:`TraceStore` instance, so
+    every user shares the on-disk ``summary_*.npz`` cache AND the
+    in-process pack cache — a question any user asked before is a pure
+    summary hit for everyone.
+
+Per-request budget
+    ``max_cells_per_request`` bounds the estimated result size
+    (bins x metrics x reducer state width, summed over the request's
+    queries) BEFORE admission; an oversized request — e.g. a 1 ms
+    re-binning of a day-long trace — is rejected with HTTP 413 instead
+    of stalling every other user's tick while it allocates.
+
+LRU byte-budgeted summary eviction
+    Unbounded distinct queries would grow the summary store forever
+    (one ``summary_*.npz`` per canonical question). After each tick the
+    service touches the tick's summary keys and, when the store exceeds
+    ``summary_budget_bytes``, deletes least-recently-used summary files
+    — but NEVER a key touched in the current tick, so a result is never
+    evicted between being computed and being read back. Evicting a
+    summary is always safe: it is derived data, recomputable from
+    shards/partials at the cost of one scan.
+
+Run it:
+
+  PYTHONPATH=src python -m repro.serve.query_service --store DIR \\
+      [--port 8321] [--tick-ms 10] [--summary-budget-mb 256]
+
+POST /query with a JSON body of Query specs (the ``--query`` schema:
+one spec object, or a list run as one request)::
+
+  curl -s localhost:8321/query -d '[{"metrics": ["k_stall"],
+      "group_by": "m_kind"}]'
+
+Response: ``{"results": [...], "tick": {"fused_width": N,
+"batched_fused": bool, "evicted": E}}`` — per-query group/metric
+moment summaries plus the engine's execution provenance (cache_hit,
+recomputed_shards, partial_hits, shards_pruned, rows filtered).
+``GET /healthz`` is a liveness probe; ``GET /stats`` exposes service
+counters (ticks, fused widths, evictions, the store's io_counts).
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import dataclasses
+import json
+import os
+import queue
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.anomaly import report_for_query
+from repro.core.query import Query, QueryPlan
+from repro.core.reducers import N_BUCKETS
+from repro.core.tracestore import TraceStore, summary_filename
+
+# moment state width per (bin, group, metric) cell; the quantile sketch
+# rides N_BUCKETS more — the per-request budget estimates with these
+_MOMENT_WIDTH = 5
+
+
+class BudgetExceeded(ValueError):
+    """Request rejected by the per-request result-size budget (413)."""
+
+
+class _Server(ThreadingHTTPServer):
+    # a concurrent burst is the service's whole point: don't reset
+    # connections off the default listen backlog of 5
+    request_queue_size = 128
+    daemon_threads = True
+
+
+@dataclasses.dataclass
+class ServiceConfig:
+    tick_ms: float = 10.0                # admission-batch window
+    backend: str = "serial"
+    max_cells_per_request: int = 50_000_000
+    summary_budget_bytes: Optional[int] = 256 * 1024 * 1024
+    request_timeout_s: float = 120.0     # handler wait on its tick
+    host: str = "127.0.0.1"
+    port: int = 8321
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One admitted request riding the next tick."""
+
+    queries: List[Query]
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+    results: Optional[List[Dict]] = None
+    tick_info: Optional[Dict] = None
+    error: Optional[Tuple[int, str]] = None
+
+
+class SummaryCacheLRU:
+    """Byte-budgeted LRU over the on-disk summary store.
+
+    Recency is tracked per summary KEY (touched once per tick that
+    reads or writes it); eviction deletes ``summary_{key}.npz`` files
+    least-recently-used first until the store fits the budget, skipping
+    every key touched in the CURRENT tick (a tick's own results are
+    never evicted before the requester reads them). Summary files that
+    appear out of band (another process, a pre-existing store) are
+    adopted at the cold end of the order."""
+
+    def __init__(self, store: TraceStore,
+                 budget_bytes: Optional[int]) -> None:
+        self.store = store
+        self.budget = budget_bytes
+        self._order: "collections.OrderedDict[str, bool]" = \
+            collections.OrderedDict()
+        self._tick_keys: set = set()
+        self.evictions = 0
+
+    def touch(self, keys: Sequence[str]) -> None:
+        """Mark ``keys`` as this tick's working set (most recent, and
+        immune to eviction until the next tick)."""
+        self._tick_keys = set(keys)
+        for k in keys:
+            self._order.pop(k, None)
+            self._order[k] = True
+
+    def evict(self) -> int:
+        """Delete LRU summary files until the store fits the budget.
+        Returns how many were evicted (0 when unbudgeted or within)."""
+        if not self.budget:
+            return 0
+        sizes: Dict[str, int] = {}
+        for k in self.store.summary_keys():
+            try:
+                sizes[k] = os.path.getsize(
+                    os.path.join(self.store.root, summary_filename(k)))
+            except OSError:
+                pass
+        for k in sizes:                  # adopt unknowns as coldest
+            if k not in self._order:
+                self._order[k] = True
+                self._order.move_to_end(k, last=False)
+        for k in list(self._order):      # forget deleted files
+            if k not in sizes:
+                self._order.pop(k)
+        total = sum(sizes.values())
+        evicted = 0
+        for k in list(self._order):
+            if total <= self.budget:
+                break
+            if k in self._tick_keys:
+                continue                 # never evict a same-tick read
+            try:
+                os.remove(os.path.join(self.store.root,
+                                       summary_filename(k)))
+            except FileNotFoundError:
+                pass
+            total -= sizes[k]
+            self._order.pop(k)
+            evicted += 1
+        self.evictions += evicted
+        return evicted
+
+
+class QueryService:
+    """Admission-batching Query front door (see module docstring).
+
+    ``submit`` is the transport-free core (the HTTP handler and the
+    in-process bench/tests call it directly): validate + budget-check a
+    request, enqueue it, return the :class:`_Pending` whose ``done``
+    event fires when its tick completes. One worker thread drains the
+    queue per tick and runs the single fused plan."""
+
+    def __init__(self, store_dir: str,
+                 cfg: Optional[ServiceConfig] = None) -> None:
+        self.cfg = cfg or ServiceConfig()
+        self.store = TraceStore(store_dir)
+        self.man = self.store.read_manifest()
+        self.cache = SummaryCacheLRU(self.store,
+                                     self.cfg.summary_budget_bytes)
+        self._queue: "queue.Queue[_Pending]" = queue.Queue()
+        self._stop = threading.Event()
+        self._worker: Optional[threading.Thread] = None
+        self._server: Optional[ThreadingHTTPServer] = None
+        self.ticks = 0
+        self.requests = 0
+        self.widths: List[int] = []
+
+    # -- admission ---------------------------------------------------------
+    def estimate_cells(self, queries: Sequence[Query]) -> int:
+        """Result-size estimate (reducer-state cells) for the budget:
+        bins x metrics x state width per query, before any shard is
+        touched. Group cardinality is unknown pre-scan, so this is the
+        G=1 lower bound — generous to requests, strict enough to stop
+        the pathological re-binnings the budget exists for."""
+        span = max(int(self.man.t_end - self.man.t_start), 1)
+        total = 0
+        for q in queries:
+            bins = (int(self.man.n_shards) if q.interval_ns is None
+                    else -(-span // int(q.interval_ns)))
+            width = _MOMENT_WIDTH
+            if "quantile" in q.canonical_reducers:
+                width += N_BUCKETS
+            total += bins * len(q.canonical_metrics) * width
+        return total
+
+    def submit(self, queries: Sequence[Query]) -> _Pending:
+        """Budget-check and enqueue one request for the next tick."""
+        queries = list(queries)
+        if not queries:
+            raise ValueError("empty query batch")
+        cells = self.estimate_cells(queries)
+        if cells > self.cfg.max_cells_per_request:
+            raise BudgetExceeded(
+                f"request estimates {cells:,} result cells, over the "
+                f"{self.cfg.max_cells_per_request:,} per-request budget")
+        pending = _Pending(queries=queries)
+        self.requests += 1
+        self._queue.put(pending)
+        return pending
+
+    # -- the tick ----------------------------------------------------------
+    def drain_once(self, block_s: float = 0.1) -> int:
+        """Collect every request arriving within one tick window and run
+        them as ONE fused plan. Returns the number of requests served
+        (0 = queue stayed empty). The worker loop calls this forever;
+        tests call it directly for deterministic batching."""
+        try:
+            batch = [self._queue.get(timeout=block_s)]
+        except queue.Empty:
+            return 0
+        deadline = time.monotonic() + self.cfg.tick_ms / 1000.0
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            try:
+                batch.append(self._queue.get(timeout=remaining))
+            except queue.Empty:
+                break
+        # opportunistic: anything already queued rides along even if it
+        # landed just past the deadline
+        while True:
+            try:
+                batch.append(self._queue.get_nowait())
+            except queue.Empty:
+                break
+        self._run_tick(batch)
+        return len(batch)
+
+    def _run_tick(self, batch: List[_Pending]) -> None:
+        all_queries = [q for p in batch for q in p.queries]
+        width = len(all_queries)
+        try:
+            qplan = QueryPlan.compile(self.store, all_queries,
+                                      backend=self.cfg.backend)
+            results = qplan.execute(use_cache=True)
+        except Exception as e:          # noqa: BLE001 — fail the tick,
+            for p in batch:             # not the service
+                p.error = (500, f"{type(e).__name__}: {e}")
+                p.done.set()
+            return
+        self.ticks += 1
+        self.widths.append(width)
+        self.cache.touch([lane.summary_key for lane in qplan.lanes
+                          if lane.summary_key])
+        evicted = self.cache.evict()
+        tick_info = {"fused_width": width,
+                     "batched_fused": width > 1,
+                     "n_requests": len(batch),
+                     "evicted": evicted}
+        off = 0
+        for p in batch:
+            p.results = [
+                _render_result(qr)
+                for qr in results[off:off + len(p.queries)]]
+            off += len(p.queries)
+            p.tick_info = tick_info
+            p.done.set()
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self, serve_http: bool = True) -> "QueryService":
+        self._worker = threading.Thread(target=self._loop, daemon=True,
+                                        name="query-service-tick")
+        self._worker.start()
+        if serve_http:
+            handler = _make_handler(self)
+            self._server = _Server((self.cfg.host, self.cfg.port),
+                                   handler)
+            self.cfg.port = self._server.server_address[1]  # port 0 case
+            threading.Thread(target=self._server.serve_forever,
+                             daemon=True,
+                             name="query-service-http").start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._server is not None:
+            self._server.shutdown()
+            self._server.server_close()
+            self._server = None
+        if self._worker is not None:
+            self._worker.join(timeout=5.0)
+            self._worker = None
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            self.drain_once()
+
+    def stats(self) -> Dict:
+        widths = self.widths[-1024:]
+        return {
+            "ticks": self.ticks,
+            "requests": self.requests,
+            "max_fused_width": max(widths, default=0),
+            "mean_fused_width": (float(np.mean(widths)) if widths
+                                 else 0.0),
+            "evictions": self.cache.evictions,
+            "io_counts": dict(self.store.io_counts),
+        }
+
+
+def _render_result(qr) -> Dict:
+    """JSON-safe answer for one query: per-(group, metric) moment
+    summary folded over bins, anomaly count when the query fences, and
+    the engine's execution provenance."""
+    res = qr.result
+    g = res.grouped
+    groups: Dict[str, Dict] = {}
+    if g is not None:
+        # (n_bins, G, M) moments folded over the bin axis
+        cnt = g.count.sum(axis=0)                       # (G, M)
+        tot = g.sum.sum(axis=0)
+        with np.errstate(invalid="ignore", divide="ignore"):
+            mean = np.where(cnt > 0, tot / np.maximum(cnt, 1), 0.0)
+        mn = np.where(cnt > 0, np.min(
+            np.where(g.count > 0, g.min, np.inf), axis=0), 0.0)
+        mx = np.where(cnt > 0, np.max(
+            np.where(g.count > 0, g.max, -np.inf), axis=0), 0.0)
+        for gi, gk in enumerate(np.asarray(res.group_keys).ravel()):
+            groups[f"{float(gk):g}"] = {
+                str(m): {"count": int(cnt[gi, mi]),
+                         "mean": float(mean[gi, mi]),
+                         "min": float(mn[gi, mi]),
+                         "max": float(mx[gi, mi])}
+                for mi, m in enumerate(res.metrics)}
+    out = {
+        "query": qr.query.to_spec(),
+        "n_samples": int(res.stats.count.sum()),
+        "n_bins": int(res.plan.n_shards),
+        "group_by": res.group_by,
+        "groups": groups,
+        "cache_hit": bool(qr.cache_hit),
+        "recomputed_shards": int(qr.recomputed_shards),
+        "partial_hits": int(qr.partial_hits),
+        "shards_pruned": int(qr.shards_pruned),
+        "rows_scanned": int(qr.rows_scanned),
+        "rows_filtered": int(qr.rows_filtered),
+        "provenance": qr.provenance(),
+    }
+    if qr.query.anomaly_score != "mean":   # non-default: caller wants a fence
+        rep = report_for_query(res, qr.query)
+        out["anomalous_bins"] = int(np.asarray(rep.flags).sum())
+    return out
+
+
+def _make_handler(service: QueryService):
+    class Handler(BaseHTTPRequestHandler):
+        protocol_version = "HTTP/1.1"
+
+        def log_message(self, *args):   # noqa: D102 — quiet server
+            pass
+
+        def _send(self, code: int, payload: Dict) -> None:
+            body = json.dumps(payload).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def do_GET(self):               # noqa: N802 (http.server API)
+            if self.path == "/healthz":
+                self._send(200, {"ok": True})
+            elif self.path == "/stats":
+                self._send(200, service.stats())
+            else:
+                self._send(404, {"error": f"no route {self.path}"})
+
+        def do_POST(self):              # noqa: N802 (http.server API)
+            if self.path.rstrip("/") != "/query":
+                self._send(404, {"error": f"no route {self.path}"})
+                return
+            try:
+                n = int(self.headers.get("Content-Length", 0))
+                specs = json.loads(self.rfile.read(n).decode() or "[]")
+                if isinstance(specs, dict):
+                    specs = [specs]
+                queries = [Query.from_spec(s) for s in specs]
+            except (ValueError, TypeError, KeyError) as e:
+                self._send(400, {"error": f"bad query spec: {e}"})
+                return
+            try:
+                pending = service.submit(queries)
+            except BudgetExceeded as e:
+                self._send(413, {"error": str(e)})
+                return
+            except ValueError as e:
+                self._send(400, {"error": str(e)})
+                return
+            if not pending.done.wait(service.cfg.request_timeout_s):
+                self._send(504, {"error": "tick timed out"})
+                return
+            if pending.error is not None:
+                self._send(pending.error[0], {"error": pending.error[1]})
+                return
+            self._send(200, {"results": pending.results,
+                             "tick": pending.tick_info})
+
+    return Handler
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="serve the declarative Query API over a trace store")
+    ap.add_argument("--store", required=True,
+                    help="trace-store directory to serve")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8321)
+    ap.add_argument("--tick-ms", type=float, default=10.0,
+                    help="admission-batch window (one fused plan/tick)")
+    ap.add_argument("--backend", default="serial",
+                    choices=["serial", "process", "jax"])
+    ap.add_argument("--max-cells", type=int, default=50_000_000,
+                    help="per-request result-cell budget (HTTP 413)")
+    ap.add_argument("--summary-budget-mb", type=float, default=256.0,
+                    help="summary-store byte budget for LRU eviction "
+                         "(0 = unbounded)")
+    args = ap.parse_args()
+    cfg = ServiceConfig(
+        tick_ms=args.tick_ms, backend=args.backend,
+        max_cells_per_request=args.max_cells,
+        summary_budget_bytes=(int(args.summary_budget_mb * 1024 * 1024)
+                              or None),
+        host=args.host, port=args.port)
+    svc = QueryService(args.store, cfg).start()
+    print(f"query service on http://{cfg.host}:{cfg.port} "
+          f"(store={args.store}, tick={cfg.tick_ms}ms, "
+          f"backend={cfg.backend})", flush=True)
+    try:
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        svc.stop()
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ kernel family is ranked top of the DiffReport and flips the verdict,
 with io_counts proving one fused scan per cold store and zero reads
 when both summaries are warm."""
 
+import os
 import random
 import shutil
 
@@ -216,27 +217,78 @@ def test_injected_slowdown_ranked_top_and_flips_verdict(stores):
     assert lax.verdict == "pass"
 
 
+def _drop_diff_cache(store: str) -> None:
+    for name in os.listdir(store):
+        if name.startswith("diff_") and name.endswith(".json"):
+            os.remove(os.path.join(store, name))
+
+
 def test_diff_is_fused_and_warm_diff_reads_zero_shards(fresh_stores):
+    """The three cost tiers, each labeled by its own provenance: cold =
+    one fused scan per store, summary-warm = zero shard reads, repeat =
+    the persisted diff report loads without running any query."""
     pipe = _pipe()
     n_shards = TraceStore(fresh_stores["a"]).read_manifest().n_shards
     cold = pipe.diff(fresh_stores["a"], fresh_stores["c"])
     # exactly ONE scan of each store's shard files, no re-reads
+    assert not cold.from_cache
     assert cold.shard_reads_a == n_shards
     assert cold.shard_reads_b == n_shards
+    # summary-warm (diff-result cache dropped): verdict off the cached
+    # sketches alone
+    _drop_diff_cache(fresh_stores["c"])
     warm = pipe.diff(fresh_stores["a"], fresh_stores["c"])
+    assert not warm.from_cache
     assert warm.shard_reads_a == 0 and warm.shard_reads_b == 0
-    # deterministic: the machine verdict is identical cold vs warm
-    ra, rw = cold.to_record(), warm.to_record()
-    for r in (ra, rw):
+    # repeat: the report warm persisted is still valid — pure load
+    cached = pipe.diff(fresh_stores["a"], fresh_stores["c"])
+    assert cached.from_cache
+    assert "diff-result cache hit" in cached.provenance()
+    # deterministic: the machine verdict is identical across all tiers
+    ra, rw, rc = cold.to_record(), warm.to_record(), cached.to_record()
+    for r in (ra, rw, rc):
         r.pop("seconds")
         r.pop("shard_reads_a")
         r.pop("shard_reads_b")
-    assert ra == rw
+        r.pop("diff_cached")
+    assert ra == rw == rc
+    # full fidelity through the cache: per-group shift arrays intact
+    for gw, gc in zip(warm.groups, cached.groups):
+        np.testing.assert_array_equal(gw.bin_shift, gc.bin_shift)
+        np.testing.assert_array_equal(gw.top_windows, gc.top_windows)
+
+
+def test_diff_cache_invalidated_by_store_change(fresh_stores):
+    """A shard rewrite on either store must miss the diff-result cache;
+    so must different thresholds (same stores)."""
+    pipe = _pipe()
+    first = pipe.diff(fresh_stores["a"], fresh_stores["c"])
+    assert not first.from_cache
+    assert pipe.diff(fresh_stores["a"], fresh_stores["c"]).from_cache
+    # different thresholds: same key (filename), different fingerprint
+    lax = pipe.diff(fresh_stores["a"], fresh_stores["c"],
+                    thresholds=DiffThresholds(mean_ratio=10.0,
+                                              p99_ratio=10.0,
+                                              shift_octaves=5.0))
+    assert not lax.from_cache
+    # rewrite one shard of store A in place: fingerprint moves, cache
+    # misses, the recomputed report matches the first bit-for-bit
+    ts = TraceStore(fresh_stores["a"])
+    ts.write_shard(0, ts.read_shard(0))
+    again = pipe.diff(fresh_stores["a"], fresh_stores["c"])
+    assert not again.from_cache
+    assert again.verdict == first.verdict
+    assert [g.name_a for g in again.groups] == \
+        [g.name_a for g in first.groups]
 
 
 def test_process_backend_diff_matches_serial(stores):
+    _drop_diff_cache(stores["c"])      # force a real serial compute
     serial = _pipe("serial").diff(stores["a"], stores["c"])
+    assert not serial.from_cache
+    _drop_diff_cache(stores["c"])      # and a real process compute
     proc = _pipe("process").diff(stores["a"], stores["c"])
+    assert not proc.from_cache
     assert proc.verdict == serial.verdict
     assert [g.name_a for g in proc.groups] == \
         [g.name_a for g in serial.groups]

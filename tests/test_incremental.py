@@ -15,7 +15,8 @@ from repro.core import (GenerationConfig, PipelineConfig, SyntheticSpec,
                         run_append, run_generation, trace_remainder,
                         truncate_trace, write_rank_db)
 from repro.core.sharding import ShardPlan
-from repro.core.tracestore import StoreManifest, partial_filename
+from repro.core.tracestore import (StoreManifest, pack_filename,
+                                   partial_filename)
 
 METRICS = ["k_stall", "m_duration"]
 SUITE = ("moments", "quantile")
@@ -544,20 +545,24 @@ def test_fresh_partial_write_crash_leaves_nothing(tmp_path):
     assert not store.has_partial(0, "cafe0123cafe0123")
 
 
-def test_corrupt_partial_is_miss_not_crash(growing_trace, tmp_path):
+def test_corrupt_pack_footer_is_miss_not_crash(growing_trace, tmp_path):
+    """A torn/corrupt partial-pack footer makes every entry of that
+    shard a MISS (clean rescan), never a crash — and the rescan's write
+    rewrites the pack clean."""
     ds, paths, cutoff = growing_trace
     store = _base_store(ds, paths, cutoff, str(tmp_path / "s"))
     first = run_aggregation(store, metrics=METRICS)
     qkey = store.partial_key((first.plan.t_start, first.plan.t_end,
                               first.plan.n_shards), METRICS, None)
-    path = os.path.join(store.root, partial_filename(0, qkey))
-    assert os.path.exists(path)
+    assert store.has_partial(0, qkey)
+    path = os.path.join(store.root, pack_filename(0))
     with open(path, "wb") as f:
-        f.write(b"not an npy file at all")
+        f.write(b"not a pack file at all")
     store.clear_summaries()      # shards unchanged: only partials probed
     again = run_aggregation(TraceStore(store.root), metrics=METRICS)
     assert 0 in again.recomputed_shards          # recomputed, no crash
     np.testing.assert_array_equal(first.stats.count, again.stats.count)
+    assert TraceStore(store.root).has_partial(0, qkey)   # self-healed
 
 
 # --- garbage collection -----------------------------------------------------

@@ -18,7 +18,7 @@ from repro.core import (GenerationConfig, PipelineConfig, SyntheticSpec,
                         generate_synthetic, run_aggregation, run_append,
                         run_generation, trace_remainder, truncate_trace,
                         write_rank_db)
-from repro.core.tracestore import partial_filename
+from repro.core.tracestore import pack_filename
 
 METRICS = ["k_stall", "m_duration"]
 SUITE = ("moments", "quantile")
@@ -140,10 +140,10 @@ def test_jax_corrupt_device_partial_falls_back_to_rescan(grown_store):
     qkey = store.partial_key((plan.t_start, plan.t_end, plan.n_shards),
                              METRICS, "m_kind", precision="float32",
                              reducers=("moments", "quantile"))
-    path = os.path.join(store.root, partial_filename(5, qkey))
-    assert os.path.exists(path)
+    assert store.has_partial(5, qkey)
+    path = os.path.join(store.root, pack_filename(5))
     with open(path, "wb") as f:
-        f.write(b"torn device partial")
+        f.write(b"torn device partial pack")
     store.clear_summaries()
     again = run_aggregation(TraceStore(out), metrics=METRICS,
                             group_by="m_kind", reducers=SUITE,

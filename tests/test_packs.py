@@ -1,0 +1,208 @@
+"""Consolidated partial-pack tests: compaction (planted stale qkeys
+dropped, live fingerprints survive), bit-identity of pack-served
+partials against the pre-pack per-file layout (byte-identical summary
+files), the io_counts-proven fused-batch IO reduction (logical
+per-entry counts vs physical pack operations), and thread-safety of the
+io_counts tallies under a hammering writer/reader mix."""
+
+import io
+import os
+import shutil
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (Query, SyntheticSpec, TraceStore,
+                        generate_synthetic, run_aggregation,
+                        run_generation, run_queries, write_rank_db)
+from repro.core.tracestore import pack_filename, partial_filename
+
+METRICS = ["k_stall", "m_duration", "m_bytes"]
+
+QUERIES = [
+    Query(metrics=("k_stall",), group_by="m_kind"),
+    Query(metrics=("m_duration", "m_bytes"), group_by="m_kind",
+          ranks=(0,)),
+    Query(metrics=("k_stall", "m_duration"),
+          reducers=("moments", "quantile")),
+    Query(metrics=("m_bytes",), group_by="k_device"),
+]
+
+
+@pytest.fixture(scope="module")
+def base(tmp_path_factory):
+    spec = SyntheticSpec(n_ranks=2, kernels_per_rank=3000,
+                         memcpys_per_rank=500, duration_s=30.0, seed=23)
+    ds = generate_synthetic(spec)
+    root = tmp_path_factory.mktemp("pack_base")
+    paths = []
+    for tr in ds.traces:
+        p = str(root / f"rank{tr.rank}.sqlite")
+        write_rank_db(p, tr)
+        paths.append(p)
+    store_dir = str(root / "store")
+    run_generation(paths, store_dir, n_ranks=2)
+    return store_dir
+
+
+@pytest.fixture
+def store(base, tmp_path):
+    dst = str(tmp_path / "s")
+    shutil.copytree(base, dst)
+    return TraceStore(dst)
+
+
+# --- compaction -------------------------------------------------------------
+
+def test_compact_drops_planted_stale_qkeys_keeps_live(store):
+    """Entries with a stale fingerprint or old engine version are
+    dropped by compaction; entries stamped with the live shard
+    fingerprint survive byte-for-byte."""
+    res = run_aggregation(store, metrics=METRICS, group_by="m_kind")
+    qkey = store.partial_key((res.plan.t_start, res.plan.t_end,
+                              res.plan.n_shards), METRICS, "m_kind")
+    live_before = store.read_partial(0, qkey)
+    assert live_before is not None
+
+    from repro.core.query import SUMMARY_VERSION
+    store.write_partials(0, {
+        "feedfeedfeedfeed": {                  # stale fingerprint
+            "version": np.asarray(SUMMARY_VERSION, np.int64),
+            "fingerprint": np.asarray([0, 1, 2], np.int64),
+            "bins": np.arange(3)},
+        "0ddba11deadbeef0": {                  # old engine version
+            "version": np.asarray(SUMMARY_VERSION - 1, np.int64),
+            "fingerprint": np.asarray(store.stat_shard(0), np.int64),
+            "bins": np.arange(3)},
+    })
+    assert len(store.partial_names(0)) == 3
+
+    dropped = store.compact_pack(0)
+    assert dropped == 2
+    assert store.partial_names(0) == [partial_filename(0, qkey)]
+    live_after = TraceStore(store.root).read_partial(0, qkey)
+    for k, v in live_before.items():
+        np.testing.assert_array_equal(v, live_after[k])
+    assert store.compact_pack(0) == 0          # idempotent no-op
+
+
+def test_gc_stale_compacts_packs_and_sweeps_legacy_files(store):
+    """gc_stale removes a whole pack whose shard file is gone AND any
+    pre-pack per-file partial failing the same liveness test."""
+    run_aggregation(store, metrics=METRICS)
+    n_shards = len(store.shard_indices())
+    assert len(store.partial_names()) == n_shards
+    # plant a legacy per-file partial with a dead fingerprint
+    buf = TraceStore._pack_arrays(
+        {"version": np.asarray(4, np.int64)},
+        {"version": 4, "fingerprint": [9, 9, 9]})
+    b = io.BytesIO()
+    np.save(b, buf)
+    legacy = os.path.join(store.root, partial_filename(0, "ace0ace0ace0ace0"))
+    with open(legacy, "wb") as f:
+        f.write(b.getvalue())
+    # orphan one pack by deleting its shard file out of band
+    os.remove(os.path.join(store.root, f"shard_{n_shards - 1:06d}.npz"))
+
+    store.gc_stale()
+    assert not os.path.exists(legacy)
+    assert not os.path.exists(
+        os.path.join(store.root, pack_filename(n_shards - 1)))
+    assert len(store.partial_names()) == n_shards - 1
+
+
+# --- bit-identity vs the pre-pack per-file layout ---------------------------
+
+def _summary_bytes(root):
+    out = {}
+    for name in sorted(os.listdir(root)):
+        if name.startswith("summary_") and name.endswith(".npz"):
+            with open(os.path.join(root, name), "rb") as f:
+                out[name] = f.read()
+    return out
+
+
+def test_pack_served_partials_byte_identical_to_per_file_path(store):
+    """Regression pin for the layout migration: a store whose partials
+    live as pre-pack ``partial_{idx}_{qkey}.npy`` files (the migration
+    read path) must merge into byte-identical summary files to the same
+    partials served from consolidated packs."""
+    for q in QUERIES:
+        run_queries(store, [q])
+    packs = _summary_bytes(store.root)
+    assert packs
+
+    # explode every pack entry into the legacy per-file layout
+    legacy_root = store.root
+    for idx in store.shard_indices():
+        hit = store._load_pack(idx, want_raw=True)
+        if hit is None or hit[1] is None:
+            continue
+        for qkey, (off, ln, _meta) in hit[1].items():
+            b = io.BytesIO()
+            np.save(b, np.frombuffer(hit[3][off:off + ln], np.uint8))
+            with open(os.path.join(legacy_root,
+                                   partial_filename(idx, qkey)),
+                      "wb") as f:
+                f.write(b.getvalue())
+        os.remove(os.path.join(legacy_root, pack_filename(idx)))
+
+    legacy_store = TraceStore(legacy_root)
+    legacy_store.clear_summaries()
+    for q in QUERIES:
+        res = run_queries(legacy_store, [q])[0]
+        assert res.result.partial_hits > 0     # served from legacy files
+    assert legacy_store.io_counts["pack_reads"] == 0
+    assert _summary_bytes(legacy_root) == packs
+
+
+# --- the fused-batch IO claim (io_counts-proven) ----------------------------
+
+def test_fused_batch_pack_io_at_least_1p5x_fewer_ops(store):
+    """The acceptance bar: a fused warm re-analysis over a many-lane
+    batch performs >= 1.5x fewer physical partial-IO operations than the
+    per-file layout would (logical entry counts == what one file per
+    (lane, shard) used to cost)."""
+    run_queries(store, QUERIES)                # cold: packs written
+    w_logical = store.io_counts["partial_writes"]
+    w_physical = store.io_counts["pack_writes"]
+    assert w_logical >= 1.5 * w_physical
+
+    store.clear_summaries()
+    fresh = TraceStore(store.root)
+    results = run_queries(fresh, QUERIES)      # warm: classify + merge
+    assert all(r.result.partial_hits > 0 for r in results)
+    assert fresh.io_counts["shard_reads"] == 0
+    r_logical = fresh.io_counts["partial_reads"]
+    r_physical = fresh.io_counts["pack_reads"]
+    assert r_logical >= 1.5 * r_physical
+    # the consolidation is per-shard exact: one physical read serves
+    # every lane of a shard
+    assert r_physical == len(fresh.shard_indices())
+
+
+# --- thread-safe io_counts --------------------------------------------------
+
+def test_io_counts_thread_safe_under_concurrent_updates(tmp_path):
+    """N threads hammering reads+writes on one TraceStore must never
+    lose a counter increment (the plain-dict += race this pins)."""
+    store = TraceStore(str(tmp_path / "s"))
+    payload = {"version": np.asarray(4, np.int64),
+               "fingerprint": np.asarray([1, 2, 3], np.int64),
+               "bins": np.arange(4)}
+    n_threads, n_iter = 8, 50
+
+    def work(t):
+        for i in range(n_iter):
+            store.write_partial(t, f"{t:08x}{i % 4:08x}", payload)
+            store.read_partial(t, f"{t:08x}{i % 4:08x}")
+
+    threads = [threading.Thread(target=work, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert store.io_counts["partial_writes"] == n_threads * n_iter
+    assert store.io_counts["partial_reads"] == n_threads * n_iter

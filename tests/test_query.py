@@ -442,8 +442,9 @@ def test_pre_query_scheme_entries_miss_and_are_gcd(store):
 
     store.write_manifest(man)                    # triggers gc_stale
     assert "00ddba11deadbeef" not in store.summary_keys()
-    assert not os.path.exists(os.path.join(
-        store.root, partial_filename(0, "00ddba11deadbeef")))
+    assert not store.has_partial(0, "00ddba11deadbeef")
+    assert partial_filename(0, "00ddba11deadbeef") \
+        not in store.partial_names(0)
     # the recompute's own (version-4) entries survived the sweep
     assert os.path.exists(os.path.join(store.root,
                                        summary_filename(cur_key)))

@@ -1,0 +1,172 @@
+"""Query-serving front door tests: HTTP round-trip correctness against
+direct ``run_queries``, deterministic admission batching (N submitted
+requests drain into ONE fused plan), the per-request result-size budget
+(HTTP 413), and the byte-budgeted summary LRU — which must never evict a
+key touched within the current tick."""
+
+import json
+import os
+import shutil
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import (Query, SyntheticSpec, TraceStore,
+                        generate_synthetic, run_generation, run_queries,
+                        write_rank_db)
+from repro.core.tracestore import summary_filename
+from repro.serve.query_service import (BudgetExceeded, QueryService,
+                                       ServiceConfig)
+
+
+@pytest.fixture(scope="module")
+def base(tmp_path_factory):
+    spec = SyntheticSpec(n_ranks=2, kernels_per_rank=2000,
+                         memcpys_per_rank=300, duration_s=20.0, seed=7)
+    ds = generate_synthetic(spec)
+    root = tmp_path_factory.mktemp("svc_base")
+    paths = []
+    for tr in ds.traces:
+        p = str(root / f"rank{tr.rank}.sqlite")
+        write_rank_db(p, tr)
+        paths.append(p)
+    store_dir = str(root / "store")
+    run_generation(paths, store_dir, n_ranks=2)
+    return store_dir
+
+
+@pytest.fixture
+def store_dir(base, tmp_path):
+    dst = str(tmp_path / "s")
+    shutil.copytree(base, dst)
+    return dst
+
+
+def _post(port, specs, timeout=60):
+    req = urllib.request.Request(
+        f"http://127.0.0.1:{port}/query",
+        data=json.dumps(specs).encode(),
+        headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def test_http_round_trip_matches_direct_run_queries(store_dir):
+    """A served answer is the engine's answer: group counts/means from
+    the HTTP JSON equal a direct ``run_queries`` on the same store, and
+    the response carries the engine's provenance fields."""
+    svc = QueryService(store_dir, ServiceConfig(tick_ms=5.0, port=0))
+    svc.start(serve_http=True)
+    try:
+        status, body = _post(svc.cfg.port,
+                             [{"metrics": ["k_stall"],
+                               "group_by": "m_kind"}])
+        assert status == 200
+        r = body["results"][0]
+        direct = run_queries(
+            TraceStore(store_dir),
+            [Query(metrics=("k_stall",), group_by="m_kind")])[0]
+        g = direct.result.grouped
+        cnt = g.count.sum(axis=0)
+        tot = g.sum.sum(axis=0)
+        for gi, gk in enumerate(
+                np.asarray(direct.result.group_keys).ravel()):
+            got = r["groups"][f"{float(gk):g}"]["k_stall"]
+            assert got["count"] == int(cnt[gi, 0])
+            np.testing.assert_allclose(got["mean"],
+                                       tot[gi, 0] / cnt[gi, 0])
+        assert r["n_samples"] == int(cnt.sum())
+        for f in ("cache_hit", "recomputed_shards", "partial_hits",
+                  "shards_pruned", "rows_scanned", "provenance"):
+            assert f in r
+        # second ask: pure summary hit through the shared store
+        status, body = _post(svc.cfg.port,
+                             [{"metrics": ["k_stall"],
+                               "group_by": "m_kind"}])
+        assert status == 200
+        assert body["results"][0]["cache_hit"]
+    finally:
+        svc.stop()
+
+
+def test_submitted_requests_drain_into_one_fused_plan(store_dir):
+    """Deterministic batching (no worker thread): three requests with
+    five queries total, submitted before one ``drain_once``, ride ONE
+    fused plan — every response reports the full fused width and
+    ``batched_fused``."""
+    svc = QueryService(store_dir, ServiceConfig(tick_ms=1.0))
+    pendings = [
+        svc.submit([Query(metrics=("k_stall",), group_by="m_kind")]),
+        svc.submit([Query(metrics=("m_duration",), ranks=(0,)),
+                    Query(metrics=("m_bytes",), group_by="k_device")]),
+        svc.submit([Query(metrics=("k_stall",), group_by="m_kind"),
+                    Query(metrics=("k_stall",), anomaly_score="p99")]),
+    ]
+    served = svc.drain_once(block_s=0.0)
+    assert served == 3
+    for p in pendings:
+        assert p.done.is_set() and p.error is None
+        assert p.tick_info["fused_width"] == 5
+        assert p.tick_info["batched_fused"] is True
+        assert len(p.results) == len(p.queries)
+    assert pendings[2].results[1]["anomalous_bins"] >= 0
+    assert svc.stats()["max_fused_width"] == 5
+    assert svc.drain_once(block_s=0.0) == 0        # queue drained
+
+
+def test_over_budget_request_is_rejected_413(store_dir):
+    """A pathological re-binning (1 us bins over the whole trace) blows
+    the estimated result-cell budget at ADMISSION — BudgetExceeded from
+    submit, HTTP 413 over the wire — without ever touching a shard."""
+    svc = QueryService(store_dir, ServiceConfig(
+        tick_ms=1.0, max_cells_per_request=100_000, port=0))
+    with pytest.raises(BudgetExceeded):
+        svc.submit([Query(metrics=("k_stall",), interval_ns=1_000)])
+    svc.start(serve_http=True)
+    try:
+        status, body = _post(svc.cfg.port,
+                             [{"metrics": ["k_stall"],
+                               "interval_ns": 1000}])
+        assert status == 413
+        assert "budget" in body["error"]
+        assert QueryService(store_dir).store.io_counts["shard_reads"] == 0
+    finally:
+        svc.stop()
+
+
+def test_lru_never_evicts_summary_read_within_same_tick(store_dir):
+    """Byte budget of 1: eviction pressure is permanent, yet each tick's
+    own summary keys survive that tick (a result can never be evicted
+    between compute and read-back); the PREVIOUS tick's keys are the
+    ones reclaimed."""
+    svc = QueryService(store_dir, ServiceConfig(
+        tick_ms=1.0, summary_budget_bytes=1))
+    q_a = Query(metrics=("k_stall",), group_by="m_kind")
+    q_b = Query(metrics=("m_duration",), group_by="m_kind")
+
+    p = svc.submit([q_a])
+    svc.drain_once(block_s=0.0)
+    assert p.error is None and p.tick_info["evicted"] == 0
+    keys_after_a = set(svc.store.summary_keys())
+    assert len(keys_after_a) == 1                  # A survives its tick
+
+    p = svc.submit([q_b])
+    svc.drain_once(block_s=0.0)
+    assert p.error is None and p.tick_info["evicted"] == 1
+    keys_after_b = set(svc.store.summary_keys())
+    assert len(keys_after_b) == 1                  # B survives, A gone
+    assert keys_after_b != keys_after_a
+    (key_b,) = keys_after_b
+    assert os.path.exists(os.path.join(svc.store.root,
+                                       summary_filename(key_b)))
+    # evicting a summary is safe: A recomputes from partials, no rescan
+    fresh = TraceStore(store_dir)
+    res = run_queries(fresh, [q_a])[0]
+    assert res.result.partial_hits > 0
+    assert fresh.io_counts["shard_reads"] == 0
