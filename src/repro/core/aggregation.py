@@ -92,7 +92,10 @@ bit-identically.
 
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
+import os
+import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -111,7 +114,7 @@ __all__ = [
     "AggregationResult", "BinStats", "QuantileSketch", "GroupedPartial",
     "Query", "QueryPlan", "QueryResult", "ShardPartial", "bin_samples",
     "bin_samples_grouped", "compute_shard_partial", "compute_partials",
-    "compute_lane_partials", "compute_lane_partials_jax",
+    "ScanPool", "compute_lane_partials", "compute_lane_partials_jax",
     "compute_partials_jax", "classify_shards", "execute_plan",
     "rank_partial_from_shards", "load_rank_grouped", "load_rank_partials",
     "round_robin_merge", "run_aggregation", "run_incremental",
@@ -578,10 +581,151 @@ def compute_partials(store: TraceStore, indices: Sequence[int],
     return out
 
 
+class ScanPool:
+    """Persistent scan workers + ONE pack writer for fused execution.
+
+    Spawned once per :class:`~repro.core.pipeline.VariabilityPipeline` /
+    query-service lifetime (never per call): the scan executor fans the
+    dirty-shard union of a fused plan out across ``workers`` threads,
+    and the dedicated single-thread ``writer`` serializes EVERY pack
+    append issued through the pool — including appends from ticks whose
+    plans overlap in a pipelined service — so the pack read-modify-write
+    contract of :meth:`~repro.core.tracestore.TraceStore.write_partials`
+    holds no matter how many scans are in flight.
+
+    Bit-identity: workers take disjoint ``(shard, [lanes])`` chunks, so
+    each :class:`ShardPartial` stays a pure function of its own shard's
+    rows, and the merge tail (:func:`rank_partial_from_shards`) folds in
+    fixed shard-index order regardless of completion order — a pooled
+    scan is bit-identical to the serial one (tested).
+
+    Chunking is work-stealing style, after the process backend: the work
+    list splits into ~``workers * 4`` contiguous chunks queued on the
+    executor, so a straggler shard delays one small chunk, not an even
+    1/workers split. ``busy_s`` / ``tasks`` feed the service's
+    utilization counters.
+    """
+
+    def __init__(self, workers: int = 0):
+        self.workers = int(workers) if workers else (os.cpu_count() or 1)
+        if self.workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self._lock = threading.Lock()
+        self._scan = None
+        self._writer = None
+        self._closed = False
+        self.busy_s = 0.0
+        self.tasks = 0
+        self.started_at = time.monotonic()
+
+    @property
+    def parallel(self) -> bool:
+        return self.workers > 1
+
+    def _executors(self):
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("ScanPool is closed")
+            if self._scan is None:
+                self._scan = concurrent.futures.ThreadPoolExecutor(
+                    max_workers=self.workers,
+                    thread_name_prefix="scan-worker")
+                self._writer = concurrent.futures.ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="pack-writer")
+            return self._scan, self._writer
+
+    def submit_write(self, fn, *args):
+        """Queue a pack append on THE single writer thread."""
+        _, writer = self._executors()
+        return writer.submit(fn, *args)
+
+    def run_chunks(self, fn, chunks: Sequence[Sequence[Any]]) -> list:
+        """Run ``fn(chunk)`` across the scan workers; returns results in
+        chunk order (completion order never leaks to callers)."""
+        scan, _ = self._executors()
+
+        def timed(chunk):
+            t0 = time.monotonic()
+            try:
+                return fn(chunk)
+            finally:
+                with self._lock:
+                    self.busy_s += time.monotonic() - t0
+                    self.tasks += 1
+
+        futs = [scan.submit(timed, c) for c in chunks]
+        return [f.result() for f in futs]
+
+    def utilization(self) -> dict:
+        """Counters for ``/stats``: cumulative busy seconds per worker
+        pool vs wall time since pool creation (bounded memory — two
+        floats and an int, not per-task lists)."""
+        with self._lock:
+            wall = max(time.monotonic() - self.started_at, 1e-9)
+            return {
+                "workers": self.workers,
+                "tasks": self.tasks,
+                "busy_s": round(self.busy_s, 6),
+                "utilization": round(
+                    self.busy_s / (wall * self.workers), 6),
+            }
+
+    def close(self) -> None:
+        with self._lock:
+            scan, writer = self._scan, self._writer
+            self._scan = self._writer = None
+            self._closed = True
+        if scan is not None:
+            scan.shutdown(wait=True)
+        if writer is not None:
+            writer.shutdown(wait=True)
+
+    def __enter__(self) -> "ScanPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def _scan_lane_items(store: TraceStore,
+                     items: Sequence[Tuple[int, Sequence[int]]],
+                     lanes: Sequence[LanePlan], persist: bool,
+                     submit_write,
+                     ) -> Tuple[Dict[int, List[ShardPartial]], list]:
+    """Scan one worker's chunk of ``(shard, [lane ids])`` items: each
+    shard file is read once, every lane riding it reduces off the shared
+    columns, and all lanes' payloads batch into ONE pack append handed
+    to ``submit_write`` (the single writer). Returns the chunk's
+    ``{lane -> partials}`` plus the pending write futures."""
+    fresh: Dict[int, List[ShardPartial]] = collections.defaultdict(list)
+    pending = []
+    for idx, lane_ids in items:
+        if not store.has_shard(int(idx)):
+            continue
+        fp = store.stat_shard(int(idx))
+        cols = store.read_shard(int(idx))
+        batch = {}
+        for li in lane_ids:
+            lane = lanes[li]
+            sp = compute_shard_partial(
+                store, int(idx), lane.plan, lane.metrics,
+                lane.query.group_by, lane.reducers, query=lane.query,
+                cols=cols)
+            if persist and lane.qkey and fp is not None:
+                batch[lane.qkey] = shard_partial_payload(
+                    sp, lane.plan, lane.metrics, lane.query.group_by, fp)
+            fresh[li].append(sp)
+        if batch:
+            pending.append(submit_write(store.write_partials,
+                                        int(idx), batch))
+    return fresh, pending
+
+
 def compute_lane_partials(store: TraceStore,
                           work_items: Sequence[Tuple[int, Sequence[int]]],
                           lanes: Sequence[LanePlan],
                           persist: bool = True,
+                          pool: Optional[ScanPool] = None,
                           ) -> Dict[int, List[ShardPartial]]:
     """The fused multi-query producer (host): every dirty shard file is
     read ONCE and each lane that needs it reduces its own metrics /
@@ -599,34 +743,52 @@ def compute_lane_partials(store: TraceStore,
     atomic/self-healing, and the single writer serializes against its
     own pack read-modify-write cycle. All futures are drained before
     returning, so callers observe fully persisted partials and any write
-    error surfaces here."""
-    import concurrent.futures
+    error surfaces here.
 
-    fresh: Dict[int, List[ShardPartial]] = collections.defaultdict(list)
-    pending = []
+    With a parallel ``pool``, the work list splits into disjoint
+    contiguous chunks scanned concurrently (shard reads and the numpy
+    reductions both release the GIL); appends still funnel through the
+    pool's single writer, and since every partial is a pure function of
+    its own shard and the merge tail folds in shard-index order, the
+    result is bit-identical to the serial scan. With ``pool=None`` (or a
+    1-worker pool) the scan runs inline with a call-scoped writer —
+    the pre-pool behavior, unchanged."""
+    if pool is not None and pool.parallel and len(work_items) > 1:
+        n_chunks = min(len(work_items), pool.workers * 4)
+        step = -(-len(work_items) // n_chunks)
+        chunks = [work_items[i:i + step]
+                  for i in range(0, len(work_items), step)]
+        outs = pool.run_chunks(
+            lambda items: _scan_lane_items(store, items, lanes, persist,
+                                           pool.submit_write),
+            chunks)
+        fresh: Dict[int, List[ShardPartial]] = collections.defaultdict(
+            list)
+        pending = []
+        for chunk_fresh, chunk_pending in outs:
+            # chunk order == shard order (contiguous splits of the
+            # sorted work list), so per-lane partial lists stay sorted
+            for li, sps in chunk_fresh.items():
+                fresh[li].extend(sps)
+            pending.extend(chunk_pending)
+        for f in pending:
+            f.result()
+        return fresh
+
+    if pool is not None:
+        # 1-worker pool: scan inline but keep appends on THE shared
+        # writer so concurrent ticks' pack ops stay serialized
+        fresh, pending = _scan_lane_items(store, work_items, lanes,
+                                          persist, pool.submit_write)
+        for f in pending:
+            f.result()
+        return fresh
+
     with concurrent.futures.ThreadPoolExecutor(max_workers=1) as writer:
-        for idx, lane_ids in work_items:
-            if not store.has_shard(int(idx)):
-                continue
-            fp = store.stat_shard(int(idx))
-            cols = store.read_shard(int(idx))
-            batch = {}
-            for li in lane_ids:
-                lane = lanes[li]
-                sp = compute_shard_partial(
-                    store, int(idx), lane.plan, lane.metrics,
-                    lane.query.group_by, lane.reducers, query=lane.query,
-                    cols=cols)
-                if persist and lane.qkey and fp is not None:
-                    batch[lane.qkey] = shard_partial_payload(
-                        sp, lane.plan, lane.metrics, lane.query.group_by,
-                        fp)
-                fresh[li].append(sp)
-            if batch:
-                pending.append(writer.submit(store.write_partials,
-                                             int(idx), batch))
-    for f in pending:
-        f.result()
+        fresh, pending = _scan_lane_items(store, work_items, lanes,
+                                          persist, writer.submit)
+        for f in pending:
+            f.result()
     return fresh
 
 
@@ -948,8 +1110,7 @@ def lookup_summary(store: TraceStore, plan: ShardPlan,
     if [str(m) for m in payload["metrics"]] != list(metrics):
         return key, None
     covered = payload.get("covered")
-    now = np.asarray(store.shard_fingerprint(),
-                     np.int64).reshape(-1, 3)
+    now = store.shard_fingerprint_array()
     if covered is None or not np.array_equal(covered, now):
         return key, None
     return key, result_from_summary(payload, time.perf_counter() - t0)
@@ -1119,7 +1280,8 @@ def _present(result: AggregationResult, lane: LanePlan,
 
 
 def execute_plan(qplan: QueryPlan, use_cache: bool = True,
-                 compute_fn=None) -> List[QueryResult]:
+                 compute_fn=None,
+                 pool: Optional[ScanPool] = None) -> List[QueryResult]:
     """Run a compiled query batch as ONE fused execution.
 
     Per lane: summary probe (a hit answers the query in O(n_bins) with
@@ -1134,7 +1296,11 @@ def execute_plan(qplan: QueryPlan, use_cache: bool = True,
 
     ``compute_fn(work_items, qplan, persist)`` overrides the producer
     (the process backend's work-stealing pool); the default dispatches
-    on ``qplan.backend``.
+    on ``qplan.backend``. ``pool`` hands the host producer a persistent
+    :class:`ScanPool` — dirty shards scan concurrently and pack appends
+    ride the pool's single writer; results stay bit-identical to the
+    serial scan (ignored by the jax backend and ``compute_fn``, which
+    bring their own parallelism).
     """
     t0 = time.perf_counter()
     store = qplan.store
@@ -1174,18 +1340,14 @@ def execute_plan(qplan: QueryPlan, use_cache: bool = True,
         live.append(i)
 
     if live:
-        all_indices = store.shard_indices()      # ONE directory listing
-        indices = [i for i in all_indices if i < qplan.n_shard_files]
-        strays = [i for i in all_indices if i >= qplan.n_shard_files]
-        # one stat pass serves every lane's dirty classification AND the
-        # summaries' covered fingerprints
-        stats = {i: store.stat_shard(i) for i in indices}
+        # ONE (memoized) stat pass serves every lane's dirty
+        # classification AND the summaries' covered fingerprints
+        snap = store.shard_stats()
+        indices = [i for i in sorted(snap) if i < qplan.n_shard_files]
+        stats = {i: snap[i] for i in indices}
         # covered must describe EVERY shard file (stray indices past the
         # manifest count included) to match lookup_summary's live compare
-        covered = sorted(
-            [fp for fp in stats.values() if fp is not None]
-            + [fp for i in strays
-               for fp in [store.stat_shard(i)] if fp is not None])
+        covered = sorted(snap.values())
         lane_clean: Dict[int, List[ShardPartial]] = {}
         lane_dirty: Dict[int, List[int]] = {}
         work: Dict[int, List[int]] = {}
@@ -1212,7 +1374,7 @@ def execute_plan(qplan: QueryPlan, use_cache: bool = True,
                                               persist=use_cache)
         else:
             fresh = compute_lane_partials(store, work_items, qplan.lanes,
-                                          persist=use_cache)
+                                          persist=use_cache, pool=pool)
         for i in live:
             lane = qplan.lanes[i]
             computed = fresh.get(i, [])
@@ -1254,14 +1416,16 @@ def execute_plan(qplan: QueryPlan, use_cache: bool = True,
 
 def run_queries(store: Union[str, TraceStore], queries: Sequence[Query],
                 n_ranks: Optional[int] = None, backend: str = "serial",
-                use_cache: bool = True) -> List[QueryResult]:
+                use_cache: bool = True,
+                pool: Optional[ScanPool] = None) -> List[QueryResult]:
     """Compile + execute a batch of declarative queries as one fused
     scan (``serial`` or ``jax`` backend; the process-pool backend is
     :meth:`repro.core.pipeline.VariabilityPipeline.query`). Results come
-    back in query order, each with execution provenance."""
+    back in query order, each with execution provenance. ``pool``
+    parallelizes the dirty-shard scan (see :class:`ScanPool`)."""
     qplan = QueryPlan.compile(store, list(queries), backend=backend,
                               n_ranks=n_ranks)
-    return qplan.execute(use_cache=use_cache)
+    return qplan.execute(use_cache=use_cache, pool=pool)
 
 
 def run_incremental(store: TraceStore, n_shard_files: int, plan: ShardPlan,
@@ -1295,12 +1459,11 @@ def run_incremental(store: TraceStore, n_shard_files: int, plan: ShardPlan,
     :func:`run_aggregation`, which canonicalize for you."""
     mlist = list(metrics)
     suite = normalize_reducers(reducers)
-    all_indices = store.shard_indices()      # ONE directory listing
-    indices = [i for i in all_indices if i < n_shard_files]
-    strays = [i for i in all_indices if i >= n_shard_files]
-    # one stat pass serves dirty classification AND the summary's covered
-    # fingerprints (stats on this container's fs are ~0.2 ms each)
-    stats = {i: store.stat_shard(i) for i in indices}
+    # ONE (memoized) stat pass serves dirty classification AND the
+    # summary's covered fingerprints
+    snap = store.shard_stats()
+    indices = [i for i in sorted(snap) if i < n_shard_files]
+    stats = {i: snap[i] for i in indices}
     qkey, clean, dirty = classify_shards(store, indices, plan, mlist,
                                          group_by, suite, use_cache,
                                          stats=stats, precision=precision)
@@ -1314,10 +1477,7 @@ def run_incremental(store: TraceStore, n_shard_files: int, plan: ShardPlan,
         clean + computed, n_shard_files, n_ranks, plan, len(mlist), suite)
     # covered must describe EVERY shard file (stray indices past the
     # manifest count included) to match lookup_summary's live compare
-    covered = sorted(
-        [fp for fp in stats.values() if fp is not None]
-        + [fp for i in strays
-           for fp in [store.stat_shard(i)] if fp is not None])
+    covered = sorted(snap.values())
     result = finalize_aggregation(store, plan, mlist, group_by, all_keys,
                                   dense, kind_parts, key, t0,
                                   reducers=suite, covered=covered)

@@ -65,8 +65,9 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from .aggregation import (AggregationResult, compute_lane_partials,
-                          DEFAULT_METRIC, DEFAULT_REDUCERS)
+from .aggregation import (AggregationResult, ScanPool,
+                          compute_lane_partials, DEFAULT_METRIC,
+                          DEFAULT_REDUCERS)
 from .query import (LanePlan, Query, QueryPlan, QueryResult,
                     diff_cache_key, diff_query)
 from .reducers import normalize_reducers
@@ -101,6 +102,13 @@ class PipelineConfig:
     # per-bin score the IQR fences run on: "mean"/"std"/"max"/"sum"
     # (moments) or "p50"/"p95"/"p99"/"iqr" (needs "quantile" in reducers)
     anomaly_score: str = "mean"
+    # scan workers for the SERIAL backend's fused dirty-shard scan:
+    # 1 = inline (default, the historical behavior), 0 = one per CPU,
+    # N > 1 = that many threads. The pool is spawned once per pipeline
+    # lifetime (see VariabilityPipeline.scan_pool) and its single
+    # pack-writer thread serializes all partial-cache appends; the
+    # process/jax backends bring their own parallelism and ignore it.
+    scan_workers: int = 1
 
     @property
     def metric_list(self) -> List[str]:
@@ -178,6 +186,32 @@ class VariabilityPipeline:
 
     def __init__(self, cfg: Optional[PipelineConfig] = None):
         self.cfg = cfg or PipelineConfig()
+        self._scan_pool: Optional[ScanPool] = None
+
+    @property
+    def scan_pool(self) -> Optional[ScanPool]:
+        """The pipeline-lifetime :class:`ScanPool` the serial backend's
+        fused scans share (``cfg.scan_workers != 1``), created on first
+        use — ONE pool per pipeline, never per call, so worker threads
+        and the single pack-writer persist across queries/appends.
+        ``None`` when the config keeps the inline scan."""
+        if self.cfg.backend != "serial" or self.cfg.scan_workers == 1:
+            return None
+        if self._scan_pool is None:
+            self._scan_pool = ScanPool(self.cfg.scan_workers)
+        return self._scan_pool
+
+    def close(self) -> None:
+        """Release the scan pool's threads (idempotent)."""
+        if self._scan_pool is not None:
+            self._scan_pool.close()
+            self._scan_pool = None
+
+    def __enter__(self) -> "VariabilityPipeline":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- phase 1 -------------------------------------------------------------
     def generate(self, db_paths: Sequence[str], out_dir: str,
@@ -314,7 +348,8 @@ class VariabilityPipeline:
             res = qplan.execute(
                 use_cache=self.cfg.use_summary_cache,
                 compute_fn=(self._pool_compute
-                            if self.cfg.backend == "process" else None))[0]
+                            if self.cfg.backend == "process" else None),
+                pool=self.scan_pool)[0]
             names = {int(i): str(n) for i, n in
                      qplan.store.read_manifest().extra.get(
                          "kernel_names", {}).items()}
@@ -362,7 +397,7 @@ class VariabilityPipeline:
         compute_fn = (self._pool_compute if cfg.backend == "process"
                       else None)
         return qplan.execute(use_cache=cfg.use_summary_cache,
-                             compute_fn=compute_fn)
+                             compute_fn=compute_fn, pool=self.scan_pool)
 
     def _pool_compute(self, work_items, qplan: QueryPlan, persist: bool):
         """Work-stealing scheduler for the fused dirty-shard scan: the

@@ -414,8 +414,8 @@ class QueryPlan:
                    n_ranks=int(n_ranks or man.n_ranks), backend=backend,
                    lanes=lanes)
 
-    def execute(self, use_cache: bool = True,
-                compute_fn=None) -> List[QueryResult]:
+    def execute(self, use_cache: bool = True, compute_fn=None,
+                pool=None) -> List[QueryResult]:
         from .aggregation import execute_plan
         return execute_plan(self, use_cache=use_cache,
-                            compute_fn=compute_fn)
+                            compute_fn=compute_fn, pool=pool)

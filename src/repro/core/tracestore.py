@@ -114,6 +114,7 @@ import itertools
 import json
 import os
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -184,6 +185,12 @@ class TraceStore:
     # long-lived serving instance without an explicit byte budget —
     # packs are O(active queries x one shard's touched bins)
     _PACK_CACHE_MAX = 512
+    # a cached shard stat-snapshot is trusted only while the directory
+    # mtime is unchanged AND the snapshot was taken with the directory
+    # already quiet for this long — two renames inside one filesystem
+    # timestamp granule could alias, a directory idle for longer cannot
+    _STAT_GRACE_NS = 100_000_000          # 100 ms
+    _SUMMARY_CACHE_MAX = 128
 
     def __init__(self, root: str):
         self.root = root
@@ -196,6 +203,17 @@ class TraceStore:
         self._pack_lock = threading.RLock()
         # idx -> [stat key, entries|None (None = corrupt), data_end, raw]
         self._pack_cache: collections.OrderedDict = collections.OrderedDict()
+        # (dir mtime_ns, {idx: fingerprint}) — see shard_stats
+        self._stat_lock = threading.Lock()
+        self._stat_snapshot: Optional[
+            Tuple[int, Dict[int, Tuple[int, int, int]]]] = None
+        # (snapshot dict, (n, 3) int64 array) — identity-keyed memo of
+        # the ndarray form summary-freshness compares want
+        self._fp_array: Optional[Tuple[Dict, np.ndarray]] = None
+        # summary-key -> ((size, mtime_ns), read-only payload) memo
+        self._summary_lock = threading.Lock()
+        self._summary_cache: collections.OrderedDict = \
+            collections.OrderedDict()
 
     def _count(self, name: str, n: int = 1) -> None:
         with self._io_lock:
@@ -256,15 +274,72 @@ class TraceStore:
             return None
         return (int(idx), int(st.st_size), int(st.st_mtime_ns))
 
-    def shard_fingerprint(self) -> List[Tuple[int, int, int]]:
-        """Sorted (idx, size, mtime_ns) for every shard file — cheap O(n)
-        stat pass; any shard rewrite changes the fingerprint."""
-        out = []
-        for idx in self.shard_indices():
-            fp = self.stat_shard(idx)
-            if fp is not None:
-                out.append(fp)
+    def shard_stats(self) -> Dict[int, Tuple[int, int, int]]:
+        """``{idx: (idx, size, mtime_ns)}`` for every shard file — the
+        bulk stat pass behind dirty classification, summary freshness
+        checks and gc. Memoized against the store directory's OWN
+        mtime: every shard create, rewrite and unlink is a rename or
+        unlink of a direct child and bumps it, so on a read-mostly
+        store (a warm query service ticking over an unchanged dataset)
+        the whole pass collapses to one ``os.stat``. A snapshot is
+        cached only when the directory has already been quiet for
+        ``_STAT_GRACE_NS`` — inside one timestamp granule two
+        modifications can alias to the same mtime, beyond it they
+        cannot — so concurrent writers degrade this to exactly the old
+        per-shard stat pass, never to stale data."""
+        try:
+            dir_mtime = int(os.stat(self.root).st_mtime_ns)
+        except FileNotFoundError:
+            return {}
+        with self._stat_lock:
+            snap = self._stat_snapshot
+        if snap is not None and snap[0] == dir_mtime:
+            return snap[1]
+        out: Dict[int, Tuple[int, int, int]] = {}
+        with os.scandir(self.root) as it:
+            for entry in it:
+                name = entry.name
+                if not (name.startswith("shard_")
+                        and name.endswith(".npz")):
+                    continue
+                try:
+                    st = entry.stat()
+                except FileNotFoundError:
+                    continue                  # unlinked mid-listing
+                idx = int(name[len("shard_"):-len(".npz")])
+                out[idx] = (idx, int(st.st_size), int(st.st_mtime_ns))
+        if time.time_ns() - dir_mtime > self._STAT_GRACE_NS:
+            with self._stat_lock:
+                self._stat_snapshot = (dir_mtime, out)
         return out
+
+    def shard_fingerprint(self) -> List[Tuple[int, int, int]]:
+        """Sorted (idx, size, mtime_ns) for every shard file — one
+        memoized bulk stat pass (see :meth:`shard_stats`); any shard
+        rewrite changes the fingerprint."""
+        snap = self.shard_stats()
+        return [snap[idx] for idx in sorted(snap)]
+
+    def shard_fingerprint_array(self) -> np.ndarray:
+        """:meth:`shard_fingerprint` as the read-only (n, 3) int64
+        ndarray every summary-freshness compare wants, memoized by
+        snapshot identity so the sort + asarray runs once per store
+        change instead of once per probe."""
+        snap = self.shard_stats()
+        with self._stat_lock:
+            cached = self._fp_array
+        if cached is not None and cached[0] is snap:
+            return cached[1]
+        arr = np.asarray([snap[idx] for idx in sorted(snap)],
+                         np.int64).reshape(-1, 3)
+        arr.setflags(write=False)
+        with self._stat_lock:
+            # memoize only against a snapshot that is itself memoized —
+            # identity of a one-shot dict would never hit again
+            if (self._stat_snapshot is not None
+                    and self._stat_snapshot[1] is snap):
+                self._fp_array = (snap, arr)
+        return arr
 
     # -- cache keys --------------------------------------------------------
     @staticmethod
@@ -453,6 +528,21 @@ class TraceStore:
         for name in legacy:
             n += self._quiet_remove(os.path.join(self.root, name))
         return n
+
+    def pack_sizes(self) -> Dict[int, int]:
+        """``{shard idx -> pack file bytes}`` for every partial pack on
+        disk — ONE directory scan, no pack reads. Feeds the serving
+        layer's byte-budgeted pack LRU."""
+        out: Dict[int, int] = {}
+        with os.scandir(self.root) as it:
+            for e in it:
+                if e.name.startswith("pack_") and e.name.endswith(".bin"):
+                    try:
+                        out[int(e.name[len("pack_"):-len(".bin")])] = (
+                            e.stat().st_size)
+                    except FileNotFoundError:
+                        pass           # concurrent eviction: skip
+        return dict(sorted(out.items()))
 
     def compact_pack(self, idx: int) -> int:
         """Rewrite shard ``idx``'s pack keeping only LIVE entries
@@ -673,12 +763,47 @@ class TraceStore:
         return path
 
     def read_summary(self, key: str) -> Optional[Dict[str, np.ndarray]]:
-        """Summary payload for ``key``, or None on a cache miss."""
+        """Summary payload for ``key``, or None on a cache miss. A file
+        unlinked between the existence probe and the read (a concurrent
+        LRU eviction in a pipelined service) is a miss, never a crash —
+        summaries are pure derived data, so the caller just recomputes.
+
+        Payloads are memoized against the file's own (size, mtime_ns)
+        and handed out READ-ONLY: a summary's content is a pure
+        function of its key and the ``covered`` fingerprints embedded
+        in it (which every consumer re-validates against the live
+        store), so a memo hit can never serve wrong data — it only
+        skips a redundant np.load on the repeated per-tick probes a
+        serving loop makes."""
         path = os.path.join(self.root, summary_filename(key))
-        if not os.path.exists(path):
+        try:
+            sig_st = os.stat(path)
+        except FileNotFoundError:
             return None
+        sig = (int(sig_st.st_size), int(sig_st.st_mtime_ns))
+        with self._summary_lock:
+            hit = self._summary_cache.get(key)
+            if hit is not None and hit[0] == sig:
+                self._summary_cache.move_to_end(key)
+                payload = hit[1]
+            else:
+                payload = None
+        if payload is not None:
+            self._count("summary_memo_hits")
+            return payload
         self._count("summary_reads")
-        return self._load_npz(path)
+        try:
+            payload = self._load_npz(path)
+        except FileNotFoundError:
+            return None
+        for arr in payload.values():
+            arr.setflags(write=False)
+        with self._summary_lock:
+            self._summary_cache[key] = (sig, payload)
+            self._summary_cache.move_to_end(key)
+            while len(self._summary_cache) > self._SUMMARY_CACHE_MAX:
+                self._summary_cache.popitem(last=False)
+        return payload
 
     def summary_keys(self) -> List[str]:
         out = []

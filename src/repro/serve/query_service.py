@@ -10,17 +10,61 @@ Admission batching (one fused plan per tick)
     Requests arriving within a ``tick_ms`` window are drained into ONE
     :class:`~repro.core.query.QueryPlan` and executed as a single fused
     ``execute_plan`` — every dirty shard file read once for ALL
-    concurrent users' lanes, identical queries deduplicated for free by
-    the engine's lane dedupe, clean shards served from the consolidated
+    concurrent users' lanes, clean shards served from the consolidated
     per-shard partial packs. Each response carries the provenance a
     client (and the CI smoke leg) can assert on: ``fused_width`` (how
     many lanes rode the tick's plan) and ``batched_fused`` (width > 1).
 
-Shared summary cache
+Pipelined ticks (bounded overlap)
+    With ``pipeline_depth > 1`` the single tick worker becomes a THREE
+    stage pipeline: an admission thread keeps draining tick windows
+    while earlier ticks execute (tick N+1 admits, compiles and begins
+    its summary probes / clean-lane loads while tick N's scan is still
+    running, up to ``pipeline_depth`` ticks in flight — a semaphore
+    backpressures admission past that); execution runs on a
+    depth-sized executor whose dirty-shard scans fan out over the
+    service-lifetime :class:`~repro.core.aggregation.ScanPool` (its
+    single pack-writer thread serializes EVERY pack append across all
+    in-flight ticks, so the pack read-modify-write contract and
+    io_counts stay valid); and ONE commit thread serializes the
+    bookkeeping tail — LRU touches/evictions, service counters, and
+    releasing each request's ``done`` event. Summary writes are
+    per-file atomic (tmp+rename) with distinct keys guaranteed by the
+    in-flight dedup below, so concurrent ticks never write the same
+    summary.
+
+Per-key in-flight dedup
+    Two overlapping ticks never compute the same canonical query twice:
+    at admission each query keys into an in-flight slot table by
+    ``(cache_key, interval_ns)``; a tick OWNS the slots it creates
+    (they ride its fused plan) and BORROWS slots an earlier in-flight
+    tick is already computing, waiting on the owner's result and
+    re-rendering it for its own caller (exact: the canonical key pins
+    the reducer suite and predicate set, and rendering permutes to the
+    borrower's metric order). Deadlock-free by construction: a borrowed
+    slot's owner was admitted earlier, and the executor holds exactly
+    ``pipeline_depth`` workers for at most ``pipeline_depth``
+    uncommitted ticks, so the owner is always running or finished.
+    Borrowed answers are marked ``inflight_hit`` in the response.
+
+Shared summary cache + byte-budgeted LRU eviction
     All ticks execute against one :class:`TraceStore` instance, so
     every user shares the on-disk ``summary_*.npz`` cache AND the
-    in-process pack cache — a question any user asked before is a pure
-    summary hit for everyone.
+    in-process pack cache. After each tick the commit stage touches the
+    tick's summary keys and, when the store exceeds
+    ``summary_budget_bytes``, deletes least-recently-used summary files
+    — but NEVER a key registered by ANY in-flight tick (widened from
+    "current tick" when ticks began to overlap), so a result is never
+    evicted between being computed and being read back.
+
+Pack LRU (partial-pack byte budget)
+    ``pack_budget_bytes`` extends the same byte-budget discipline to
+    the per-shard partial packs: when pack bytes exceed the budget the
+    commit stage walks packs least-recently-touched first, compacting
+    stale entries out first (``compact_pack``) and dropping the whole
+    pack only if still over budget — never touching a pack referenced
+    by an in-flight tick's shard set. Packs are derived data: eviction
+    costs at most one rescan of that shard.
 
 Per-request budget
     ``max_cells_per_request`` bounds the estimated result size
@@ -29,20 +73,11 @@ Per-request budget
     re-binning of a day-long trace — is rejected with HTTP 413 instead
     of stalling every other user's tick while it allocates.
 
-LRU byte-budgeted summary eviction
-    Unbounded distinct queries would grow the summary store forever
-    (one ``summary_*.npz`` per canonical question). After each tick the
-    service touches the tick's summary keys and, when the store exceeds
-    ``summary_budget_bytes``, deletes least-recently-used summary files
-    — but NEVER a key touched in the current tick, so a result is never
-    evicted between being computed and being read back. Evicting a
-    summary is always safe: it is derived data, recomputable from
-    shards/partials at the cost of one scan.
-
 Run it:
 
   PYTHONPATH=src python -m repro.serve.query_service --store DIR \\
-      [--port 8321] [--tick-ms 10] [--summary-budget-mb 256]
+      [--port 8321] [--tick-ms 10] [--workers 4] \\
+      [--summary-budget-mb 256] [--pack-budget-mb 0]
 
 POST /query with a JSON body of Query specs (the ``--query`` schema:
 one spec object, or a list run as one request)::
@@ -51,11 +86,16 @@ one spec object, or a list run as one request)::
       "group_by": "m_kind"}]'
 
 Response: ``{"results": [...], "tick": {"fused_width": N,
-"batched_fused": bool, "evicted": E}}`` — per-query group/metric
-moment summaries plus the engine's execution provenance (cache_hit,
-recomputed_shards, partial_hits, shards_pruned, rows filtered).
-``GET /healthz`` is a liveness probe; ``GET /stats`` exposes service
-counters (ticks, fused widths, evictions, the store's io_counts).
+"batched_fused": bool, "evicted": E, "inflight_hits": H, ...}}`` —
+per-query group/metric moment summaries plus the engine's execution
+provenance. A request whose tick dies or overruns
+``request_timeout_s`` gets HTTP 503 with ``reason: "tick_timeout"``
+(handlers never block past the deadline). ``GET /healthz`` is a
+liveness probe; ``GET /stats`` exposes service counters — ticks,
+fused widths, per-tick latency percentiles (p50/p95/p99 off a
+log2-bucket :class:`~repro.core.reducers.QuantileSketch`, bounded
+memory under sustained load), scan-worker utilization, eviction
+counts and the store's io_counts.
 """
 
 from __future__ import annotations
@@ -68,15 +108,18 @@ import os
 import queue
 import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.core.aggregation import ScanPool
 from repro.core.anomaly import report_for_query
 from repro.core.query import Query, QueryPlan
-from repro.core.reducers import N_BUCKETS
-from repro.core.tracestore import TraceStore, summary_filename
+from repro.core.reducers import N_BUCKETS, QuantileSketch, bucket_of
+from repro.core.tracestore import (TraceStore, pack_filename,
+                                   summary_filename)
 
 # moment state width per (bin, group, metric) cell; the quantile sketch
 # rides N_BUCKETS more — the per-request budget estimates with these
@@ -100,7 +143,16 @@ class ServiceConfig:
     backend: str = "serial"
     max_cells_per_request: int = 50_000_000
     summary_budget_bytes: Optional[int] = 256 * 1024 * 1024
+    pack_budget_bytes: Optional[int] = None   # None/0 = unbounded
     request_timeout_s: float = 120.0     # handler wait on its tick
+    # scan threads per fused plan (the service-lifetime ScanPool):
+    # 0 = one per CPU, 1 = inline scan (appends still ride the pool's
+    # single pack-writer so overlapping ticks stay serialized)
+    scan_workers: int = 0
+    # max ticks in flight: 1 = the sequential pre-pipeline loop
+    # (admit -> execute -> commit, one tick at a time), N > 1 overlaps
+    # tick N+1's admission/probes with tick N's scan
+    pipeline_depth: int = 4
     host: str = "127.0.0.1"
     port: int = 8321
 
@@ -117,37 +169,106 @@ class _Pending:
     error: Optional[Tuple[int, str]] = None
 
 
-class SummaryCacheLRU:
+class _Slot:
+    """In-flight dedup slot: one canonical query being computed by the
+    tick that owns it; overlapping ticks borrow the slot and wait on
+    ``event`` instead of recomputing."""
+
+    __slots__ = ("key", "owner_seq", "event", "qr", "summary_key",
+                 "error")
+
+    def __init__(self, key, owner_seq: int) -> None:
+        self.key = key
+        self.owner_seq = owner_seq
+        self.event = threading.Event()
+        self.qr = None                       # owner's QueryResult
+        self.summary_key: Optional[str] = None
+        self.error: Optional[Tuple[int, str]] = None
+
+
+@dataclasses.dataclass
+class _Tick:
+    """One admission batch moving through the pipeline stages."""
+
+    seq: int
+    batch: List[_Pending]
+    flat: List[Tuple[Query, _Slot]]      # every query, admission order
+    owned: List[Tuple[Query, _Slot]]     # slots this tick computes
+    borrowed: int                        # queries riding other ticks
+    t_admit: float
+    shards: Set[int] = dataclasses.field(default_factory=set)
+    release_sem: bool = False            # pipelined ticks hold a permit
+
+
+class _ByteBudgetLRU:
+    """Shared skeleton of the two byte-budgeted caches: per-key recency
+    plus an in-flight registry — keys registered by ANY in-flight tick
+    are immune to eviction until that tick commits and unregisters."""
+
+    def __init__(self, budget_bytes: Optional[int]) -> None:
+        self.budget = budget_bytes
+        self._order: "collections.OrderedDict" = collections.OrderedDict()
+        self._inflight: Dict[int, set] = {}
+        self._reg_lock = threading.Lock()
+        self.evictions = 0
+
+    def register(self, tick_seq: int, keys) -> None:
+        """Pin ``keys`` against eviction while tick ``tick_seq`` is in
+        flight (called from the executor stage, BEFORE the scan)."""
+        with self._reg_lock:
+            self._inflight[tick_seq] = set(keys)
+
+    def unregister(self, tick_seq: int) -> None:
+        with self._reg_lock:
+            self._inflight.pop(tick_seq, None)
+
+    def immune(self) -> set:
+        with self._reg_lock:
+            out: set = set()
+            for keys in self._inflight.values():
+                out |= keys
+            return out
+
+    def touch(self, keys) -> None:
+        """Mark ``keys`` most-recently-used (commit stage, single
+        writer)."""
+        for k in keys:
+            self._order.pop(k, None)
+            self._order[k] = True
+
+    def _sync_order(self, sizes: Dict) -> None:
+        """Adopt out-of-band keys at the cold end, forget deleted."""
+        for k in sizes:
+            if k not in self._order:
+                self._order[k] = True
+                self._order.move_to_end(k, last=False)
+        for k in list(self._order):
+            if k not in sizes:
+                self._order.pop(k)
+
+
+class SummaryCacheLRU(_ByteBudgetLRU):
     """Byte-budgeted LRU over the on-disk summary store.
 
     Recency is tracked per summary KEY (touched once per tick that
     reads or writes it); eviction deletes ``summary_{key}.npz`` files
     least-recently-used first until the store fits the budget, skipping
-    every key touched in the CURRENT tick (a tick's own results are
-    never evicted before the requester reads them). Summary files that
-    appear out of band (another process, a pre-existing store) are
-    adopted at the cold end of the order."""
+    every key registered by ANY in-flight tick (a tick's own results
+    are never evicted before the requester reads them, no matter how
+    many ticks overlap). Summary files that appear out of band (another
+    process, a pre-existing store) are adopted at the cold end of the
+    order. Evicting a summary is always safe: it is derived data,
+    recomputable from shards/partials at the cost of one scan."""
 
     def __init__(self, store: TraceStore,
                  budget_bytes: Optional[int]) -> None:
+        super().__init__(budget_bytes)
         self.store = store
-        self.budget = budget_bytes
-        self._order: "collections.OrderedDict[str, bool]" = \
-            collections.OrderedDict()
-        self._tick_keys: set = set()
-        self.evictions = 0
-
-    def touch(self, keys: Sequence[str]) -> None:
-        """Mark ``keys`` as this tick's working set (most recent, and
-        immune to eviction until the next tick)."""
-        self._tick_keys = set(keys)
-        for k in keys:
-            self._order.pop(k, None)
-            self._order[k] = True
 
     def evict(self) -> int:
         """Delete LRU summary files until the store fits the budget.
-        Returns how many were evicted (0 when unbudgeted or within)."""
+        Returns how many were evicted (0 when unbudgeted or within).
+        Commit-stage only (single caller at a time)."""
         if not self.budget:
             return 0
         sizes: Dict[str, int] = {}
@@ -157,20 +278,15 @@ class SummaryCacheLRU:
                     os.path.join(self.store.root, summary_filename(k)))
             except OSError:
                 pass
-        for k in sizes:                  # adopt unknowns as coldest
-            if k not in self._order:
-                self._order[k] = True
-                self._order.move_to_end(k, last=False)
-        for k in list(self._order):      # forget deleted files
-            if k not in sizes:
-                self._order.pop(k)
+        self._sync_order(sizes)
         total = sum(sizes.values())
+        immune = self.immune()
         evicted = 0
         for k in list(self._order):
             if total <= self.budget:
                 break
-            if k in self._tick_keys:
-                continue                 # never evict a same-tick read
+            if k in immune:
+                continue                 # in-flight tick reads this key
             try:
                 os.remove(os.path.join(self.store.root,
                                        summary_filename(k)))
@@ -183,14 +299,73 @@ class SummaryCacheLRU:
         return evicted
 
 
+class PackCacheLRU(_ByteBudgetLRU):
+    """Byte budget over the per-shard partial packs (``pack_*.bin``).
+
+    When total pack bytes exceed the budget, packs are visited
+    least-recently-touched first: stale entries are compacted out
+    first (:meth:`~repro.core.tracestore.TraceStore.compact_pack` —
+    the cheap reclaim), and a pack still needed over budget is dropped
+    whole (``clear_partials``). A pack whose shard index is registered
+    by ANY in-flight tick is never touched — an executing scan may be
+    mid-read or about to append to it. Packs are derived data: the
+    cost of a wrong eviction is one rescan of that shard, never a
+    wrong answer."""
+
+    def __init__(self, store: TraceStore,
+                 budget_bytes: Optional[int]) -> None:
+        super().__init__(budget_bytes)
+        self.store = store
+        self.compactions = 0
+
+    def evict(self) -> int:
+        """Compact-then-drop LRU packs until within budget; returns the
+        number of packs removed. Commit-stage only."""
+        if not self.budget:
+            return 0
+        sizes = self.store.pack_sizes()
+        self._sync_order(sizes)
+        total = sum(sizes.values())
+        if total <= self.budget:
+            return 0
+        immune = self.immune()
+        evicted = 0
+        for idx in list(self._order):
+            if total <= self.budget:
+                break
+            if idx in immune:
+                continue             # referenced by an in-flight tick
+            if self.store.compact_pack(idx):
+                self.compactions += 1
+                try:
+                    new_size = os.path.getsize(os.path.join(
+                        self.store.root, pack_filename(idx)))
+                except OSError:
+                    new_size = 0
+                total -= sizes[idx] - new_size
+                sizes[idx] = new_size
+                if total <= self.budget:
+                    break
+            if sizes[idx]:
+                self.store.clear_partials(idx)
+                total -= sizes[idx]
+            self._order.pop(idx)
+            evicted += 1
+        self.evictions += evicted
+        return evicted
+
+
 class QueryService:
-    """Admission-batching Query front door (see module docstring).
+    """Pipelined admission-batching Query front door (module docstring).
 
     ``submit`` is the transport-free core (the HTTP handler and the
     in-process bench/tests call it directly): validate + budget-check a
     request, enqueue it, return the :class:`_Pending` whose ``done``
-    event fires when its tick completes. One worker thread drains the
-    queue per tick and runs the single fused plan."""
+    event fires when its tick commits. ``drain_once`` runs one full
+    tick inline (admit -> execute -> commit) for deterministic tests;
+    ``start`` spawns the pipeline threads (or the sequential loop at
+    ``pipeline_depth=1``). Don't mix ``start()`` with direct
+    ``drain_once`` calls — admission is single-consumer."""
 
     def __init__(self, store_dir: str,
                  cfg: Optional[ServiceConfig] = None) -> None:
@@ -199,13 +374,32 @@ class QueryService:
         self.man = self.store.read_manifest()
         self.cache = SummaryCacheLRU(self.store,
                                      self.cfg.summary_budget_bytes)
+        self.packs = PackCacheLRU(self.store, self.cfg.pack_budget_bytes)
+        self.scan_pool = ScanPool(self.cfg.scan_workers)
+        self._depth = max(1, int(self.cfg.pipeline_depth))
         self._queue: "queue.Queue[_Pending]" = queue.Queue()
         self._stop = threading.Event()
-        self._worker: Optional[threading.Thread] = None
+        self._seq = 0
+        self._inflight: Dict[Tuple, _Slot] = {}
+        self._inflight_lock = threading.Lock()
+        self._depth_sem = threading.BoundedSemaphore(self._depth)
+        self._commit_q: "queue.Queue[Optional[_Tick]]" = queue.Queue()
+        self._threads: List[threading.Thread] = []
+        self._executor: Optional[ThreadPoolExecutor] = None
         self._server: Optional[ThreadingHTTPServer] = None
         self.ticks = 0
         self.requests = 0
-        self.widths: List[int] = []
+        self.inflight_hits = 0
+        # bounded-memory tick telemetry: a deque for the width counters
+        # and ONE log2-bucket sketch row for the latency percentiles
+        self.widths: "collections.deque" = collections.deque(maxlen=4096)
+        self._max_width = 0
+        self._lat = QuantileSketch.zeros(1)
+        # ticks admitted but not yet committed — the adaptive-admission
+        # signal: batching is only worth its latency while one of these
+        # is keeping the executor busy
+        self._live_ticks = 0
+        self._live_lock = threading.Lock()
 
     # -- admission ---------------------------------------------------------
     def estimate_cells(self, queries: Sequence[Query]) -> int:
@@ -240,25 +434,45 @@ class QueryService:
         self._queue.put(pending)
         return pending
 
-    # -- the tick ----------------------------------------------------------
-    def drain_once(self, block_s: float = 0.1) -> int:
-        """Collect every request arriving within one tick window and run
-        them as ONE fused plan. Returns the number of requests served
-        (0 = queue stayed empty). The worker loop calls this forever;
-        tests call it directly for deterministic batching."""
+    # -- stage 1: admission (tick window + in-flight dedup) ----------------
+    def _collect(self, block_s: float,
+                 eager: bool = False) -> Optional[_Tick]:
+        """Drain one tick window into a :class:`_Tick`, resolving every
+        query against the in-flight slot table: new canonical keys
+        become slots OWNED by this tick, keys an earlier in-flight tick
+        is computing are BORROWED (never recomputed).
+
+        ``eager`` is the pipelined admission mode: ``tick_ms`` is the
+        MAXIMUM batching window, closed early the moment no tick is in
+        flight. Waiting out a fixed window only buys fusion width, and
+        width is free while the executor is already busy (requests pile
+        up behind the running tick anyway — backpressure batching); on
+        an idle pipeline the same wait is pure added latency. The
+        sequential loop keeps the fixed window — that IS the
+        single-worker floor the serve bench measures against."""
         try:
             batch = [self._queue.get(timeout=block_s)]
         except queue.Empty:
-            return 0
-        deadline = time.monotonic() + self.cfg.tick_ms / 1000.0
+            return None
+        now = time.monotonic()
+        deadline = now + self.cfg.tick_ms / 1000.0
+        # even an eager close lingers ~2ms past the first request: the
+        # responses a commit releases trigger a burst of follow-ups that
+        # should land in ONE wide tick, not fragment into several
+        linger = now + min(self.cfg.tick_ms, 2.0) / 1000.0
         while True:
-            remaining = deadline - time.monotonic()
+            now = time.monotonic()
+            remaining = deadline - now
             if remaining <= 0:
                 break
-            try:
-                batch.append(self._queue.get(timeout=remaining))
-            except queue.Empty:
+            if eager and self._live_ticks == 0 and now >= linger:
                 break
+            try:
+                batch.append(self._queue.get(
+                    timeout=min(remaining, 0.002) if eager else remaining))
+            except queue.Empty:
+                if not eager:
+                    break
         # opportunistic: anything already queued rides along even if it
         # landed just past the deadline
         while True:
@@ -266,44 +480,206 @@ class QueryService:
                 batch.append(self._queue.get_nowait())
             except queue.Empty:
                 break
-        self._run_tick(batch)
-        return len(batch)
+        self._seq += 1
+        seq = self._seq
+        flat: List[Tuple[Query, _Slot]] = []
+        owned: List[Tuple[Query, _Slot]] = []
+        borrowed = 0
+        with self._inflight_lock:
+            for p in batch:
+                for q in p.queries:
+                    key = (q.cache_key(), q.interval_ns)
+                    slot = self._inflight.get(key)
+                    if slot is None:
+                        slot = _Slot(key, seq)
+                        self._inflight[key] = slot
+                        owned.append((q, slot))
+                    elif slot.owner_seq != seq:
+                        borrowed += 1
+                    flat.append((q, slot))
+        return _Tick(seq=seq, batch=batch, flat=flat, owned=owned,
+                     borrowed=borrowed, t_admit=time.monotonic())
 
-    def _run_tick(self, batch: List[_Pending]) -> None:
-        all_queries = [q for p in batch for q in p.queries]
-        width = len(all_queries)
+    # -- stage 2: execution (fused plan + borrowed waits + render) ---------
+    def _exec_tick(self, tick: _Tick) -> None:
+        """Compile + execute the tick's OWNED queries as one fused plan
+        (scans fanned over the ScanPool), fill the slots, wait for any
+        borrowed slots' owners, render every response body. Runs on the
+        executor — up to ``pipeline_depth`` ticks concurrently."""
         try:
-            qplan = QueryPlan.compile(self.store, all_queries,
-                                      backend=self.cfg.backend)
-            results = qplan.execute(use_cache=True)
+            if tick.owned:
+                qplan = QueryPlan.compile(self.store,
+                                          [q for q, _ in tick.owned],
+                                          backend=self.cfg.backend)
+                # pin this tick's summary keys and pack shard set
+                # against eviction BEFORE any probe or scan starts
+                self.cache.register(
+                    tick.seq, [ln.summary_key for ln in qplan.lanes
+                               if ln.summary_key])
+                for ln in qplan.lanes:
+                    tick.shards |= (set(int(s) for s in ln.pruned)
+                                    if ln.pruned is not None
+                                    else set(range(qplan.n_shard_files)))
+                self.packs.register(tick.seq, tick.shards)
+                results = qplan.execute(use_cache=True,
+                                        pool=self.scan_pool)
+                for (q, slot), qr, lane in zip(tick.owned, results,
+                                               qplan.lanes):
+                    slot.qr = qr
+                    slot.summary_key = lane.summary_key
+                    slot.event.set()
         except Exception as e:          # noqa: BLE001 — fail the tick,
-            for p in batch:             # not the service
-                p.error = (500, f"{type(e).__name__}: {e}")
-                p.done.set()
-            return
+            err = (500, f"{type(e).__name__}: {e}")   # not the service
+            for _, slot in tick.owned:
+                slot.error = err
+                slot.event.set()
+        # borrowed slots: wait on their owners (always admitted
+        # earlier, so always running or done — never a cycle); a dead
+        # owner surfaces as tick_timeout instead of a hung handler
+        deadline = time.monotonic() + self.cfg.request_timeout_s
+        for _, slot in tick.flat:
+            if not slot.event.is_set():
+                slot.event.wait(max(0.0, deadline - time.monotonic()))
+        off = 0
+        for p in tick.batch:
+            body: List[Dict] = []
+            err = None
+            for q, slot in tick.flat[off:off + len(p.queries)]:
+                if err is not None:
+                    continue
+                if not slot.event.is_set():
+                    err = (503, "tick timed out waiting on an "
+                                "in-flight computation (tick_timeout)")
+                elif slot.error is not None:
+                    err = slot.error
+                else:
+                    qr = slot.qr
+                    hit = slot.owner_seq != tick.seq
+                    if qr.query is not q:
+                        qr = dataclasses.replace(qr, query=q)
+                    rendered = _render_result(qr)
+                    if hit:
+                        rendered["inflight_hit"] = True
+                    body.append(rendered)
+            off += len(p.queries)
+            if err is not None:
+                p.error = err
+            else:
+                p.results = body
+
+    # -- stage 3: commit (single writer) -----------------------------------
+    def _commit(self, tick: _Tick) -> None:
+        """The single-writer tail every tick funnels through: LRU
+        recency + evictions, service counters, in-flight slot retirement
+        and the ``done`` events — serialized no matter how many ticks
+        overlap, so eviction decisions and io bookkeeping never race."""
+        width = len(tick.flat)
         self.ticks += 1
         self.widths.append(width)
-        self.cache.touch([lane.summary_key for lane in qplan.lanes
-                          if lane.summary_key])
+        self._max_width = max(self._max_width, width)
+        self.inflight_hits += tick.borrowed
+        lat_ns = max((time.monotonic() - tick.t_admit) * 1e9, 1.0)
+        self._lat.counts[0, int(bucket_of(np.asarray([lat_ns]))[0])] += 1
+        keys = sorted({slot.summary_key for _, slot in tick.flat
+                       if slot.summary_key})
+        self.cache.touch(keys)
         evicted = self.cache.evict()
+        self.packs.touch(sorted(tick.shards))
+        pack_evicted = self.packs.evict()
+        # unregister AFTER evicting: a committing tick's own keys stay
+        # immune through its own eviction pass
+        self.cache.unregister(tick.seq)
+        self.packs.unregister(tick.seq)
         tick_info = {"fused_width": width,
                      "batched_fused": width > 1,
-                     "n_requests": len(batch),
-                     "evicted": evicted}
-        off = 0
-        for p in batch:
-            p.results = [
-                _render_result(qr)
-                for qr in results[off:off + len(p.queries)]]
-            off += len(p.queries)
+                     "n_requests": len(tick.batch),
+                     "inflight_hits": tick.borrowed,
+                     "evicted": evicted,
+                     "pack_evicted": pack_evicted}
+        for p in tick.batch:
             p.tick_info = tick_info
             p.done.set()
+        with self._inflight_lock:
+            for _, slot in tick.owned:
+                if self._inflight.get(slot.key) is slot:
+                    del self._inflight[slot.key]
+        if tick.release_sem:
+            self._depth_sem.release()
+
+    # -- tick drivers ------------------------------------------------------
+    def drain_once(self, block_s: float = 0.1) -> int:
+        """Run ONE full tick inline (admit -> execute -> commit).
+        Returns the number of requests served (0 = queue stayed empty).
+        The sequential loop calls this forever; tests call it directly
+        for deterministic batching."""
+        tick = self._collect(block_s)
+        if tick is None:
+            return 0
+        self._exec_tick(tick)
+        self._commit(tick)
+        return len(tick.batch)
+
+    def _pipeline_task(self, tick: _Tick) -> None:
+        """Executor-stage wrapper: execute, then hand off to the commit
+        thread (commit order is completion order — all writes the order
+        could matter for already happened inside execute, serialized by
+        the pack-writer / atomic summary renames)."""
+        try:
+            self._exec_tick(tick)
+        finally:
+            self._commit_q.put(tick)
+
+    def _admit_loop(self) -> None:
+        while not self._stop.is_set():
+            tick = self._collect(block_s=0.1, eager=True)
+            if tick is None:
+                continue
+            with self._live_lock:
+                self._live_ticks += 1
+            # bounded pipeline: block admission (backpressure the
+            # queue) rather than grow in-flight ticks without limit
+            while not self._depth_sem.acquire(timeout=0.1):
+                if self._stop.is_set():
+                    for p in tick.batch:
+                        p.error = (503, "service stopping (tick_timeout)")
+                        p.done.set()
+                    with self._live_lock:
+                        self._live_ticks -= 1
+                    return
+            tick.release_sem = True
+            self._executor.submit(self._pipeline_task, tick)
+
+    def _commit_loop(self) -> None:
+        while True:
+            tick = self._commit_q.get()
+            if tick is None:
+                return
+            self._commit(tick)
+            with self._live_lock:
+                self._live_ticks -= 1
+
+    def _serial_loop(self) -> None:
+        while not self._stop.is_set():
+            self.drain_once()
 
     # -- lifecycle ---------------------------------------------------------
     def start(self, serve_http: bool = True) -> "QueryService":
-        self._worker = threading.Thread(target=self._loop, daemon=True,
-                                        name="query-service-tick")
-        self._worker.start()
+        if self._depth <= 1:
+            self._threads = [threading.Thread(
+                target=self._serial_loop, daemon=True,
+                name="query-service-tick")]
+        else:
+            self._executor = ThreadPoolExecutor(
+                max_workers=self._depth,
+                thread_name_prefix="tick-exec")
+            self._threads = [
+                threading.Thread(target=self._admit_loop, daemon=True,
+                                 name="query-service-admit"),
+                threading.Thread(target=self._commit_loop, daemon=True,
+                                 name="query-service-commit"),
+            ]
+        for t in self._threads:
+            t.start()
         if serve_http:
             handler = _make_handler(self)
             self._server = _Server((self.cfg.host, self.cfg.port),
@@ -320,23 +696,36 @@ class QueryService:
             self._server.shutdown()
             self._server.server_close()
             self._server = None
-        if self._worker is not None:
-            self._worker.join(timeout=5.0)
-            self._worker = None
-
-    def _loop(self) -> None:
-        while not self._stop.is_set():
-            self.drain_once()
+        for t in self._threads:
+            if t.name != "query-service-commit":
+                t.join(timeout=5.0)
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
+        self._commit_q.put(None)         # after executor drain: FIFO
+        for t in self._threads:
+            if t.name == "query-service-commit":
+                t.join(timeout=5.0)
+        self._threads = []
+        self.scan_pool.close()
 
     def stats(self) -> Dict:
-        widths = self.widths[-1024:]
+        widths = list(self.widths)
         return {
             "ticks": self.ticks,
             "requests": self.requests,
-            "max_fused_width": max(widths, default=0),
+            "max_fused_width": self._max_width,
             "mean_fused_width": (float(np.mean(widths)) if widths
                                  else 0.0),
+            "tick_p50_ms": float(self._lat.quantile(0.50)[0]) / 1e6,
+            "tick_p95_ms": float(self._lat.quantile(0.95)[0]) / 1e6,
+            "tick_p99_ms": float(self._lat.quantile(0.99)[0]) / 1e6,
+            "inflight_hits": self.inflight_hits,
+            "pipeline_depth": self._depth,
+            "scan": self.scan_pool.utilization(),
             "evictions": self.cache.evictions,
+            "pack_evictions": self.packs.evictions,
+            "pack_compactions": self.packs.compactions,
             "io_counts": dict(self.store.io_counts),
         }
 
@@ -344,7 +733,10 @@ class QueryService:
 def _render_result(qr) -> Dict:
     """JSON-safe answer for one query: per-(group, metric) moment
     summary folded over bins, anomaly count when the query fences, and
-    the engine's execution provenance."""
+    the engine's execution provenance. Renders against ``qr.query`` —
+    a borrowed in-flight result re-renders exactly for its own caller
+    (the anomaly fence runs on the CALLER's first metric, located by
+    name in the shared canonical result)."""
     res = qr.result
     g = res.grouped
     groups: Dict[str, Dict] = {}
@@ -380,7 +772,10 @@ def _render_result(qr) -> Dict:
         "provenance": qr.provenance(),
     }
     if qr.query.anomaly_score != "mean":   # non-default: caller wants a fence
-        rep = report_for_query(res, qr.query)
+        first = qr.query.metrics[0]
+        mi = (list(res.metrics).index(first)
+              if first in list(res.metrics) else 0)
+        rep = report_for_query(res, qr.query, metric_idx=mi)
         out["anomalous_bins"] = int(np.asarray(rep.flags).sum())
     return out
 
@@ -429,11 +824,19 @@ def _make_handler(service: QueryService):
             except ValueError as e:
                 self._send(400, {"error": str(e)})
                 return
+            # bounded wait: a tick worker dying mid-tick (or a scan
+            # overrunning the deadline) yields 503/tick_timeout, never
+            # a handler thread parked on done.wait() forever
             if not pending.done.wait(service.cfg.request_timeout_s):
-                self._send(504, {"error": "tick timed out"})
+                self._send(503, {"error": "tick timed out",
+                                 "reason": "tick_timeout"})
                 return
             if pending.error is not None:
-                self._send(pending.error[0], {"error": pending.error[1]})
+                code, msg = pending.error
+                payload = {"error": msg}
+                if code == 503:
+                    payload["reason"] = "tick_timeout"
+                self._send(code, payload)
                 return
             self._send(200, {"results": pending.results,
                              "tick": pending.tick_info})
@@ -452,22 +855,32 @@ def main() -> None:
                     help="admission-batch window (one fused plan/tick)")
     ap.add_argument("--backend", default="serial",
                     choices=["serial", "process", "jax"])
+    ap.add_argument("--workers", type=int, default=4,
+                    help="concurrency: scan threads per fused plan AND "
+                         "max in-flight ticks (1 = the sequential "
+                         "single-worker service)")
     ap.add_argument("--max-cells", type=int, default=50_000_000,
                     help="per-request result-cell budget (HTTP 413)")
     ap.add_argument("--summary-budget-mb", type=float, default=256.0,
                     help="summary-store byte budget for LRU eviction "
                          "(0 = unbounded)")
+    ap.add_argument("--pack-budget-mb", type=float, default=0.0,
+                    help="partial-pack byte budget for LRU "
+                         "compaction/eviction (0 = unbounded)")
     args = ap.parse_args()
     cfg = ServiceConfig(
         tick_ms=args.tick_ms, backend=args.backend,
         max_cells_per_request=args.max_cells,
         summary_budget_bytes=(int(args.summary_budget_mb * 1024 * 1024)
                               or None),
+        pack_budget_bytes=(int(args.pack_budget_mb * 1024 * 1024)
+                           or None),
+        scan_workers=args.workers, pipeline_depth=args.workers,
         host=args.host, port=args.port)
     svc = QueryService(args.store, cfg).start()
     print(f"query service on http://{cfg.host}:{cfg.port} "
           f"(store={args.store}, tick={cfg.tick_ms}ms, "
-          f"backend={cfg.backend})", flush=True)
+          f"backend={cfg.backend}, workers={args.workers})", flush=True)
     try:
         while True:
             time.sleep(3600)

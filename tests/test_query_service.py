@@ -1,13 +1,16 @@
 """Query-serving front door tests: HTTP round-trip correctness against
 direct ``run_queries``, deterministic admission batching (N submitted
 requests drain into ONE fused plan), the per-request result-size budget
-(HTTP 413), and the byte-budgeted summary LRU — which must never evict a
-key touched within the current tick."""
+(HTTP 413), the byte-budgeted summary LRU — which must never evict a
+key touched within the current tick — and the concurrency layer:
+parallel-scan bit-identity, overlapping-tick in-flight dedup, the
+dead-worker 503/tick_timeout contract, and the pack-byte-budget LRU."""
 
 import json
 import os
 import shutil
 import threading
+import time
 import urllib.error
 import urllib.request
 
@@ -17,6 +20,7 @@ import pytest
 from repro.core import (Query, SyntheticSpec, TraceStore,
                         generate_synthetic, run_generation, run_queries,
                         write_rank_db)
+from repro.core.aggregation import ScanPool
 from repro.core.tracestore import summary_filename
 from repro.serve.query_service import (BudgetExceeded, QueryService,
                                        ServiceConfig)
@@ -170,3 +174,146 @@ def test_lru_never_evicts_summary_read_within_same_tick(store_dir):
     res = run_queries(fresh, [q_a])[0]
     assert res.result.partial_hits > 0
     assert fresh.io_counts["shard_reads"] == 0
+
+
+# --- concurrency: scan pool, pipelined ticks, pack LRU ----------------------
+
+def test_scan_pool_results_bit_identical_to_serial(store_dir):
+    """Cold fused scans through a 4-worker :class:`ScanPool` produce
+    EXACTLY the serial path's tensors (array equality, not allclose):
+    each shard partial is a pure function of its shard and the merge
+    consumes them in fixed shard order, never completion order."""
+    queries = [Query(metrics=("k_stall",), group_by="m_kind"),
+               Query(metrics=("m_duration", "m_bytes"),
+                     group_by="m_kind"),
+               Query(metrics=("k_stall",), anomaly_score="p99")]
+    store = TraceStore(store_dir)
+    store.clear_summaries()
+    store.clear_partials()
+    serial = run_queries(store, queries)
+    store.clear_summaries()
+    store.clear_partials()
+    with ScanPool(4) as pool:
+        pooled = run_queries(store, queries, pool=pool)
+        util = pool.utilization()
+    assert util["workers"] == 4 and util["tasks"] > 0
+    for a, b in zip(serial, pooled):
+        assert np.array_equal(a.result.group_keys, b.result.group_keys)
+        for name, sa in a.result.reduced.items():
+            sb = b.result.reduced[name]
+            for f in sa.fields:
+                assert np.array_equal(getattr(sa, f), getattr(sb, f))
+
+
+def test_overlapping_ticks_share_inflight_computation(store_dir,
+                                                      monkeypatch):
+    """Pipelined: a query admitted while an earlier tick is still
+    computing the same canonical query BORROWS that tick's slot — one
+    execution serves both, and the borrower's response says so
+    (``inflight_hit`` provenance, ``inflight_hits`` stat)."""
+    started, release = threading.Event(), threading.Event()
+    orig = QueryService._exec_tick
+
+    def stalling_exec(self, tick):
+        if tick.owned:                 # owner tick: stall mid-flight
+            started.set()
+            release.wait(10)
+        orig(self, tick)
+
+    monkeypatch.setattr(QueryService, "_exec_tick", stalling_exec)
+    svc = QueryService(store_dir, ServiceConfig(
+        tick_ms=1.0, pipeline_depth=2, scan_workers=1))
+    svc.start(serve_http=False)
+    try:
+        q = Query(metrics=("k_stall",), group_by="m_kind")
+        pa = svc.submit([q])
+        assert started.wait(5)
+        pb = svc.submit([q])           # same canonical key, next tick
+        time.sleep(0.2)                # let tick 2 admit and borrow
+        release.set()
+        assert pa.done.wait(10) and pb.done.wait(10)
+        assert pa.error is None and pb.error is None
+        assert pa.results[0].get("inflight_hit") is None
+        assert pb.results[0]["inflight_hit"] is True
+        assert pb.results[0]["groups"] == pa.results[0]["groups"]
+        assert svc.stats()["inflight_hits"] == 1
+    finally:
+        release.set()
+        svc.stop()
+
+
+def test_dead_tick_worker_yields_503_tick_timeout(store_dir,
+                                                  monkeypatch):
+    """A tick worker killed mid-tick (its tick never fills slots, never
+    commits) must surface as HTTP 503 with ``reason=tick_timeout``
+    within ``request_timeout_s`` — never a handler parked forever — and
+    the service keeps serving fresh keys afterwards."""
+    killed = threading.Event()
+    orig = QueryService._pipeline_task
+
+    def dying_task(self, tick):
+        if not killed.is_set():
+            killed.set()               # first tick: worker dies here —
+            return                     # no slot fill, no commit
+        orig(self, tick)
+
+    monkeypatch.setattr(QueryService, "_pipeline_task", dying_task)
+    svc = QueryService(store_dir, ServiceConfig(
+        tick_ms=1.0, pipeline_depth=2, scan_workers=1,
+        request_timeout_s=0.5, port=0))
+    svc.start(serve_http=True)
+    try:
+        status, body = _post(svc.cfg.port,
+                             [{"metrics": ["k_stall"],
+                               "group_by": "m_kind"}], timeout=30)
+        assert status == 503
+        assert body["reason"] == "tick_timeout"
+        # the pipeline survived its dead worker: a different canonical
+        # query rides a healthy tick
+        status, body = _post(svc.cfg.port,
+                             [{"metrics": ["m_bytes"],
+                               "group_by": "k_device"}], timeout=30)
+        assert status == 200
+        assert body["results"][0]["n_samples"] > 0
+    finally:
+        svc.stop()
+
+
+def test_pack_budget_evicts_only_committed_ticks_packs(store_dir):
+    """``pack_budget_bytes=1`` is permanent pressure, yet a tick's packs
+    are immune while it is in flight: the full-store tick keeps every
+    pack through its own commit, and they are reclaimed by a later
+    tick that only touches a shard subset. Evicted packs are derived
+    data — the next cold ask recomputes and answers identically."""
+    svc = QueryService(store_dir, ServiceConfig(
+        tick_ms=1.0, pack_budget_bytes=1))
+    q_full = Query(metrics=("k_stall",), group_by="m_kind")
+    p = svc.submit([q_full])
+    svc.drain_once(block_s=0.0)
+    assert p.error is None
+    first = p.results[0]
+    # own-tick immunity: every pack this tick wrote survived its commit
+    packs_after_full = set(svc.store.pack_sizes())
+    assert packs_after_full
+    assert svc.stats()["pack_evictions"] == 0
+
+    # a time-windowed tick touches only early shards; everything else
+    # is now fair game for the byte budget
+    man = svc.man
+    span = int(man.t_end - man.t_start)
+    q_win = Query(metrics=("k_stall",),
+                  time_window=(int(man.t_start),
+                               int(man.t_start + span // 4)))
+    p = svc.submit([q_win])
+    svc.drain_once(block_s=0.0)
+    assert p.error is None
+    assert svc.stats()["pack_evictions"] > 0
+    assert set(svc.store.pack_sizes()) < packs_after_full
+
+    # packs are pure derived data: cold re-ask, identical answer
+    svc.store.clear_summaries()
+    p = svc.submit([q_full])
+    svc.drain_once(block_s=0.0)
+    assert p.error is None
+    assert p.results[0]["groups"] == first["groups"]
+    assert p.results[0]["n_samples"] == first["n_samples"]
