@@ -31,6 +31,13 @@ Floors (the repo's banked acceptance bars):
                 ``batched_fused_ok`` concurrency-fusion assertion and
                 ``scan_identity_ok`` — the pooled parallel scan is
                 bit-identical to the serial path)
+  stream        live-writer event-to-fence latency through the ingest
+                plane, two seed-store sizes, same load
+                                        ``fence_headroom``          >= 1x
+                (ceiling / worst p99 across both sizes; the record's
+                ``size_independence_ok``, ``bit_identity_ok`` —
+                streamed store == cold rebuild at quiesce — and
+                ``all_batches_fenced_ok`` flags also bind)
 
 Records produced with ``--smoke`` carry ``"smoke": true`` and are held
 only to STRUCTURAL checks (schema, finite positive timings, the bench's
@@ -76,6 +83,13 @@ SCHEMAS = {
     # serve's gated number is a rate, not a ratio — the same "must not
     # drop below the floor" check applies (higher is better either way)
     "serve": ("sustained_qps", ("p50_ms", "p99_ms", "wall_s"), 50.0),
+    # stream's gated number is latency HEADROOM: ceiling / worst p99
+    # event-to-fence latency across BOTH seed-store sizes — >= 1 means
+    # the p99 sits under the ceiling at the small AND the large store
+    # (the record's own size_independence_ok and bit_identity_ok flags
+    # also bind; bit-identity binds even on smoke)
+    "stream": ("fence_headroom",
+               ("p99_small_ms", "p99_large_ms", "wall_s"), 1.0),
 }
 
 # extra non-smoke floors beyond the headline number: bench name ->

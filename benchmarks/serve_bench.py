@@ -48,8 +48,6 @@ import json
 import os
 import threading
 import time
-import urllib.error
-import urllib.request
 from typing import Dict, List, Tuple
 
 import numpy as np
@@ -57,6 +55,7 @@ import numpy as np
 from repro.core import TraceStore, run_generation, run_queries
 from repro.core.aggregation import ScanPool
 from repro.core.query import Query
+from repro.serve.client import QueryClient, ServiceError
 from repro.serve.query_service import QueryService, ServiceConfig
 
 from .common import dataset
@@ -90,19 +89,14 @@ TICK_MS = 40.0
 
 def _post(port: int, spec: Dict, timeout: float = 120.0,
           ) -> Tuple[int, Dict, float]:
-    """(status, body, latency_s) for one POST /query."""
-    req = urllib.request.Request(
-        f"http://127.0.0.1:{port}/query",
-        data=json.dumps([spec]).encode(),
-        headers={"Content-Type": "application/json"})
+    """(status, body, latency_s) for one POST /v1/query."""
+    client = QueryClient(port=port, timeout_s=timeout)
     t0 = time.perf_counter()
     try:
-        with urllib.request.urlopen(req, timeout=timeout) as r:
-            body = json.loads(r.read())
-            status = r.status
-    except urllib.error.HTTPError as e:
-        body, status = json.loads(e.read()), e.code
-    except (urllib.error.URLError, OSError) as e:
+        body, status = client.query_raw([spec]), 200
+    except ServiceError as e:
+        body, status = {"error": e.message}, e.status
+    except OSError as e:
         body, status = {"error": str(e)}, 0     # counted as a failure
     return status, body, time.perf_counter() - t0
 

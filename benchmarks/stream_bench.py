@@ -1,0 +1,318 @@
+"""Streaming ingest plane benchmark (BENCH_stream.json).
+
+Sustained multi-rank live-writer load against the v1 service's ingest
+plane, run at TWO seed-store sizes with the SAME write load, proving
+the two properties the plane sells:
+
+  1. **Bounded event-to-fence latency, independent of store size** — a
+     writer thread appends time-sliced batches to every rank DB while a
+     :class:`~repro.serve.client.QueryClient` long-polls
+     ``/v1/stream/fences``. Each batch is matched to the first fence
+     event whose ingested watermarks cover the batch's post-append
+     rowids; the batch's latency is append-completion -> event arrival
+     (so it includes the tailer poll, the ingest tick's staged-commit
+     append AND the fence queries' delta re-aggregation). The p99 over
+     batches must sit under ``FENCE_P99_CEILING_MS`` at BOTH store
+     sizes (``fence_headroom = ceiling / worst p99``, gated >= 1.0 by
+     :mod:`benchmarks.check_bench`), and the large store — ~4x the
+     seed rows, same live load — must not stretch the p99 materially
+     (``size_independence_ok``): per-tick ingest cost is O(delta),
+     clean shards ride the partial cache.
+  2. **Streamed == rebuilt** — after ``quiesce()`` the streamed store
+     answers the full reducer suite bit-identically to a cold
+     ``run_generation`` from the final DBs (``bit_identity_ok``,
+     binding even on smoke): months of uptime cannot drift the store.
+
+Usage:
+
+  PYTHONPATH=src python -m benchmarks.stream_bench --smoke \\
+      --out BENCH_stream.json
+  PYTHONPATH=src python -m benchmarks.stream_bench --scale medium \\
+      --out BENCH_stream.json
+
+``--smoke`` shrinks the load and exempts the record from the latency
+floors (structural checks — ``bit_identity_ok``, every batch matched
+to a fence event, finite timings — still bind). The nightly medium run
+is held to the floors for real.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import threading
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import (SyntheticSpec, generate_synthetic,
+                        run_aggregation, run_generation, trace_remainder,
+                        truncate_trace, write_rank_db, append_rank_db)
+from repro.core.events import table_rowid_hi
+from repro.core.query import Query
+from repro.serve.client import QueryClient, ServiceError
+from repro.serve.query_service import QueryService, ServiceConfig
+from repro.serve.stream import DEFAULT_FENCE_QUERY, IngestConfig
+
+_NS = 1_000_000_000
+FENCE_P99_CEILING_MS = 2000.0
+# large seed may cost at most this factor over the small seed's p99
+# (plus an absolute clock-noise allowance) before we call the latency
+# store-size-dependent
+SIZE_INDEPENDENCE_FACTOR = 3.0
+SIZE_INDEPENDENCE_SLACK_MS = 150.0
+SUITE_QUERY = Query(metrics=("k_stall", "m_duration"), group_by="src_rank",
+                    reducers=("moments", "quantile"))
+
+
+def _aligned_cut(ds, seconds_from_start: int) -> int:
+    t0 = int(min(int(tr.kernels.start.min()) for tr in ds.traces))
+    return (t0 // _NS) * _NS + seconds_from_start * _NS
+
+
+def _seed_store(ds, cutoff: int, root: str, tag: str,
+                ) -> Tuple[List[str], str]:
+    db_dir = os.path.join(root, f"dbs_{tag}")
+    os.makedirs(db_dir)
+    paths = [os.path.join(db_dir, f"rank{tr.rank}.sqlite")
+             for tr in ds.traces]
+    for tr, p in zip(ds.traces, paths):
+        write_rank_db(p, truncate_trace(tr, cutoff))
+    store_dir = os.path.join(root, f"store_{tag}")
+    run_generation(paths, store_dir, n_ranks=len(paths))
+    return paths, store_dir
+
+
+class _Subscriber:
+    """Long-poll ``/v1/stream/fences`` on a thread, stamping each
+    event's ARRIVAL time (the client-observed fence instant)."""
+
+    def __init__(self, port: int) -> None:
+        self.client = QueryClient(port=port)
+        self.events: List[Tuple[float, Dict]] = []
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self) -> None:
+        since = 0
+        while not self._stop.is_set():
+            try:
+                body = self.client.fences(since=since, timeout_s=0.5)
+            except (ServiceError, OSError):
+                continue
+            now = time.monotonic()
+            for e in body["events"]:
+                self.events.append((now, e))
+            since = body["next_since"]
+
+    def __enter__(self) -> "_Subscriber":
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+
+
+def _drive_live_load(ds, paths: List[str], port: int, cutoff: int,
+                     live_end: int, n_batches: int, gap_s: float,
+                     ) -> Tuple[List[float], int]:
+    """Append ``n_batches`` time slices of the live window to every
+    rank DB while subscribed to the fence stream; returns per-batch
+    event-to-fence latencies (seconds) and the unmatched count."""
+    cuts = [cutoff + (live_end - cutoff) * (i + 1) // n_batches
+            for i in range(n_batches)]
+    marks: List[Tuple[float, Dict[str, Tuple[int, int]]]] = []
+    with _Subscriber(port) as sub:
+        lo = cutoff
+        for hi in cuts:
+            for tr, p in zip(ds.traces, paths):
+                append_rank_db(
+                    p, trace_remainder(truncate_trace(tr, hi), lo))
+            marks.append((time.monotonic(),
+                          {os.path.abspath(p):
+                           tuple(int(x) for x in table_rowid_hi(p))
+                           for p in paths}))
+            lo = hi
+            time.sleep(gap_s)
+        # wait until the last batch's rows are fenced before unsubscribing
+        deadline = time.monotonic() + 60.0
+        while time.monotonic() < deadline:
+            if _first_covering(sub.events, marks[-1][1]) is not None:
+                break
+            time.sleep(0.05)
+        events = list(sub.events)
+    lats, unmatched = [], 0
+    for t_batch, hi_marks in marks:
+        arrival = _first_covering(events, hi_marks)
+        if arrival is None:
+            unmatched += 1
+        else:
+            lats.append(max(arrival - t_batch, 0.0))
+    return lats, unmatched
+
+
+def _first_covering(events, hi_marks) -> float:
+    """Arrival time of the first event whose ingested watermarks cover
+    every path's post-append rowids (the batch's fence instant)."""
+    for t_arr, e in events:
+        wm = (e.get("ingest") or {}).get("watermarks") or {}
+        if all(tuple(wm.get(p, (0, 0))) >= hi for p, hi in
+               hi_marks.items()):
+            return t_arr
+    return None
+
+
+def _stream_arm(ds, root: str, tag: str, seed_end_s: int, live_end_s: int,
+                n_batches: int, gap_s: float) -> Dict:
+    """One seed store + one live-writer run: (p99_ms, seed facts,
+    unmatched count, the final DB paths and store dir)."""
+    cutoff = _aligned_cut(ds, seed_end_s)
+    live_end = _aligned_cut(ds, live_end_s)
+    paths, store_dir = _seed_store(ds, cutoff, root, tag)
+    seed_rows = sum(int(x) for p in paths for x in table_rowid_hi(p))
+    svc = QueryService(store_dir, ServiceConfig(
+        tick_ms=5.0, port=0, ingest=IngestConfig(poll_ms=10.0)))
+    svc.ensure_ingestor().attach(paths)
+    svc.start(serve_http=True)
+    try:
+        # warm the fence query's partial cache over the seed shards:
+        # the bench measures STEADY-STATE streaming (O(delta) per
+        # tick), not the one-off cold scan a fresh store pays anyway
+        QueryClient(port=svc.cfg.port).query(DEFAULT_FENCE_QUERY)
+        lats, unmatched = _drive_live_load(
+            ds, paths, svc.cfg.port, cutoff, live_end, n_batches, gap_s)
+        quiesced = svc.ingestor.quiesce(timeout_s=120.0)
+        stats = svc.ingestor.stats()
+    finally:
+        svc.stop()
+    return {
+        "paths": paths, "store_dir": store_dir,
+        "seed_rows": seed_rows,
+        "lats_ms": [x * 1e3 for x in lats],
+        "unmatched": unmatched,
+        "quiesced": quiesced,
+        "ingest_ticks": stats["ingest_ticks"],
+        "rows_ingested": stats["rows_ingested"],
+        "errors": stats["errors"],
+        "service_e2f_p99_ms": stats["event_to_fence_p99_ms"],
+    }
+
+
+def _bit_identity(paths: List[str], store_dir: str, root: str) -> bool:
+    cold = os.path.join(root, "cold_rebuild")
+    run_generation(paths, cold, n_ranks=len(paths))
+    a = run_aggregation(store_dir, query=SUITE_QUERY)
+    b = run_aggregation(cold, query=SUITE_QUERY)
+    for f in ("count", "sum", "sumsq", "min", "max"):
+        if not np.array_equal(getattr(a.grouped, f),
+                              getattr(b.grouped, f)):
+            return False
+    return (np.array_equal(a.group_keys, b.group_keys)
+            and np.array_equal(a.reduced["quantile"].counts,
+                               b.reduced["quantile"].counts))
+
+
+def run(scale: str, smoke: bool) -> Dict:
+    # both arms run the SAME live window (same kernel rate, same batch
+    # slicing); only the seed prefix differs — small seeds `seed_s`
+    # seconds of trace, large ~4x that
+    if smoke:
+        n_ranks, k_rate, n_batches, gap_s = 2, 150, 6, 0.05
+        live_s, seed_small_s, seed_large_s = 10, 30, 120
+    elif scale == "medium":
+        n_ranks, k_rate, n_batches, gap_s = 4, 350, 24, 0.1
+        live_s, seed_small_s, seed_large_s = 30, 90, 360
+    else:
+        n_ranks, k_rate, n_batches, gap_s = 2, 250, 12, 0.05
+        live_s, seed_small_s, seed_large_s = 20, 60, 240
+    root = tempfile.mkdtemp(prefix="repro_stream_bench_")
+    t0 = time.perf_counter()
+    arms = {}
+    for tag, seed_s in (("small", seed_small_s), ("large", seed_large_s)):
+        dur = seed_s + live_s
+        spec = SyntheticSpec(n_ranks=n_ranks,
+                             kernels_per_rank=k_rate * dur,
+                             memcpys_per_rank=max(k_rate * dur // 8, 50),
+                             duration_s=float(dur), seed=3)
+        ds = generate_synthetic(spec)
+        arms[tag] = _stream_arm(ds, root, tag, seed_s, dur,
+                                n_batches, gap_s)
+    wall = time.perf_counter() - t0
+
+    p99 = {t: (float(np.percentile(a["lats_ms"], 99))
+               if a["lats_ms"] else float("inf"))
+           for t, a in arms.items()}
+    bit_identical = _bit_identity(arms["small"]["paths"],
+                                  arms["small"]["store_dir"], root)
+    worst = max(p99.values())
+    size_ok = (p99["large"] <= SIZE_INDEPENDENCE_FACTOR * p99["small"]
+               + SIZE_INDEPENDENCE_SLACK_MS)
+    rec = {
+        "bench": "stream",
+        "smoke": smoke,
+        "scale": scale,
+        "n_ranks": n_ranks,
+        "n_batches": n_batches,
+        "live_window_s": live_s,
+        "seed_rows_small": arms["small"]["seed_rows"],
+        "seed_rows_large": arms["large"]["seed_rows"],
+        "seed_size_ratio": (arms["large"]["seed_rows"]
+                            / max(arms["small"]["seed_rows"], 1)),
+        "rows_streamed_small": arms["small"]["rows_ingested"],
+        "rows_streamed_large": arms["large"]["rows_ingested"],
+        "ingest_ticks_small": arms["small"]["ingest_ticks"],
+        "ingest_ticks_large": arms["large"]["ingest_ticks"],
+        "p99_small_ms": p99["small"],
+        "p99_large_ms": p99["large"],
+        "p50_small_ms": float(np.percentile(
+            arms["small"]["lats_ms"], 50)),
+        "p50_large_ms": float(np.percentile(
+            arms["large"]["lats_ms"], 50)),
+        "service_e2f_p99_small_ms": arms["small"]["service_e2f_p99_ms"],
+        "service_e2f_p99_large_ms": arms["large"]["service_e2f_p99_ms"],
+        "fence_p99_ceiling_ms": FENCE_P99_CEILING_MS,
+        "fence_headroom": FENCE_P99_CEILING_MS / max(worst, 1e-9),
+        "wall_s": wall,
+        # binding even on smoke: a lost/duplicated/unfenced batch or a
+        # drifted store is a correctness bug at any scale
+        "bit_identity_ok": bool(bit_identical),
+        "all_batches_fenced_ok": bool(
+            arms["small"]["unmatched"] == 0
+            and arms["large"]["unmatched"] == 0),
+        "quiesced_ok": bool(arms["small"]["quiesced"]
+                            and arms["large"]["quiesced"]),
+        "no_ingest_errors_ok": bool(arms["small"]["errors"] == 0
+                                    and arms["large"]["errors"] == 0),
+        # latency floors: structural only under --smoke (tiny load on a
+        # noisy CI clock), held for real at medium
+        "p99_bounded_ok": bool(smoke or worst <= FENCE_P99_CEILING_MS),
+        "size_independence_ok": bool(smoke or size_ok),
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="small",
+                    choices=["small", "medium"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny load; latency floors don't bind in "
+                         "check_bench (bit-identity still does)")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON record here (BENCH_stream.json)")
+    args = ap.parse_args()
+    rec = run(args.scale, args.smoke)
+    blob = json.dumps(rec, indent=2, sort_keys=True)
+    print(blob)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(blob + "\n")
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

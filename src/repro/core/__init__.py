@@ -44,8 +44,8 @@ from .sharding import (ShardPlan, assignment, block_assignment,
                        cyclic_assignment, owner_of_shards)
 from .tracestore import StoreManifest, TraceStore
 from .generation import (AppendReport, GenerationConfig, GenerationReport,
-                         run_append, run_generation, union_kernel_names,
-                         window_left_join)
+                         recover_append, run_append, run_generation,
+                         union_kernel_names, window_left_join)
 from .reducers import (MergeableReducer, QuantileSketch, get_reducer,
                        normalize_reducers, register_reducer,
                        REDUCER_REGISTRY, QUANTILE_REL_ERR)

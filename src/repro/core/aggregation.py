@@ -97,6 +97,7 @@ import dataclasses
 import os
 import threading
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -1486,14 +1487,19 @@ def run_incremental(store: TraceStore, n_shard_files: int, plan: ShardPlan,
     return result
 
 
+# sentinel distinguishing "caller explicitly spelled a legacy kwarg"
+# from the defaults — the deprecation path must not fire on bare calls
+_LEGACY_UNSET: Any = object()
+
+
 def run_aggregation(store: Union[str, TraceStore],
                     n_ranks: Optional[int] = None,
-                    metric: str = DEFAULT_METRIC,
-                    interval_ns: Optional[int] = None,
-                    metrics: Optional[Sequence[str]] = None,
-                    group_by: Optional[str] = None,
+                    metric: str = _LEGACY_UNSET,
+                    interval_ns: Optional[int] = _LEGACY_UNSET,
+                    metrics: Optional[Sequence[str]] = _LEGACY_UNSET,
+                    group_by: Optional[str] = _LEGACY_UNSET,
                     use_cache: bool = True,
-                    reducers: Sequence[str] = DEFAULT_REDUCERS,
+                    reducers: Sequence[str] = _LEGACY_UNSET,
                     backend: str = "serial",
                     query: Optional[Query] = None,
                     ) -> AggregationResult:
@@ -1530,7 +1536,31 @@ def run_aggregation(store: Union[str, TraceStore],
     if backend not in ("serial", "jax"):
         raise ValueError(f"unknown backend {backend!r} (serial | jax; the "
                          "process backend is VariabilityPipeline's)")
+    legacy = [name for name, v in (("metric", metric),
+                                   ("interval_ns", interval_ns),
+                                   ("metrics", metrics),
+                                   ("group_by", group_by),
+                                   ("reducers", reducers))
+              if v is not _LEGACY_UNSET]
+    if metric is _LEGACY_UNSET:
+        metric = DEFAULT_METRIC
+    if interval_ns is _LEGACY_UNSET:
+        interval_ns = None
+    if metrics is _LEGACY_UNSET:
+        metrics = None
+    if group_by is _LEGACY_UNSET:
+        group_by = None
+    if reducers is _LEGACY_UNSET:
+        reducers = DEFAULT_REDUCERS
     if query is None:
+        if legacy:
+            warnings.warn(
+                f"run_aggregation({', '.join(f'{n}=...' for n in legacy)})"
+                " is the legacy spelling — build a repro.core.query.Query"
+                " and pass query=... (or use VariabilityPipeline.query);"
+                " the folded Query mints an IDENTICAL cache key, so warm"
+                " caches stay warm across the migration",
+                DeprecationWarning, stacklevel=2)
         mlist = list(metrics) if metrics is not None else [metric]
         if not mlist:
             raise ValueError("metrics must name at least one shard column")

@@ -84,6 +84,60 @@ class AppendReport:
     t_start: int
     t_end: int                    # new plan end
     seconds: float
+    recovered: bool = False       # True when this run first rolled an
+    #                               interrupted append forward
+
+
+# append_intent.json format: version 2 journals carry the full staged
+# commit (staged shard list + the complete post-append manifest) and can
+# be rolled FORWARD; anything else is a pre-staged-engine journal whose
+# partial shard mutations are unrecoverable and must be refused.
+APPEND_JOURNAL_VERSION = 2
+
+
+def recover_append(out_dir: str) -> bool:
+    """Roll an interrupted append FORWARD from its intent journal.
+
+    A version-2 journal is written only after every staged shard file is
+    durably on disk, so recovery is pure replay: publish each surviving
+    ``.stage`` file (shards the interrupted run already renamed replay
+    as no-ops), write the journaled post-append manifest, drop the
+    journal. The rows of the interrupted run land exactly once — the
+    recovered manifest's watermarks exclude them from the next read.
+
+    Returns False when there is nothing to recover (no journal), True
+    after a successful roll-forward. Raises :class:`ValueError` for a
+    journal the staged-commit engine cannot replay (written by the
+    pre-staged engine, or corrupt): such a store may hold partially
+    ingested rows with no record of which — regenerate or restore it.
+    """
+    store = TraceStore(out_dir)
+    intent = os.path.join(out_dir, "append_intent.json")
+    if not os.path.exists(intent):
+        return False
+    try:
+        with open(intent) as f:
+            journal = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        journal = None
+    if (not isinstance(journal, dict)
+            or journal.get("version") != APPEND_JOURNAL_VERSION
+            or "staged_shards" not in journal
+            or "manifest" not in journal):
+        raise ValueError(
+            "a previous append was interrupted mid-way (append_intent."
+            "json present) and its journal predates the staged-commit "
+            "engine — the store may hold partially ingested rows and "
+            "the watermark was not advanced, so retrying would "
+            "double-ingest them; regenerate or restore the store")
+    for s in journal["staged_shards"]:
+        store.commit_staged_shard(int(s))
+    store.write_manifest(StoreManifest.from_json(journal["manifest"]))
+    os.remove(intent)
+    # orphan stage files outside the journaled list were never part of
+    # the committed append — drop them
+    store.discard_staged_shards()
+    return True
 
 
 def union_kernel_names(db_paths: Sequence[str]) -> Dict[str, str]:
@@ -330,26 +384,39 @@ def run_append(db_paths: Sequence[str], out_dir: str,
     immutable history. The final manifest write garbage-collects stale
     summaries once (``TraceStore.gc_stale``).
 
-    Crash safety: individual shard/manifest writes are atomic, but the
-    append is a multi-file sequence (shards extended in place, watermark
-    advanced only at the final manifest write). An intent journal
-    (``append_intent.json``) brackets the sequence — if a previous
-    append died mid-way, the journal is still present and the next
-    ``run_append`` REFUSES to run (a blind retry would re-ingest the
-    interrupted run's rows on top of the already-extended shards).
-    Recovery: regenerate the store (or restore it from backup), which
-    clears the journal.
+    Crash safety: the append is a STAGED COMMIT. Phase 1 (prepare)
+    materializes every extended/new shard's full future contents under
+    ``.stage`` siblings — invisible to readers, nothing published, no
+    watermark moved; a crash here leaves only orphan stage files that
+    the next append discards and re-reads from the source DBs. Phase 2
+    opens with the intent journal (``append_intent.json``, version 2):
+    the staged shard list plus the complete post-append manifest. From
+    that write on the append is COMMITTED — each staged shard is
+    published by one atomic rename (+ per-shard partial invalidation),
+    then the journaled manifest lands and the journal is removed. A
+    crash anywhere in phase 2 is rolled FORWARD by
+    :func:`recover_append` (run automatically by the next
+    ``run_append``): surviving stage files are renamed (already-
+    published shards replay as no-ops), the journaled manifest is
+    written, and the journal cleared — exactly-once ingest, never a
+    double-read of the interrupted rows. Journals from the pre-staged
+    engine (no version-2 stage list) cannot be rolled forward and are
+    refused loudly, as before.
     """
     cfg = cfg or GenerationConfig()
     t0 = time.perf_counter()
     store = TraceStore(out_dir)
     intent = os.path.join(out_dir, "append_intent.json")
+    was_recovered = False
     if os.path.exists(intent):
-        raise ValueError(
-            "a previous append was interrupted mid-way (append_intent."
-            "json present) — the store may hold partially ingested rows "
-            "and the watermark was not advanced, so retrying would "
-            "double-ingest them; regenerate or restore the store")
+        # roll the interrupted append forward (raises for journals the
+        # staged-commit engine cannot replay), then ingest as usual —
+        # the recovered watermarks exclude already-published rows
+        was_recovered = recover_append(out_dir)
+    else:
+        # orphans from a preparer that died BEFORE journaling: their
+        # rows were never published, so just drop the stage files
+        store.discard_staged_shards()
     man = store.read_manifest()
     if "db_paths" not in man.extra or "db_rowid_hi" not in man.extra:
         raise ValueError(
@@ -430,14 +497,10 @@ def run_append(db_paths: Sequence[str], out_dir: str,
             "max_new_shards explicitly")
     cols = _concat_columns(parts)
     sid = plan.shard_of(cols["k_start"].astype(np.int64))
-    # everything below MUTATES the store: bracket it with the intent
-    # journal so an interrupted append is detected instead of retried
-    TraceStore._atomic_write(intent, json.dumps({
-        "old_t_end": man.t_end, "new_t_end": plan.t_end,
-        "old_watermarks": man.extra["db_rowid_hi"],
-        "new_watermarks": rowid_hi}, indent=2).encode())
+    # ---- phase 1: PREPARE — stage every future shard, publish nothing
     dirty: List[int] = []
     appended = 0
+    staged: List[int] = []
     for s in (np.unique(sid).tolist() if len(sid) else []):
         mask = sid == s
         new_cols = {c: cols[c][mask] for c in SHARD_COLUMNS}
@@ -447,14 +510,16 @@ def run_append(db_paths: Sequence[str], out_dir: str,
                         for c in SHARD_COLUMNS}
             if s < man.n_shards:
                 dirty.append(int(s))
-        store.write_shard(int(s), new_cols)
+        store.stage_shard(int(s), new_cols)
+        staged.append(int(s))
         appended += int(mask.sum())
     # every new shard index gets a file, empty ones included — same
     # layout as a fresh generation
     for s in range(man.n_shards, plan.n_shards):
-        if not store.has_shard(s):
-            store.write_shard(
+        if s not in staged and not store.has_shard(s):
+            store.stage_shard(
                 s, {c: np.zeros((0,), np.float64) for c in SHARD_COLUMNS})
+            staged.append(int(s))
 
     owner = list(man.shard_owner) + [
         int(i % max(man.n_ranks, 1))
@@ -465,14 +530,27 @@ def run_append(db_paths: Sequence[str], out_dir: str,
     # refresh the name table: appended rows can introduce new name ids
     extra["kernel_names"] = {**dict(extra.get("kernel_names", {})),
                              **union_kernel_names(db_paths)}
-    store.write_manifest(StoreManifest(
+    new_man = StoreManifest(
         t_start=plan.t_start, t_end=plan.t_end, n_shards=plan.n_shards,
         n_ranks=man.n_ranks, partitioning=man.partitioning,
-        columns=man.columns, shard_owner=owner, extra=extra))
-    os.remove(intent)                    # append committed atomically
+        columns=man.columns, shard_owner=owner, extra=extra)
+    # ---- phase 2: JOURNAL + COMMIT — from the journal write on, the
+    # append is committed: every staged rename below is idempotent and
+    # recover_append can replay the rest after a crash at ANY point
+    TraceStore._atomic_write(intent, json.dumps({
+        "version": APPEND_JOURNAL_VERSION,
+        "staged_shards": staged,
+        "manifest": new_man.to_json(),
+        "old_t_end": man.t_end, "new_t_end": plan.t_end,
+        "old_watermarks": man.extra["db_rowid_hi"],
+        "new_watermarks": rowid_hi}, indent=2).encode())
+    for s in staged:
+        store.commit_staged_shard(s)
+    store.write_manifest(new_man)
+    os.remove(intent)                    # append fully committed
     return AppendReport(
         n_shards=plan.n_shards,
         n_new_shards=plan.n_shards - man.n_shards,
         dirty_shards=sorted(dirty), appended_rows=appended,
         t_start=plan.t_start, t_end=plan.t_end,
-        seconds=time.perf_counter() - t0)
+        seconds=time.perf_counter() - t0, recovered=was_recovered)

@@ -444,6 +444,40 @@ class VariabilityPipeline:
         rep = run_append(db_paths, work_dir)
         return self._analyze(rep, work_dir)
 
+    def serve(self, store_dir: str, host: str = "127.0.0.1",
+              port: int = 0, serve_http: bool = True, ingest=None,
+              **cfg_kw):
+        """Put the store behind the versioned v1 HTTP service (see
+        :mod:`repro.serve.query_service`) on this pipeline's backend
+        and return the STARTED :class:`~repro.serve.QueryService`
+        (``port=0`` picks a free port — read it back from
+        ``svc.cfg.port``; pair with ``svc.stop()``). Extra keyword
+        arguments land on :class:`~repro.serve.ServiceConfig`;
+        ``ingest`` is an optional
+        :class:`~repro.serve.IngestConfig` for the streaming plane."""
+        from repro.serve.query_service import QueryService, ServiceConfig
+        cfg = ServiceConfig(backend=self.cfg.backend, host=host,
+                            port=port, ingest=ingest, **cfg_kw)
+        return QueryService(str(store_dir), cfg).start(
+            serve_http=serve_http)
+
+    def stream(self, store_dir: str, db_paths: Sequence[str],
+               host: str = "127.0.0.1", port: int = 0,
+               serve_http: bool = True, ingest=None, **cfg_kw):
+        """:meth:`serve` plus the live streaming ingest plane: the
+        returned service is already tailing ``db_paths`` — rank-DB
+        growth past the recorded rowid watermarks becomes ingest ticks
+        (staged-commit ``run_append`` + delta re-aggregation of the
+        fence queries), and fence transitions stream from
+        ``GET /v1/stream/fences``. Subscribe with
+        :class:`~repro.serve.QueryClient` (``client.fences(since)``)."""
+        from repro.serve.query_service import QueryService, ServiceConfig
+        cfg = ServiceConfig(backend=self.cfg.backend, host=host,
+                            port=port, ingest=ingest, **cfg_kw)
+        svc = QueryService(str(store_dir), cfg)
+        svc.ensure_ingestor().attach(list(db_paths))
+        return svc.start(serve_http=serve_http)
+
     def _analyze(self, gen: Union[GenerationReport, AppendReport],
                  work_dir: str) -> PipelineResult:
         agg = self.aggregate(work_dir)

@@ -115,6 +115,7 @@ import json
 import os
 import threading
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -246,6 +247,61 @@ class TraceStore:
         self.clear_partials(idx)
         return path
 
+    # -- staged shard commit (write-ahead append) --------------------------
+    # A multi-shard mutation (run_append) is not atomic as a sequence even
+    # though each write_shard is: a crash mid-sequence used to leave the
+    # store unrecoverable. Staging splits every shard write into a PREPARE
+    # (materialize the full new contents under a ``.stage`` sibling — no
+    # reader ever sees it) and a COMMIT (one rename + partial
+    # invalidation, idempotent), so a journal listing the staged indices
+    # can be rolled FORWARD after a crash: replayed commits are no-ops
+    # for shards already published, renames for the rest.
+
+    STAGE_SUFFIX = ".stage"
+
+    def stage_shard(self, idx: int, columns: Dict[str, np.ndarray]) -> str:
+        """Write one shard's FUTURE contents to its staged sibling
+        (``shard_{idx}.npz.stage``) without publishing it. Readers,
+        ``shard_stats`` and gc never see staged files; nothing is
+        invalidated until :meth:`commit_staged_shard`."""
+        path = os.path.join(self.root, shard_filename(idx)) \
+            + self.STAGE_SUFFIX
+        self._atomic_savez(path, columns)
+        return path
+
+    def commit_staged_shard(self, idx: int) -> bool:
+        """Publish a staged shard: one atomic rename over the live file,
+        then per-shard partial invalidation (the :meth:`write_shard`
+        contract). Idempotent — returns False when there is no staged
+        file, which is exactly the crash-recovery replay case where an
+        earlier attempt already committed this shard."""
+        final = os.path.join(self.root, shard_filename(idx))
+        try:
+            os.replace(final + self.STAGE_SUFFIX, final)
+        except FileNotFoundError:
+            return False
+        self.clear_partials(idx)
+        return True
+
+    def staged_shard_indices(self) -> List[int]:
+        out = []
+        suffix = ".npz" + self.STAGE_SUFFIX
+        for name in os.listdir(self.root):
+            if name.startswith("shard_") and name.endswith(suffix):
+                out.append(int(name[len("shard_"):-len(suffix)]))
+        return sorted(out)
+
+    def discard_staged_shards(self) -> int:
+        """Drop every un-committed staged file (orphans from a preparer
+        that died BEFORE journaling — their rows were never published
+        and will be re-read from the source DBs)."""
+        n = 0
+        for idx in self.staged_shard_indices():
+            n += self._quiet_remove(
+                os.path.join(self.root, shard_filename(idx))
+                + self.STAGE_SUFFIX)
+        return n
+
     def read_shard(self, idx: int) -> Dict[str, np.ndarray]:
         path = os.path.join(self.root, shard_filename(idx))
         self._count("shard_reads")
@@ -355,6 +411,12 @@ class TraceStore:
             return query
         if metrics is None:
             raise ValueError("either metrics or query must be given")
+        warnings.warn(
+            "passing (metrics, group_by, reducers) to summary_key/"
+            "partial_key is deprecated — build a repro.core.query.Query "
+            "and pass query=...; the folded Query mints an IDENTICAL "
+            "cache key, so existing cache entries stay valid",
+            DeprecationWarning, stacklevel=3)
         return Query(metrics=tuple(metrics), group_by=group_by,
                      reducers=tuple(reducers))
 

@@ -1,9 +1,14 @@
-"""Serving: prefill/decode steps, cache sharding, batched engine, and
-the concurrent query-serving front door (:mod:`.query_service`)."""
+"""Serving: prefill/decode steps, cache sharding, batched engine, the
+concurrent query-serving front door (:mod:`.query_service`), the live
+streaming ingest plane (:mod:`.stream`) and the v1 HTTP client
+(:mod:`.client`)."""
 try:  # the batched engine needs jax; the query service does not
     from .engine import (ServeConfig, ServeEngine, cache_specs,
                          make_decode_fn, make_prefill_fn)
 except ImportError:  # pragma: no cover - jax-less environments
     pass
+from .client import QueryClient, ServiceError
 from .query_service import (BudgetExceeded, QueryService, ServiceConfig,
                             SummaryCacheLRU)
+from .stream import (DEFAULT_FENCE_QUERY, FenceHub, IngestConfig,
+                     StreamIngestor)

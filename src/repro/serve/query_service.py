@@ -73,29 +73,63 @@ Per-request budget
     re-binning of a day-long trace — is rejected with HTTP 413 instead
     of stalling every other user's tick while it allocates.
 
+Ingest ticks (the streaming plane's writer)
+    :mod:`repro.serve.stream` schedules live append-mode ingest as a
+    SECOND TICK KIND through this same pipeline: an ingest tick runs
+    solo (never fused with query lanes), executes the staged-commit
+    ``run_append`` and then the plane's fence queries as owned lanes
+    against the extended store, and its commit hands the tick to
+    ``StreamIngestor.on_commit`` — watermark advance, fence-state
+    diffing and event publication all happen on the single commit
+    thread, the serialization point every other cross-tick write
+    already funnels through.
+
 Run it:
 
   PYTHONPATH=src python -m repro.serve.query_service --store DIR \\
       [--port 8321] [--tick-ms 10] [--workers 4] \\
-      [--summary-budget-mb 256] [--pack-budget-mb 0]
+      [--summary-budget-mb 256] [--pack-budget-mb 0] \\
+      [--attach rank0.sqlite rank1.sqlite] [--poll-ms 25]
 
-POST /query with a JSON body of Query specs (the ``--query`` schema:
-one spec object, or a list run as one request)::
+The HTTP surface is versioned under ``/v1/``::
 
-  curl -s localhost:8321/query -d '[{"metrics": ["k_stall"],
+  POST /v1/query          JSON body: one Query spec object or a list
+                          run as one request ->
+                          {"results": [...], "tick": {...}}
+  POST /v1/ingest/attach  {"db_paths": [...]} — tail rank DBs (starts
+                          the ingest plane on first use)
+  POST /v1/ingest/detach  {"db_paths": [...]}
+  GET  /v1/stream/fences  fence-event subscription: long-poll cursor
+                          (?since=SEQ&timeout_s=S -> {"events",
+                          "next_since"}) or SSE with
+                          ``Accept: text/event-stream``
+  GET  /v1/stats          service + ingest counters
+  GET  /v1/healthz        liveness probe
+
+  curl -s localhost:8321/v1/query -d '[{"metrics": ["k_stall"],
       "group_by": "m_kind"}]'
+
+Every error answers the SAME envelope — HTTP status plus
+``{"error": {"code", "message", "detail"}}`` with machine-readable
+codes (``bad_request``, ``budget_exceeded`` 413, ``tick_timeout`` 503,
+``no_ingest_plane`` 409, ``not_found`` 404). The legacy unversioned
+routes (``/query``, ``/stats``, ``/healthz``) keep answering as
+aliases of their v1 successors, stamped with a ``Deprecation: true``
+header and a ``Link: <...>; rel="successor-version"`` pointer.
 
 Response: ``{"results": [...], "tick": {"fused_width": N,
 "batched_fused": bool, "evicted": E, "inflight_hits": H, ...}}`` —
 per-query group/metric moment summaries plus the engine's execution
 provenance. A request whose tick dies or overruns
-``request_timeout_s`` gets HTTP 503 with ``reason: "tick_timeout"``
-(handlers never block past the deadline). ``GET /healthz`` is a
-liveness probe; ``GET /stats`` exposes service counters — ticks,
-fused widths, per-tick latency percentiles (p50/p95/p99 off a
-log2-bucket :class:`~repro.core.reducers.QuantileSketch`, bounded
-memory under sustained load), scan-worker utilization, eviction
-counts and the store's io_counts.
+``request_timeout_s`` gets HTTP 503 with code ``tick_timeout``
+(handlers never block past the deadline). ``GET /v1/stats`` exposes
+service counters — ticks, fused widths, per-tick latency percentiles
+(p50/p95/p99 off a log2-bucket
+:class:`~repro.core.reducers.QuantileSketch`, bounded memory under
+sustained load), scan-worker utilization, eviction counts, the
+store's io_counts and (when the ingest plane is up) the streaming
+provenance: rows ingested, dirty shards, event-to-fence latency
+percentiles.
 """
 
 from __future__ import annotations
@@ -111,15 +145,18 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, List, Optional, Sequence, Set, Tuple
+from urllib.parse import parse_qs, urlparse
 
 import numpy as np
 
 from repro.core.aggregation import ScanPool
 from repro.core.anomaly import report_for_query
+from repro.core.generation import run_append
 from repro.core.query import Query, QueryPlan
 from repro.core.reducers import N_BUCKETS, QuantileSketch, bucket_of
 from repro.core.tracestore import (TraceStore, pack_filename,
                                    summary_filename)
+from repro.serve.stream import IngestConfig, StreamIngestor
 
 # moment state width per (bin, group, metric) cell; the quantile sketch
 # rides N_BUCKETS more — the per-request budget estimates with these
@@ -155,18 +192,30 @@ class ServiceConfig:
     pipeline_depth: int = 4
     host: str = "127.0.0.1"
     port: int = 8321
+    # streaming ingest plane knobs, used when the plane is brought up
+    # (ensure_ingestor / POST /v1/ingest/attach); None = defaults
+    ingest: Optional[IngestConfig] = None
 
 
 @dataclasses.dataclass
 class _Pending:
-    """One admitted request riding the next tick."""
+    """One admitted request riding the next tick. ``kind="query"`` is a
+    client request; ``kind="ingest"`` is the streaming plane's append
+    tick — its ``queries`` are the plane's fence queries, executed on
+    the post-append store."""
 
     queries: List[Query]
+    kind: str = "query"
     done: threading.Event = dataclasses.field(
         default_factory=threading.Event)
     results: Optional[List[Dict]] = None
     tick_info: Optional[Dict] = None
-    error: Optional[Tuple[int, str]] = None
+    # (http_status, error_code, message) — the v1 error envelope triple
+    error: Optional[Tuple[int, str, str]] = None
+    # ingest-tick payload
+    ingest_paths: Optional[List[str]] = None
+    t_detect: float = 0.0               # event-to-fence latency anchor
+    max_new_shards: int = 100_000
 
 
 class _Slot:
@@ -183,7 +232,7 @@ class _Slot:
         self.event = threading.Event()
         self.qr = None                       # owner's QueryResult
         self.summary_key: Optional[str] = None
-        self.error: Optional[Tuple[int, str]] = None
+        self.error: Optional[Tuple[int, str, str]] = None
 
 
 @dataclasses.dataclass
@@ -198,6 +247,10 @@ class _Tick:
     t_admit: float
     shards: Set[int] = dataclasses.field(default_factory=set)
     release_sem: bool = False            # pipelined ticks hold a permit
+    kind: str = "query"                  # "query" | "ingest"
+    ingest: Optional[Dict] = None        # append provenance (exec stage)
+    ingest_error: Optional[str] = None
+    tick_info: Optional[Dict] = None     # filled at commit
 
 
 class _ByteBudgetLRU:
@@ -378,8 +431,13 @@ class QueryService:
         self.scan_pool = ScanPool(self.cfg.scan_workers)
         self._depth = max(1, int(self.cfg.pipeline_depth))
         self._queue: "queue.Queue[_Pending]" = queue.Queue()
+        self._deferred: Optional[_Pending] = None
         self._stop = threading.Event()
         self._seq = 0
+        self.ingestor: Optional[StreamIngestor] = None
+        self._ingestor_lock = threading.Lock()
+        self._started = False
+        self.ingest_requests = 0
         self._inflight: Dict[Tuple, _Slot] = {}
         self._inflight_lock = threading.Lock()
         self._depth_sem = threading.BoundedSemaphore(self._depth)
@@ -434,6 +492,42 @@ class QueryService:
         self._queue.put(pending)
         return pending
 
+    def submit_ingest(self, db_paths: Sequence[str],
+                      queries: Sequence[Query],
+                      t_detect: float = 0.0,
+                      max_new_shards: int = 100_000) -> _Pending:
+        """Enqueue one INGEST tick: append ``db_paths``' new rows to the
+        store, then execute ``queries`` (the plane's fence queries) on
+        the extended store — all through the normal admission ->
+        executor -> commit pipeline, so ingest interleaves with query
+        ticks and commits through the same single writer. Callers
+        (the :class:`~repro.serve.stream.StreamIngestor` tailer) must
+        not overlap ingest ticks — ``run_append`` journals a staged
+        commit and is not self-concurrent."""
+        pending = _Pending(
+            queries=list(queries), kind="ingest",
+            ingest_paths=[os.path.abspath(p) for p in db_paths],
+            t_detect=t_detect, max_new_shards=max_new_shards)
+        self.ingest_requests += 1
+        self._queue.put(pending)
+        return pending
+
+    def ensure_ingestor(self,
+                        cfg: Optional[IngestConfig] = None
+                        ) -> StreamIngestor:
+        """The streaming plane, created on first use (``POST
+        /v1/ingest/attach`` calls this). Config precedence: explicit
+        ``cfg`` > ``ServiceConfig.ingest`` > defaults. The tailer
+        thread starts immediately on a running service, else with
+        :meth:`start`."""
+        with self._ingestor_lock:
+            if self.ingestor is None:
+                self.ingestor = StreamIngestor(
+                    self, cfg or self.cfg.ingest)
+                if self._started:
+                    self.ingestor.start()
+            return self.ingestor
+
     # -- stage 1: admission (tick window + in-flight dedup) ----------------
     def _collect(self, block_s: float,
                  eager: bool = False) -> Optional[_Tick]:
@@ -449,18 +543,30 @@ class QueryService:
         up behind the running tick anyway — backpressure batching); on
         an idle pipeline the same wait is pure added latency. The
         sequential loop keeps the fixed window — that IS the
-        single-worker floor the serve bench measures against."""
-        try:
-            batch = [self._queue.get(timeout=block_s)]
-        except queue.Empty:
-            return None
+        single-worker floor the serve bench measures against.
+
+        An INGEST pending always gets a tick of its own (never fused
+        with query requests — its lanes must execute AFTER its append):
+        one arriving first becomes the tick immediately; one arriving
+        mid-window is deferred to be the NEXT tick and closes the
+        current batch."""
+        if self._deferred is not None:
+            first, self._deferred = self._deferred, None
+        else:
+            try:
+                first = self._queue.get(timeout=block_s)
+            except queue.Empty:
+                return None
+        if first.kind == "ingest":
+            return self._make_tick([first], kind="ingest")
+        batch = [first]
         now = time.monotonic()
         deadline = now + self.cfg.tick_ms / 1000.0
         # even an eager close lingers ~2ms past the first request: the
         # responses a commit releases trigger a burst of follow-ups that
         # should land in ONE wide tick, not fragment into several
         linger = now + min(self.cfg.tick_ms, 2.0) / 1000.0
-        while True:
+        while self._deferred is None:
             now = time.monotonic()
             remaining = deadline - now
             if remaining <= 0:
@@ -468,18 +574,31 @@ class QueryService:
             if eager and self._live_ticks == 0 and now >= linger:
                 break
             try:
-                batch.append(self._queue.get(
-                    timeout=min(remaining, 0.002) if eager else remaining))
+                p = self._queue.get(
+                    timeout=min(remaining, 0.002) if eager else remaining)
             except queue.Empty:
                 if not eager:
                     break
+                continue
+            if p.kind == "ingest":
+                self._deferred = p          # next tick, alone
+            else:
+                batch.append(p)
         # opportunistic: anything already queued rides along even if it
         # landed just past the deadline
-        while True:
+        while self._deferred is None:
             try:
-                batch.append(self._queue.get_nowait())
+                p = self._queue.get_nowait()
             except queue.Empty:
                 break
+            if p.kind == "ingest":
+                self._deferred = p
+            else:
+                batch.append(p)
+        return self._make_tick(batch)
+
+    def _make_tick(self, batch: List[_Pending],
+                   kind: str = "query") -> _Tick:
         self._seq += 1
         seq = self._seq
         flat: List[Tuple[Query, _Slot]] = []
@@ -490,7 +609,13 @@ class QueryService:
                 for q in p.queries:
                     key = (q.cache_key(), q.interval_ns)
                     slot = self._inflight.get(key)
-                    if slot is None:
+                    if slot is None or kind == "ingest":
+                        # an ingest tick always OWNS its fence lanes —
+                        # they must be computed on THIS tick's
+                        # post-append store, never borrowed from an
+                        # earlier (pre-append) tick. The overwritten
+                        # map entry is safe: the earlier owner retires
+                        # its slot only if the map still points at it
                         slot = _Slot(key, seq)
                         self._inflight[key] = slot
                         owned.append((q, slot))
@@ -498,16 +623,30 @@ class QueryService:
                         borrowed += 1
                     flat.append((q, slot))
         return _Tick(seq=seq, batch=batch, flat=flat, owned=owned,
-                     borrowed=borrowed, t_admit=time.monotonic())
+                     borrowed=borrowed, t_admit=time.monotonic(),
+                     kind=kind)
 
     # -- stage 2: execution (fused plan + borrowed waits + render) ---------
     def _exec_tick(self, tick: _Tick) -> None:
         """Compile + execute the tick's OWNED queries as one fused plan
         (scans fanned over the ScanPool), fill the slots, wait for any
         borrowed slots' owners, render every response body. Runs on the
-        executor — up to ``pipeline_depth`` ticks concurrently."""
+        executor — up to ``pipeline_depth`` ticks concurrently.
+
+        An ingest tick prepends its append: the staged-commit
+        ``run_append`` publishes the extended shards (atomic renames —
+        concurrently executing query ticks stay torn-free), THEN the
+        fence lanes compile against the refreshed manifest and execute
+        like any fused plan, touching only dirty/new shards."""
+        if tick.kind == "ingest":
+            self._exec_ingest_append(tick)
+            if tick.ingest_error is not None:
+                err = (500, "ingest_failed", tick.ingest_error)
+                for _, slot in tick.owned:
+                    slot.error = err
+                    slot.event.set()
         try:
-            if tick.owned:
+            if tick.owned and tick.ingest_error is None:
                 qplan = QueryPlan.compile(self.store,
                                           [q for q, _ in tick.owned],
                                           backend=self.cfg.backend)
@@ -529,7 +668,8 @@ class QueryService:
                     slot.summary_key = lane.summary_key
                     slot.event.set()
         except Exception as e:          # noqa: BLE001 — fail the tick,
-            err = (500, f"{type(e).__name__}: {e}")   # not the service
+            err = (500, "internal",                   # not the service
+                   f"{type(e).__name__}: {e}")
             for _, slot in tick.owned:
                 slot.error = err
                 slot.event.set()
@@ -548,8 +688,9 @@ class QueryService:
                 if err is not None:
                     continue
                 if not slot.event.is_set():
-                    err = (503, "tick timed out waiting on an "
-                                "in-flight computation (tick_timeout)")
+                    err = (503, "tick_timeout",
+                           "tick timed out waiting on an in-flight "
+                           "computation")
                 elif slot.error is not None:
                     err = slot.error
                 else:
@@ -566,6 +707,33 @@ class QueryService:
                 p.error = err
             else:
                 p.results = body
+
+    def _exec_ingest_append(self, tick: _Tick) -> None:
+        """The append half of an ingest tick: staged-commit
+        ``run_append`` over the pending's DB paths (rowid-bounded reads
+        — live-writer safe; an interrupted previous tick rolls forward
+        from its intent journal), then refresh the admission
+        estimator's manifest. Failures land in ``tick.ingest_error``
+        and fail the tick, never the service."""
+        pending = tick.batch[0]
+        try:
+            rep = run_append(pending.ingest_paths, self.store.root,
+                             max_new_shards=pending.max_new_shards)
+            man = self.store.read_manifest()
+            self.man = man              # estimate_cells sees the growth
+            tick.ingest = {
+                "rows_ingested": int(rep.appended_rows),
+                "dirty_shards": [int(s) for s in rep.dirty_shards],
+                "n_new_shards": int(rep.n_new_shards),
+                "n_shards": int(rep.n_shards),
+                "recovered": bool(rep.recovered),
+                "append_seconds": round(float(rep.seconds), 6),
+                "watermarks": {
+                    os.path.abspath(k): [int(x) for x in v]
+                    for k, v in man.extra.get("db_rowid_hi", {}).items()},
+            }
+        except Exception as e:          # noqa: BLE001
+            tick.ingest_error = f"{type(e).__name__}: {e}"
 
     # -- stage 3: commit (single writer) -----------------------------------
     def _commit(self, tick: _Tick) -> None:
@@ -596,6 +764,17 @@ class QueryService:
                      "inflight_hits": tick.borrowed,
                      "evicted": evicted,
                      "pack_evicted": pack_evicted}
+        tick.tick_info = tick_info
+        if tick.kind == "ingest":
+            tick_info["kind"] = "ingest"
+            # fence diff + hub publish BEFORE the done events: a caller
+            # whose ingest_once returns has its fence push guaranteed
+            # to be subscriber-visible already
+            if self.ingestor is not None:
+                self.ingestor.on_commit(tick)
+            tick_info.setdefault(
+                "ingest", tick.ingest
+                or {"error": tick.ingest_error})
         for p in tick.batch:
             p.tick_info = tick_info
             p.done.set()
@@ -641,7 +820,8 @@ class QueryService:
             while not self._depth_sem.acquire(timeout=0.1):
                 if self._stop.is_set():
                     for p in tick.batch:
-                        p.error = (503, "service stopping (tick_timeout)")
+                        p.error = (503, "tick_timeout",
+                                   "service stopping")
                         p.done.set()
                     with self._live_lock:
                         self._live_ticks -= 1
@@ -688,9 +868,16 @@ class QueryService:
             threading.Thread(target=self._server.serve_forever,
                              daemon=True,
                              name="query-service-http").start()
+        self._started = True
+        if self.ingestor is not None:
+            self.ingestor.start()
         return self
 
     def stop(self) -> None:
+        # tailer first: no new ingest ticks enter a draining pipeline
+        if self.ingestor is not None:
+            self.ingestor.stop()
+        self._started = False
         self._stop.set()
         if self._server is not None:
             self._server.shutdown()
@@ -727,6 +914,9 @@ class QueryService:
             "pack_evictions": self.packs.evictions,
             "pack_compactions": self.packs.compactions,
             "io_counts": dict(self.store.io_counts),
+            "ingest_requests": self.ingest_requests,
+            "ingest": (self.ingestor.stats()
+                       if self.ingestor is not None else None),
         }
 
 
@@ -780,6 +970,14 @@ def _render_result(qr) -> Dict:
     return out
 
 
+# legacy unversioned routes -> their /v1/ successors; served by the same
+# handlers but stamped with a ``Deprecation`` header (and a ``Link`` to
+# the successor) so clients can migrate on their own schedule
+_LEGACY_ROUTES = {"/query": "/v1/query",
+                  "/stats": "/v1/stats",
+                  "/healthz": "/v1/healthz"}
+
+
 def _make_handler(service: QueryService):
     class Handler(BaseHTTPRequestHandler):
         protocol_version = "HTTP/1.1"
@@ -787,59 +985,201 @@ def _make_handler(service: QueryService):
         def log_message(self, *args):   # noqa: D102 — quiet server
             pass
 
-        def _send(self, code: int, payload: Dict) -> None:
+        # -- envelope plumbing -------------------------------------------
+        def _route(self) -> Tuple[str, bool, Dict[str, List[str]]]:
+            """(v1 path, via-legacy-alias?, query params)."""
+            parsed = urlparse(self.path)
+            path = parsed.path.rstrip("/") or "/"
+            legacy = path in _LEGACY_ROUTES
+            return (_LEGACY_ROUTES.get(path, path), legacy,
+                    parse_qs(parsed.query))
+
+        def _send(self, code: int, payload: Dict,
+                  deprecated: bool = False) -> None:
             body = json.dumps(payload).encode()
             self.send_response(code)
             self.send_header("Content-Type", "application/json")
             self.send_header("Content-Length", str(len(body)))
+            if deprecated:
+                path = urlparse(self.path).path.rstrip("/")
+                self.send_header("Deprecation", "true")
+                self.send_header(
+                    "Link", f'<{_LEGACY_ROUTES.get(path, path)}>; '
+                            'rel="successor-version"')
             self.end_headers()
             self.wfile.write(body)
 
-        def do_GET(self):               # noqa: N802 (http.server API)
-            if self.path == "/healthz":
-                self._send(200, {"ok": True})
-            elif self.path == "/stats":
-                self._send(200, service.stats())
-            else:
-                self._send(404, {"error": f"no route {self.path}"})
+        def _fail(self, status: int, code: str, message: str,
+                  detail=None, deprecated: bool = False) -> None:
+            """The one error shape every route speaks: HTTP status +
+            ``{"error": {"code", "message", "detail"}}``."""
+            self._send(status, {"error": {"code": code,
+                                          "message": message,
+                                          "detail": detail}},
+                       deprecated=deprecated)
 
-        def do_POST(self):              # noqa: N802 (http.server API)
-            if self.path.rstrip("/") != "/query":
-                self._send(404, {"error": f"no route {self.path}"})
+        def _body(self):
+            n = int(self.headers.get("Content-Length", 0))
+            raw = self.rfile.read(n).decode() if n else ""
+            return json.loads(raw) if raw else None
+
+        # -- GET ----------------------------------------------------------
+        def do_GET(self):               # noqa: N802 (http.server API)
+            path, deprecated, params = self._route()
+            if path == "/v1/healthz":
+                self._send(200, {"ok": True, "api": "v1",
+                                 "ingest": service.ingestor is not None},
+                           deprecated=deprecated)
+            elif path == "/v1/stats":
+                self._send(200, service.stats(), deprecated=deprecated)
+            elif path == "/v1/stream/fences":
+                self._fences(params)
+            else:
+                self._fail(404, "not_found", f"no route {self.path}")
+
+        def _fences(self, params) -> None:
+            """Fence-event subscription: long-poll cursor by default
+            (``?since=SEQ&timeout_s=S`` -> ``{"events", "next_since"}``),
+            SSE when the client asks for ``text/event-stream``."""
+            ing = service.ingestor
+            if ing is None:
+                self._fail(409, "no_ingest_plane",
+                           "no ingest plane is running — attach rank "
+                           "DBs via POST /v1/ingest/attach first")
                 return
             try:
-                n = int(self.headers.get("Content-Length", 0))
-                specs = json.loads(self.rfile.read(n).decode() or "[]")
+                since = int(params.get("since", ["0"])[0])
+                timeout_s = min(
+                    float(params.get("timeout_s", ["30"])[0]),
+                    service.cfg.request_timeout_s)
+            except ValueError:
+                self._fail(400, "bad_request",
+                           "since/timeout_s must be numeric")
+                return
+            accept = self.headers.get("Accept", "")
+            if "text/event-stream" in accept or \
+                    params.get("sse", ["0"])[0] in ("1", "true"):
+                self._sse(ing, since, timeout_s)
+                return
+            events = ing.hub.wait_since(since, timeout_s)
+            self._send(200, {
+                "events": events,
+                "next_since": events[-1]["seq"] if events else since})
+
+        def _sse(self, ing, since: int, timeout_s: float) -> None:
+            """Server-sent events until ``timeout_s`` elapses or the
+            client hangs up; each fence event is one ``data:`` frame
+            with its seq as the SSE id (clients resume via ?since=)."""
+            self.close_connection = True
+            self.send_response(200)
+            self.send_header("Content-Type", "text/event-stream")
+            self.send_header("Cache-Control", "no-cache")
+            self.send_header("Connection", "close")
+            self.end_headers()
+            cursor = since
+            deadline = time.monotonic() + timeout_s
+            try:
+                while (time.monotonic() < deadline
+                       and not service._stop.is_set()):
+                    for e in ing.hub.wait_since(cursor, timeout_s=1.0):
+                        frame = (f"id: {e['seq']}\n"
+                                 f"event: {e['kind']}\n"
+                                 f"data: {json.dumps(e)}\n\n")
+                        self.wfile.write(frame.encode())
+                        cursor = e["seq"]
+                    self.wfile.flush()
+            except (BrokenPipeError, ConnectionResetError):
+                pass                     # subscriber went away
+
+        # -- POST ---------------------------------------------------------
+        def do_POST(self):              # noqa: N802 (http.server API)
+            path, deprecated, _ = self._route()
+            if path == "/v1/query":
+                self._query(deprecated)
+            elif path == "/v1/ingest/attach":
+                self._attach()
+            elif path == "/v1/ingest/detach":
+                self._detach()
+            else:
+                self._fail(404, "not_found", f"no route {self.path}")
+
+        def _query(self, deprecated: bool) -> None:
+            try:
+                specs = self._body() or []
                 if isinstance(specs, dict):
                     specs = [specs]
                 queries = [Query.from_spec(s) for s in specs]
             except (ValueError, TypeError, KeyError) as e:
-                self._send(400, {"error": f"bad query spec: {e}"})
+                self._fail(400, "bad_request", f"bad query spec: {e}",
+                           deprecated=deprecated)
                 return
             try:
                 pending = service.submit(queries)
             except BudgetExceeded as e:
-                self._send(413, {"error": str(e)})
+                self._fail(413, "budget_exceeded", str(e),
+                           detail={"max_cells":
+                                   service.cfg.max_cells_per_request},
+                           deprecated=deprecated)
                 return
             except ValueError as e:
-                self._send(400, {"error": str(e)})
+                self._fail(400, "bad_request", str(e),
+                           deprecated=deprecated)
                 return
             # bounded wait: a tick worker dying mid-tick (or a scan
             # overrunning the deadline) yields 503/tick_timeout, never
             # a handler thread parked on done.wait() forever
             if not pending.done.wait(service.cfg.request_timeout_s):
-                self._send(503, {"error": "tick timed out",
-                                 "reason": "tick_timeout"})
+                self._fail(503, "tick_timeout", "tick timed out",
+                           deprecated=deprecated)
                 return
             if pending.error is not None:
-                code, msg = pending.error
-                payload = {"error": msg}
-                if code == 503:
-                    payload["reason"] = "tick_timeout"
-                self._send(code, payload)
+                status, code, msg = pending.error
+                self._fail(status, code, msg, deprecated=deprecated)
                 return
             self._send(200, {"results": pending.results,
-                             "tick": pending.tick_info})
+                             "tick": pending.tick_info},
+                       deprecated=deprecated)
+
+        def _db_paths(self):
+            body = self._body()
+            if (not isinstance(body, dict)
+                    or not isinstance(body.get("db_paths"), list)
+                    or not all(isinstance(p, str)
+                               for p in body["db_paths"])
+                    or not body["db_paths"]):
+                raise ValueError(
+                    'body must be {"db_paths": ["/path/rank0.sqlite", '
+                    '...]}')
+            return body["db_paths"]
+
+        def _attach(self) -> None:
+            try:
+                paths = self._db_paths()
+            except ValueError as e:
+                self._fail(400, "bad_request", str(e))
+                return
+            ing = service.ensure_ingestor()
+            added = ing.attach(paths)
+            self._send(200, {
+                "attached": added,
+                "tailing": ing.attached(),
+                "watermarks": {p: list(w)
+                               for p, w in ing.watermarks().items()}})
+
+        def _detach(self) -> None:
+            try:
+                paths = self._db_paths()
+            except ValueError as e:
+                self._fail(400, "bad_request", str(e))
+                return
+            ing = service.ingestor
+            if ing is None:
+                self._fail(409, "no_ingest_plane",
+                           "no ingest plane is running")
+                return
+            removed = ing.detach(paths)
+            self._send(200, {"detached": removed,
+                             "tailing": ing.attached()})
 
     return Handler
 
@@ -867,6 +1207,11 @@ def main() -> None:
     ap.add_argument("--pack-budget-mb", type=float, default=0.0,
                     help="partial-pack byte budget for LRU "
                          "compaction/eviction (0 = unbounded)")
+    ap.add_argument("--attach", nargs="*", default=[], metavar="DB",
+                    help="rank DBs to tail from startup (starts the "
+                         "streaming ingest plane)")
+    ap.add_argument("--poll-ms", type=float, default=25.0,
+                    help="ingest tailer watermark-probe cadence")
     args = ap.parse_args()
     cfg = ServiceConfig(
         tick_ms=args.tick_ms, backend=args.backend,
@@ -876,11 +1221,16 @@ def main() -> None:
         pack_budget_bytes=(int(args.pack_budget_mb * 1024 * 1024)
                            or None),
         scan_workers=args.workers, pipeline_depth=args.workers,
-        host=args.host, port=args.port)
-    svc = QueryService(args.store, cfg).start()
+        host=args.host, port=args.port,
+        ingest=IngestConfig(poll_ms=args.poll_ms))
+    svc = QueryService(args.store, cfg)
+    if args.attach:
+        svc.ensure_ingestor().attach(args.attach)
+    svc.start()
     print(f"query service on http://{cfg.host}:{cfg.port} "
           f"(store={args.store}, tick={cfg.tick_ms}ms, "
-          f"backend={cfg.backend}, workers={args.workers})", flush=True)
+          f"backend={cfg.backend}, workers={args.workers}, "
+          f"tailing={len(args.attach)} DBs)", flush=True)
     try:
         while True:
             time.sleep(3600)

@@ -138,7 +138,8 @@ def test_over_budget_request_is_rejected_413(store_dir):
                              [{"metrics": ["k_stall"],
                                "interval_ns": 1000}])
         assert status == 413
-        assert "budget" in body["error"]
+        assert body["error"]["code"] == "budget_exceeded"
+        assert "budget" in body["error"]["message"]
         assert QueryService(store_dir).store.io_counts["shard_reads"] == 0
     finally:
         svc.stop()
@@ -245,7 +246,7 @@ def test_overlapping_ticks_share_inflight_computation(store_dir,
 def test_dead_tick_worker_yields_503_tick_timeout(store_dir,
                                                   monkeypatch):
     """A tick worker killed mid-tick (its tick never fills slots, never
-    commits) must surface as HTTP 503 with ``reason=tick_timeout``
+    commits) must surface as HTTP 503 with error code ``tick_timeout``
     within ``request_timeout_s`` — never a handler parked forever — and
     the service keeps serving fresh keys afterwards."""
     killed = threading.Event()
@@ -267,7 +268,7 @@ def test_dead_tick_worker_yields_503_tick_timeout(store_dir,
                              [{"metrics": ["k_stall"],
                                "group_by": "m_kind"}], timeout=30)
         assert status == 503
-        assert body["reason"] == "tick_timeout"
+        assert body["error"]["code"] == "tick_timeout"
         # the pipeline survived its dead worker: a different canonical
         # query rides a healthy tick
         status, body = _post(svc.cfg.port,
