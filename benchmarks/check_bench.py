@@ -38,6 +38,14 @@ Floors (the repo's banked acceptance bars):
                 ``size_independence_ok``, ``bit_identity_ok`` —
                 streamed store == cold rebuild at quiesce — and
                 ``all_batches_fenced_ok`` flags also bind)
+  ingest        selective (pushed-down) vs full ingest of the same
+                nvprof-schema fixtures  ``rows_read_reduction``     >= 3x
+                (source-DB event rows fetched, full / selective; the
+                record's ``bit_identity_nvprof_ok`` /
+                ``bit_identity_nsys_ok`` — fixture ingest == direct
+                synthetic build, shard files bitwise —
+                ``pushdown_identity_ok`` and
+                ``pushdown_accounting_ok`` flags bind even on smoke)
 
 Records produced with ``--smoke`` carry ``"smoke": true`` and are held
 only to STRUCTURAL checks (schema, finite positive timings, the bench's
@@ -90,6 +98,14 @@ SCHEMAS = {
     # also bind; bit-identity binds even on smoke)
     "stream": ("fence_headroom",
                ("p99_small_ms", "p99_large_ms", "wall_s"), 1.0),
+    # ingest's gated number is the source-DB IO cut from ingest-time
+    # predicate pushdown: full ingest_rows_read / selective
+    # ingest_rows_read on the same nvprof fixtures (the record's own
+    # bit_identity_nvprof_ok / bit_identity_nsys_ok /
+    # pushdown_identity_ok / pushdown_accounting_ok flags also bind,
+    # even on smoke)
+    "ingest": ("rows_read_reduction",
+               ("full_ingest_us", "selective_ingest_us", "wall_s"), 3.0),
 }
 
 # extra non-smoke floors beyond the headline number: bench name ->

@@ -1,0 +1,174 @@
+"""Real-profiler ingestion benchmark (BENCH_ingest.json).
+
+Exercises the :mod:`repro.ingest` adapter plane on bit-faithful nvprof-
+and Nsight-schema SQLite fixtures and banks the two properties it
+sells:
+
+  1. **Ingest-time predicate pushdown cuts source-DB IO** — the same
+     workload is ingested twice from the nvprof fixtures: once in full
+     and once with a selective Query (central time window + an 8-name
+     kernel subset) pushed into the SQLite reads. The gated number is
+     ``rows_read_reduction`` = full ``ingest_rows_read`` / selective
+     ``ingest_rows_read`` (floor 3x in :mod:`benchmarks.check_bench`;
+     the central window alone is an ~8x kernel cut, so the floor holds
+     with margin while memcpys — never filtered, the join needs them —
+     damp the ratio). The selective run must also account for every
+     excluded row: read + skipped == the full run's read count
+     (``pushdown_accounting_ok``).
+  2. **Ingested == synthetic, bitwise** — stores built from the nvprof
+     AND Nsight fixtures are compared shard-file-by-shard-file against
+     the direct synthetic build (``bit_identity_nvprof_ok`` /
+     ``bit_identity_nsys_ok``), and the selective store answers its own
+     query bit-identically to the full store
+     (``pushdown_identity_ok``). All three flags bind even on smoke.
+
+Usage:
+
+  PYTHONPATH=src python -m benchmarks.ingest_bench --smoke \\
+      --out BENCH_ingest.json
+  PYTHONPATH=src python -m benchmarks.ingest_bench --scale medium \\
+      --out BENCH_ingest.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import (GenerationConfig, Query, SyntheticSpec, TraceStore,
+                        generate_synthetic, run_aggregation,
+                        run_generation, write_synthetic_dbs)
+from repro.ingest import write_fixture_dbs
+
+ROWS_READ_REDUCTION_FLOOR = 3.0
+
+
+def _stores_bit_identical(a_dir: str, b_dir: str) -> bool:
+    sa, sb = TraceStore(a_dir), TraceStore(b_dir)
+    ma, mb = sa.read_manifest(), sb.read_manifest()
+    if (ma.t_start, ma.t_end, ma.n_shards) != \
+            (mb.t_start, mb.t_end, mb.n_shards):
+        return False
+    if ma.extra["kernel_names"] != mb.extra["kernel_names"]:
+        return False
+    for s in range(ma.n_shards):
+        ca, cb = sa.read_shard(s), sb.read_shard(s)
+        for col in ca:
+            if not np.array_equal(ca[col], cb[col]):
+                return False
+    return True
+
+
+def _agg_identical(a_dir: str, b_dir: str, q: Query) -> bool:
+    a = run_aggregation(a_dir, query=q)
+    b = run_aggregation(b_dir, query=q)
+    return all(np.array_equal(getattr(a.stats, f), getattr(b.stats, f))
+               for f in ("count", "sum", "sumsq", "min", "max"))
+
+
+def run(scale: str, smoke: bool) -> Dict:
+    if smoke:
+        n_ranks, kernels, duration = 2, 2_000, 12.0
+    elif scale == "medium":
+        n_ranks, kernels, duration = 4, 20_000, 80.0
+    else:
+        n_ranks, kernels, duration = 2, 8_000, 40.0
+    root = tempfile.mkdtemp(prefix="repro_ingest_bench_")
+    t0 = time.perf_counter()
+
+    ds = generate_synthetic(SyntheticSpec(
+        n_ranks=n_ranks, kernels_per_rank=kernels,
+        memcpys_per_rank=max(kernels // 8, 50),
+        duration_s=duration, seed=5))
+    native = write_synthetic_dbs(ds, os.path.join(root, "native"))
+    nvprof = write_fixture_dbs(ds, os.path.join(root, "nvprof"),
+                               flavor="nvprof")
+    nsys = write_fixture_dbs(ds, os.path.join(root, "nsys"),
+                             flavor="nsys")
+
+    # --- bit identity: fixture ingest == direct synthetic build ---------
+    store_native = os.path.join(root, "store_native")
+    run_generation(native, store_native, n_ranks=n_ranks)
+    store_nsys = os.path.join(root, "store_nsys")
+    run_generation(nsys, store_nsys, n_ranks=n_ranks)
+
+    # --- full vs selective ingest of the nvprof fixtures ----------------
+    store_full = os.path.join(root, "store_full")
+    full_store = TraceStore(store_full)
+    t_full = time.perf_counter()
+    run_generation(nvprof, store_full, n_ranks=n_ranks, store=full_store)
+    full_us = (time.perf_counter() - t_full) * 1e6
+    rows_full = int(full_store.io_counts["ingest_rows_read"])
+
+    man = full_store.read_manifest()
+    lo, hi = man.t_start, man.t_end
+    window = (lo + (hi - lo) * 7 // 16, lo + (hi - lo) * 9 // 16)
+    q = Query(metrics=("k_stall",), time_window=window,
+              kernel_names=tuple(range(8)))
+    store_sel = os.path.join(root, "store_selective")
+    sel_store = TraceStore(store_sel)
+    t_sel = time.perf_counter()
+    run_generation(nvprof, store_sel, n_ranks=n_ranks,
+                   cfg=GenerationConfig(pushdown=q), store=sel_store)
+    sel_us = (time.perf_counter() - t_sel) * 1e6
+    rows_sel = int(sel_store.io_counts["ingest_rows_read"])
+    rows_skipped = int(sel_store.io_counts["ingest_rows_skipped"])
+
+    wall = time.perf_counter() - t0
+    return {
+        "bench": "ingest",
+        "smoke": smoke,
+        "scale": scale,
+        "n_ranks": n_ranks,
+        "kernels_per_rank": kernels,
+        "full_ingest_us": full_us,
+        "selective_ingest_us": sel_us,
+        "rows_read_full": rows_full,
+        "rows_read_selective": rows_sel,
+        "rows_skipped_selective": rows_skipped,
+        "rows_read_reduction": rows_full / max(rows_sel, 1),
+        "rows_read_reduction_floor": ROWS_READ_REDUCTION_FLOOR,
+        "wall_s": wall,
+        # binding even on smoke: a byte of drift between an ingested
+        # fixture and the direct synthetic build is a correctness bug
+        "bit_identity_nvprof_ok": _stores_bit_identical(store_native,
+                                                        store_full),
+        "bit_identity_nsys_ok": _stores_bit_identical(store_native,
+                                                      store_nsys),
+        "pushdown_identity_ok": _agg_identical(store_full, store_sel, q),
+        # every kernel row the selective run did not read is accounted
+        # for SQL-side (skipped), never silently dropped
+        "pushdown_accounting_ok": bool(rows_sel + rows_skipped
+                                       == rows_full),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="small",
+                    choices=["small", "medium"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny dataset; floors do not bind (identity "
+                         "flags still do)")
+    ap.add_argument("--out", default="BENCH_ingest.json")
+    args = ap.parse_args()
+    rec = run(args.scale, args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=2)
+        f.write("\n")
+    print(json.dumps(rec, indent=2))
+    if not args.smoke and rec["rows_read_reduction"] < \
+            ROWS_READ_REDUCTION_FLOOR:
+        raise SystemExit(
+            f"rows_read_reduction {rec['rows_read_reduction']:.2f}x "
+            f"below the {ROWS_READ_REDUCTION_FLOOR:.0f}x floor")
+
+
+if __name__ == "__main__":
+    main()

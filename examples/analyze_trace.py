@@ -25,6 +25,17 @@ Trace diff & regression gating (the CI verdict pipeline):
   # exit 1 when the verdict is "regressed"
   python examples/analyze_trace.py --diff /tmp/base /tmp/cand \\
       --diff-out verdict.json
+
+Ingesting real profiler traces (Nsight Systems / nvprof SQLite exports):
+
+  # sniff + ingest exported traces through the TraceSource adapter —
+  # the schema dialect is detected per file, reads are chunk-bounded
+  python examples/analyze_trace.py --ingest-nsight report0.sqlite \\
+      --ingest-nsight report1.sqlite --ranks 2
+  # selective ingest: push the predicates into the SQLite reads and
+  # print how many rows were skipped SQL-side
+  python examples/analyze_trace.py --ingest-nsight report0.sqlite \\
+      --push-window 5000000000 9000000000 --push-names 0,1,2,3
 """
 
 import argparse
@@ -47,6 +58,24 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--db", action="append", default=[],
                     help="rank SQLite DB (repeatable)")
+    ap.add_argument("--ingest-nsight", action="append", default=[],
+                    metavar="EXPORT.sqlite",
+                    help="real profiler SQLite export (Nsight Systems "
+                         "or nvprof; repeatable) — sniffed, then "
+                         "ingested through the TraceSource adapter "
+                         "exactly like a --db rank DB")
+    ap.add_argument("--push-window", nargs=2, type=int, default=None,
+                    metavar=("T0_NS", "T1_NS"),
+                    help="ingest-time pushdown: only kernels with "
+                         "start in [T0, T1) are read from the source "
+                         "DBs (compiled into the SQLite WHERE clause)")
+    ap.add_argument("--push-names", default=None, metavar="ID,ID,...",
+                    help="ingest-time pushdown: comma-separated kernel "
+                         "name ids to keep at read time")
+    ap.add_argument("--push-ranks", default=None, metavar="R,R,...",
+                    help="ingest-time pushdown: comma-separated source "
+                         "DB indices to ingest; others are skipped "
+                         "whole (counted, never read)")
     ap.add_argument("--ranks", type=int, default=4)
     ap.add_argument("--backend", default="process",
                     choices=["serial", "process", "jax"])
@@ -108,12 +137,22 @@ def main() -> None:
         return
 
     tmp = tempfile.mkdtemp(prefix="repro_analyze_")
-    db_paths = args.db
+    db_paths = list(args.db)
+    if args.ingest_nsight:
+        from repro.ingest import sniff_schema
+        print("sniffing profiler exports:")
+        for p in args.ingest_nsight:
+            s = sniff_schema(p)
+            print(f"  {p}: dialect={s.kind} kernel_table={s.kernel_table}"
+                  f" names={s.string_table or '(none)'}"
+                  f" stall={'yes' if s.stall_col else 'no'}")
+        db_paths += list(args.ingest_nsight)
     if not db_paths:
         print("no --db given: generating a synthetic dataset")
         ds = generate_synthetic(SyntheticSpec(n_ranks=2))
         db_paths = write_synthetic_dbs(ds, os.path.join(tmp, "dbs"))
 
+    pushdown = _pushdown_from_args(args)
     metrics = args.metric or ["k_stall"]
     # a quantile-family score pulls the "quantile" reducer into the suite
     # automatically (PipelineConfig.reducer_suite)
@@ -122,9 +161,16 @@ def main() -> None:
         metrics=metrics, group_by=args.group_by,
         anomaly_score=args.score,
         generation=GenerationConfig(
-            interval_ns=int(args.interval_ms * 1e6)))
+            interval_ns=int(args.interval_ms * 1e6),
+            pushdown=pushdown))
     pipe = VariabilityPipeline(cfg)
     res = pipe.run(db_paths, os.path.join(tmp, "store"))
+    gen = res.generation
+    if gen.ingest_rows_read or gen.ingest_rows_skipped:
+        total = gen.ingest_rows_read + gen.ingest_rows_skipped
+        print(f"ingest: {gen.ingest_rows_read:,} event rows read, "
+              f"{gen.ingest_rows_skipped:,} skipped by pushdown "
+              f"({total:,} in range)")
 
     stats = res.aggregation.stats
     occ = stats.count > 0
@@ -176,6 +222,19 @@ def main() -> None:
 
     if args.append_demo:
         _append_demo(pipe, os.path.join(tmp, "store"), db_paths, tmp)
+
+
+def _pushdown_from_args(args):
+    """Compile the --push-* flags into an ingest-time pushdown Query."""
+    if not (args.push_window or args.push_names or args.push_ranks):
+        return None
+    from repro.core import Query
+    return Query(
+        time_window=(tuple(args.push_window) if args.push_window else None),
+        kernel_names=(tuple(int(x) for x in args.push_names.split(","))
+                      if args.push_names else None),
+        ranks=(tuple(int(x) for x in args.push_ranks.split(","))
+               if args.push_ranks else None))
 
 
 # one kernel family ("layer_norm": synthetic name ids congruent mod 21)

@@ -271,6 +271,42 @@ def _read_query(conn: sqlite3.Connection, query: str,
     return cur.fetchall()
 
 
+def kernel_rows_to_table(rows: Sequence[tuple]) -> EventTable:
+    """Convert kernel rows ``(start, end, deviceId, streamId, name_id,
+    memory_stall)`` to an :class:`EventTable` — THE conversion every
+    reader shares (``read_rank_db`` and the profiler-ingest adapter), so
+    a store built through either path is bit-identical: one float64
+    matrix pass, then per-column casts. Converting chunk-by-chunk and
+    concatenating yields the same bits (casts are elementwise)."""
+    if not len(rows):
+        return EventTable.empty()
+    a = np.asarray(rows, dtype=np.float64)
+    n = a.shape[0]
+    return EventTable(
+        start=a[:, 0].astype(np.int64), end=a[:, 1].astype(np.int64),
+        device=a[:, 2].astype(np.int32), stream=a[:, 3].astype(np.int32),
+        memory_stall=a[:, 5].astype(np.float32),
+        bytes=np.zeros(n, np.int64), copy_kind=np.zeros(n, np.int32),
+        name_id=a[:, 4].astype(np.int32), kind=np.zeros(n, np.int32))
+
+
+def memcpy_rows_to_table(rows: Sequence[tuple]) -> EventTable:
+    """Convert memcpy rows ``(start, end, deviceId, streamId, bytes,
+    copyKind)`` to an :class:`EventTable` (see
+    :func:`kernel_rows_to_table` for the bit-identity contract)."""
+    if not len(rows):
+        return EventTable.empty()
+    a = np.asarray(rows, dtype=np.float64)
+    n = a.shape[0]
+    return EventTable(
+        start=a[:, 0].astype(np.int64), end=a[:, 1].astype(np.int64),
+        device=a[:, 2].astype(np.int32), stream=a[:, 3].astype(np.int32),
+        memory_stall=np.zeros(n, np.float32),
+        bytes=a[:, 4].astype(np.int64),
+        copy_kind=a[:, 5].astype(np.int32),
+        name_id=np.zeros(n, np.int32), kind=np.ones(n, np.int32))
+
+
 def read_rank_db(path: str, rank: int,
                  start: Optional[int] = None,
                  end: Optional[int] = None,
@@ -334,52 +370,33 @@ def read_rank_db(path: str, rank: int,
     finally:
         conn.close()
 
-    def _kernels(rows):
-        if not rows:
-            return EventTable.empty()
-        a = np.asarray(rows, dtype=np.float64)
-        n = a.shape[0]
-        return EventTable(
-            start=a[:, 0].astype(np.int64), end=a[:, 1].astype(np.int64),
-            device=a[:, 2].astype(np.int32), stream=a[:, 3].astype(np.int32),
-            memory_stall=a[:, 5].astype(np.float32),
-            bytes=np.zeros(n, np.int64), copy_kind=np.zeros(n, np.int32),
-            name_id=a[:, 4].astype(np.int32), kind=np.zeros(n, np.int32))
-
-    def _memcpys(rows):
-        if not rows:
-            return EventTable.empty()
-        a = np.asarray(rows, dtype=np.float64)
-        n = a.shape[0]
-        return EventTable(
-            start=a[:, 0].astype(np.int64), end=a[:, 1].astype(np.int64),
-            device=a[:, 2].astype(np.int32), stream=a[:, 3].astype(np.int32),
-            memory_stall=np.zeros(n, np.float32),
-            bytes=a[:, 4].astype(np.int64),
-            copy_kind=a[:, 5].astype(np.int32),
-            name_id=np.zeros(n, np.int32), kind=np.ones(n, np.int32))
-
     gpus = [GpuInfo(id=int(r[0]), name=str(r[1]), bandwidth=int(r[2]),
                     memory=int(r[3]), sm_count=int(r[4]),
                     cc_major=int(r[5]), cc_minor=int(r[6])) for r in g_rows]
-    return RankTrace(rank=rank, kernels=_kernels(k_rows),
-                     memcpys=_memcpys(m_rows), gpus=gpus,
+    return RankTrace(rank=rank, kernels=kernel_rows_to_table(k_rows),
+                     memcpys=memcpy_rows_to_table(m_rows), gpus=gpus,
                      names={int(r[0]): str(r[1]) for r in s_rows})
 
 
 def read_kernel_names(path: str) -> Dict[int, str]:
-    """The ``StringIds`` kernel-name table of one rank DB, ``{} `` when
-    the DB predates the table (older stores keep working, with numeric
-    fallback names downstream)."""
+    """The kernel-name string table of one rank DB, tolerating both
+    profiler spellings: Nsight Systems' ``StringIds (id, value)`` (also
+    the native synthetic schema) and nvprof's ``StringTable (_id_,
+    value)``. ``{}`` when the DB predates both tables (older stores keep
+    working, with numeric fallback names downstream)."""
     conn = sqlite3.connect(path)
     try:
-        try:
-            rows = _read_query(conn, f"SELECT id, value FROM {STRING_TABLE}")
-        except sqlite3.OperationalError:
-            return {}
+        for table, id_col in ((STRING_TABLE, "id"),
+                              ("StringTable", "_id_")):
+            try:
+                rows = _read_query(
+                    conn, f"SELECT {id_col}, value FROM {table}")
+            except sqlite3.OperationalError:
+                continue
+            return {int(r[0]): str(r[1]) for r in rows}
     finally:
         conn.close()
-    return {int(r[0]): str(r[1]) for r in rows}
+    return {}
 
 
 def table_rowid_hi(path: str) -> Tuple[int, int]:

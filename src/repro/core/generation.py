@@ -30,8 +30,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .events import (EventTable, RankTrace, read_kernel_names, read_rank_db,
-                     kernel_time_range_db, table_rowid_hi)
+from .events import EventTable, RankTrace
+from .query import Query
 from .sharding import (ShardPlan, assignment, contiguous_rank_range,
                        owner_of_shards)
 from .tracestore import StoreManifest, TraceStore
@@ -54,13 +54,25 @@ class GenerationConfig:
     partitioning: str = "block"               # paper's choice
     join_window_ns: int = 1_000_000           # memcpy overlap window (+/-)
     join_cap: int = 8                         # max memcpys joined per kernel
+    # Ingest-time predicate pushdown: a Query (or its to_spec() dict —
+    # the form survives a dataclasses.asdict round-trip through process
+    # workers) whose time_window / kernel_names compile into SQL WHERE
+    # clauses and whose ranks skip whole source DBs. Pushdown is an IO
+    # optimization: analysis re-applies the same predicates row-wise, so
+    # the selective store answers that query identically to a full one.
+    pushdown: Optional[object] = None
+    chunk_rows: Optional[int] = None          # rowid-page size for reads
 
 
 @dataclasses.dataclass
 class GenerationReport:
     """``rows_per_table`` counts the raw rows the rank queries actually
     extracted (the analyzed [t_start, t_end) range — for KERNEL that is
-    the whole table since kernels define the range)."""
+    the whole table since kernels define the range).
+
+    ``ingest_rows_read`` / ``ingest_rows_skipped`` mirror the
+    TraceStore io_counts of the same names: event rows fetched from the
+    source DBs vs. rows a pushdown predicate excluded SQL-side."""
 
     n_shards: int
     n_ranks: int
@@ -69,6 +81,8 @@ class GenerationReport:
     rows_per_table: Dict[str, int]
     joined_rows: int
     seconds: float
+    ingest_rows_read: int = 0
+    ingest_rows_skipped: int = 0
 
 
 @dataclasses.dataclass
@@ -140,22 +154,50 @@ def recover_append(out_dir: str) -> bool:
     return True
 
 
-def union_kernel_names(db_paths: Sequence[str]) -> Dict[str, str]:
-    """Union of every DB's kernel-name string table, JSON-manifest shaped
+def _resolve_sources(db_paths: Sequence,
+                     cfg: Optional[GenerationConfig] = None) -> List:
+    """Resolve each element of ``db_paths`` — a filesystem path to any
+    supported CUPTI SQLite dialect (native synthetic, nvprof, Nsight
+    Systems) or an already-constructed TraceSource — into a TraceSource.
+    Imported lazily: the core layer must not depend on :mod:`repro.ingest`
+    at module scope (ingest imports core)."""
+    from repro.ingest.cupti_sqlite import as_trace_source
+    chunk = cfg.chunk_rows if cfg is not None else None
+    return [as_trace_source(p, chunk_rows=chunk) for p in db_paths]
+
+
+def _pushdown_query(pushdown) -> Optional[Query]:
+    """Normalize ``GenerationConfig.pushdown`` (Query | spec dict | None)
+    into a Query. Dicts arrive two ways: a user-written ``to_spec()``
+    form, or the full-field dict ``dataclasses.asdict`` produces when the
+    config crosses a process-pool boundary — both construct cleanly."""
+    if pushdown is None or isinstance(pushdown, Query):
+        return pushdown
+    if isinstance(pushdown, dict):
+        return Query(**pushdown)
+    raise TypeError(
+        f"pushdown must be a Query or its spec dict, got {type(pushdown)!r}")
+
+
+def union_kernel_names(db_paths: Sequence) -> Dict[str, str]:
+    """Union of every source's kernel-name table, JSON-manifest shaped
     (``{str(name_id): name}``). Conflicting spellings for one id resolve
     last-DB-wins — profiling ranks of one run share a build, so real
-    conflicts do not arise."""
+    conflicts do not arise. Accepts paths or TraceSources."""
     names: Dict[str, str] = {}
-    for p in db_paths:
-        names.update({str(i): n for i, n in read_kernel_names(p).items()})
+    for src in _resolve_sources(db_paths):
+        names.update({str(i): n for i, n in src.kernel_names().items()})
     return names
 
 
-def global_time_range(db_paths: Sequence[str]) -> Tuple[int, int]:
-    """Dataset boundaries = union of per-DB kernel time ranges (paper §3)."""
+def global_time_range(db_paths: Sequence) -> Tuple[int, int]:
+    """Dataset boundaries = union of per-source kernel time ranges (paper
+    §3). Deliberately UNFILTERED by any pushdown predicate so a selective
+    store's shard plan matches the full store's — cache keys and shard
+    indices stay comparable across the two."""
     lo, hi = None, None
-    for p in db_paths:
-        a, b = kernel_time_range_db(p)
+    for src in _resolve_sources(db_paths):
+        a, b = src.time_range()
         lo = a if lo is None else min(lo, a)
         hi = b if hi is None else max(hi, b)
     if lo is None or hi is None or hi <= lo:
@@ -251,23 +293,45 @@ def generate_rank(rank: int, db_paths: Sequence[str], plan: ShardPlan,
     source DB (``contiguous=True``); with cyclic it issues one query per
     shard — the overhead difference the paper's Fig 1c measures.
 
-    Returns ``{"joined", "KERNEL", "MEMCPY", "GPU"}`` row counts for this
-    rank's time range. Rank queries are half-open ``[lo, hi)`` over disjoint
-    ranges, so KERNEL/MEMCPY counts sum exactly across ranks — the driver
-    builds its Table-1 inventory from these instead of re-reading every DB.
-    The GPU table is static and fully read by every query; it is counted
-    only once per rank (drivers take the max across ranks).
+    Returns ``{"joined", "KERNEL", "MEMCPY", "GPU", "ingest_rows_read",
+    "ingest_rows_skipped"}`` row counts for this rank's time range. Rank
+    queries are half-open ``[lo, hi)`` over disjoint ranges, so
+    KERNEL/MEMCPY counts sum exactly across ranks — the driver builds its
+    Table-1 inventory from these instead of re-reading every DB. The GPU
+    table is static and fully read by every query; it is counted only
+    once per rank (drivers take the max across ranks). Ingest counters
+    are mirrored into ``store.io_counts`` AND returned, so process-backend
+    drivers (which hold a different store object per worker) can still
+    sum them.
     """
-    counts = {"joined": 0, "KERNEL": 0, "MEMCPY": 0, "GPU": 0}
+    counts = {"joined": 0, "KERNEL": 0, "MEMCPY": 0, "GPU": 0,
+              "ingest_rows_read": 0, "ingest_rows_skipped": 0}
     if len(shard_ids) == 0:
         return counts
+    sources = _resolve_sources(db_paths, cfg)
+    pushdown = _pushdown_query(cfg.pushdown)
+    # ``ranks`` pushes down one level above the SQL clauses: a source DB
+    # whose rank index is excluded is never opened for event rows — its
+    # in-range rows are charged to ingest_rows_skipped via a COUNT.
+    push_ranks = (None if pushdown is None or pushdown.ranks is None
+                  else {int(r) for r in pushdown.ranks})
     first_query = True
+
+    def _ingest_count(name: str, n: int = 1) -> None:
+        counts[name] += int(n)
+        store._count(name, int(n))
 
     def _process_range(t_lo: int, t_hi: int, ids: np.ndarray) -> None:
         nonlocal first_query
         parts = []
-        for src, path in enumerate(db_paths):
-            tr = read_rank_db(path, rank=src, start=t_lo, end=t_hi)
+        for src, source in enumerate(sources):
+            if push_ranks is not None and src not in push_ranks:
+                skipped = source.count_range(start=t_lo, end=t_hi)
+                if skipped:
+                    _ingest_count("ingest_rows_skipped", skipped)
+                continue
+            tr = source.read(rank=src, start=t_lo, end=t_hi,
+                             pushdown=pushdown, count=_ingest_count)
             counts["KERNEL"] += len(tr.kernels)
             counts["MEMCPY"] += len(tr.memcpys)
             if first_query:
@@ -297,11 +361,38 @@ def generate_rank(rank: int, db_paths: Sequence[str], plan: ShardPlan,
     return counts
 
 
-def run_generation(db_paths: Sequence[str], out_dir: str,
+def generation_manifest_extra(sources: Sequence,
+                              cfg: GenerationConfig) -> Dict:
+    """Manifest ``extra`` block shared by :func:`run_generation` and the
+    pipeline's concurrent driver. Watermarks are snapshotted AFTER the
+    rank reads (callers invoke this post-generation), matching the
+    quiescent-source assumption documented on :func:`run_generation`."""
+    pushdown = _pushdown_query(cfg.pushdown)
+    extra = {"interval_ns": cfg.interval_ns,
+             "join_window_ns": cfg.join_window_ns,
+             "join_cap": cfg.join_cap,
+             "kernel_names": union_kernel_names(sources),
+             "db_paths": [s.path for s in sources],
+             "db_rowid_hi": {s.path: list(s.rowid_hi()) for s in sources},
+             "source_kinds": {s.path: s.schema.kind for s in sources}}
+    if pushdown is not None:
+        # to_spec(), not canonical(): from_spec round-trips the former
+        # (canonical() adds a "version" key from_spec rejects). Appends
+        # re-apply this recorded predicate so the store stays coherent.
+        extra["ingest_pushdown"] = pushdown.to_spec()
+    return extra
+
+
+def run_generation(db_paths: Sequence, out_dir: str,
                    n_ranks: int, cfg: Optional[GenerationConfig] = None,
-                   ) -> GenerationReport:
+                   store: Optional[TraceStore] = None) -> GenerationReport:
     """Full phase-1 driver (sequential loop over ranks; the process/MPI
     backend in :mod:`repro.core.pipeline` runs ranks concurrently).
+
+    ``db_paths`` elements may be filesystem paths to any supported CUPTI
+    SQLite dialect (native synthetic, nvprof, Nsight Systems export) or
+    pre-built TraceSources. Pass ``store`` to observe ingest io_counts on
+    a caller-owned TraceStore instance.
 
     The initial generation assumes QUIESCENT source DBs (the paper's
     post-mortem model): the append watermarks are recorded after the
@@ -310,16 +401,17 @@ def run_generation(db_paths: Sequence[str], out_dir: str,
     :func:`run_append`, whose bounded reads are live-writer safe."""
     cfg = cfg or GenerationConfig()
     t0 = time.perf_counter()
-    lo, hi = global_time_range(db_paths)
+    sources = _resolve_sources(db_paths, cfg)
+    lo, hi = global_time_range(sources)
     if cfg.n_shards is not None:
         plan = ShardPlan(lo, hi, cfg.n_shards)
     else:
         plan = ShardPlan.from_interval(lo, hi, cfg.interval_ns)
 
-    store = TraceStore(out_dir)
+    store = store if store is not None else TraceStore(out_dir)
     ranks = assignment(plan.n_shards, n_ranks, cfg.partitioning)
     rank_counts = [generate_rank(
-        r, db_paths, plan, ranks[r], store, cfg,
+        r, sources, plan, ranks[r], store, cfg,
         contiguous=(cfg.partitioning == "block"))
         for r in range(n_ranks)]
     joined = sum(c["joined"] for c in rank_counts)
@@ -329,13 +421,7 @@ def run_generation(db_paths: Sequence[str], out_dir: str,
         t_start=plan.t_start, t_end=plan.t_end, n_shards=plan.n_shards,
         n_ranks=n_ranks, partitioning=cfg.partitioning,
         columns=SHARD_COLUMNS, shard_owner=owner.tolist(),
-        extra={"interval_ns": cfg.interval_ns,
-               "join_window_ns": cfg.join_window_ns,
-               "join_cap": cfg.join_cap,
-               "kernel_names": union_kernel_names(db_paths),
-               "db_paths": [os.path.abspath(p) for p in db_paths],
-               "db_rowid_hi": {os.path.abspath(p): list(table_rowid_hi(p))
-                               for p in db_paths}}))
+        extra=generation_manifest_extra(sources, cfg)))
 
     # Table-1 style inventory, assembled from the rank workers' own range
     # queries (no second pass over the DBs).
@@ -346,12 +432,17 @@ def run_generation(db_paths: Sequence[str], out_dir: str,
         n_shards=plan.n_shards, n_ranks=n_ranks,
         t_start=plan.t_start, t_end=plan.t_end,
         rows_per_table=rows, joined_rows=joined,
-        seconds=time.perf_counter() - t0)
+        seconds=time.perf_counter() - t0,
+        ingest_rows_read=sum(
+            c.get("ingest_rows_read", 0) for c in rank_counts),
+        ingest_rows_skipped=sum(
+            c.get("ingest_rows_skipped", 0) for c in rank_counts))
 
 
-def run_append(db_paths: Sequence[str], out_dir: str,
+def run_append(db_paths: Sequence, out_dir: str,
                cfg: Optional[GenerationConfig] = None,
-               max_new_shards: int = 100_000) -> AppendReport:
+               max_new_shards: int = 100_000,
+               store: Optional[TraceStore] = None) -> AppendReport:
     """Append-mode ingest: extend an EXISTING store with new trace data
     instead of regenerating it.
 
@@ -405,7 +496,7 @@ def run_append(db_paths: Sequence[str], out_dir: str,
     """
     cfg = cfg or GenerationConfig()
     t0 = time.perf_counter()
-    store = TraceStore(out_dir)
+    store = store if store is not None else TraceStore(out_dir)
     intent = os.path.join(out_dir, "append_intent.json")
     was_recovered = False
     if os.path.exists(intent):
@@ -429,24 +520,48 @@ def run_append(db_paths: Sequence[str], out_dir: str,
     all_dbs = [os.path.abspath(p) for p in man.extra["db_paths"]]
     rowid_hi = {os.path.abspath(k): v
                 for k, v in man.extra["db_rowid_hi"].items()}
+    source_kinds = dict(man.extra.get("source_kinds", {}))
+    # A selective store re-applies ITS OWN recorded pushdown on every
+    # append — cfg.pushdown is ignored here, because mixing predicates
+    # across appends would leave a store that answers no single query
+    # coherently. Full stores (no recorded predicate) append everything.
+    pd_spec = man.extra.get("ingest_pushdown")
+    pushdown = Query.from_spec(pd_spec) if pd_spec else None
+    push_ranks = (None if pushdown is None or pushdown.ranks is None
+                  else {int(r) for r in pushdown.ranks})
 
     parts = []
     hi = man.t_end                      # plan end from INGESTED rows only
-    for p in db_paths:
-        ap = os.path.abspath(p)
+    for source in _resolve_sources(db_paths, cfg):
+        ap = source.path
         # snapshot the NEW watermark before reading: rows a live profiler
         # appends mid-read stay above it and are picked up by the NEXT
         # append instead of being skipped forever
-        wm_new = table_rowid_hi(p)
-        if ap in all_dbs:
-            src = all_dbs.index(ap)
-            wm = rowid_hi.get(ap)
-            if wm is None:
-                raise ValueError(
-                    f"no ingest watermark recorded for known DB {ap!r} — "
-                    "regenerate the store to make it appendable")
-            tr = read_rank_db(p, rank=src, min_rowids=(wm[0], wm[1]),
-                              max_rowids=wm_new)
+        wm_new = source.rowid_hi()
+        known = ap in all_dbs
+        src = all_dbs.index(ap) if known else len(all_dbs)
+        wm = rowid_hi.get(ap) if known else None
+        if known and wm is None:
+            raise ValueError(
+                f"no ingest watermark recorded for known DB {ap!r} — "
+                "regenerate the store to make it appendable")
+        if not known:
+            all_dbs.append(ap)
+        source_kinds[ap] = source.schema.kind
+        if push_ranks is not None and src not in push_ranks:
+            # rank excluded by the recorded pushdown: never read events,
+            # but still advance the watermark (charging the in-range rows
+            # to the skipped counter) so later appends stay bounded
+            skipped = source.count_range(
+                min_rowids=tuple(wm) if wm else None, max_rowids=wm_new)
+            if skipped:
+                store._count("ingest_rows_skipped", skipped)
+            rowid_hi[ap] = list(wm_new)
+            continue
+        if known:
+            tr = source.read(rank=src, min_rowids=(wm[0], wm[1]),
+                             max_rowids=wm_new, pushdown=pushdown,
+                             count=store._count)
             # Memcpy LOOK-BACK: a kernel appended THIS round may overlap
             # transfers ingested by a PREVIOUS batch (rowid <= wm) within
             # ``join_window_ns`` of the ingest boundary — re-fetch exactly
@@ -457,19 +572,18 @@ def run_append(db_paths: Sequence[str], out_dir: str,
             # joining a NEWLY appended memcpy) would require rewriting
             # committed rows and remains out of scope.
             if len(tr.kernels) and wm[1] > 0:
-                look = read_rank_db(
-                    p, rank=src,
+                look = source.read(
+                    rank=src,
                     start=int(tr.kernels.start.min()) - window,
                     end=int(tr.kernels.end.max()) + window,
-                    max_rowids=(0, wm[1]))
+                    max_rowids=(0, wm[1]), count=store._count)
                 if len(look.memcpys):
                     tr = RankTrace(rank=tr.rank, kernels=tr.kernels,
                                    memcpys=look.memcpys.concat(tr.memcpys),
                                    gpus=tr.gpus)
         else:
-            src = len(all_dbs)
-            all_dbs.append(ap)
-            tr = read_rank_db(p, rank=src, max_rowids=wm_new)
+            tr = source.read(rank=src, max_rowids=wm_new,
+                             pushdown=pushdown, count=store._count)
         if len(tr.kernels) and int(tr.kernels.start.min()) < man.t_start:
             raise ValueError(
                 f"DB {ap!r} holds kernels before the store's t_start "
@@ -527,6 +641,7 @@ def run_append(db_paths: Sequence[str], out_dir: str,
     extra = dict(man.extra)
     extra["db_paths"] = all_dbs
     extra["db_rowid_hi"] = rowid_hi
+    extra["source_kinds"] = source_kinds
     # refresh the name table: appended rows can introduce new name ids
     extra["kernel_names"] = {**dict(extra.get("kernel_names", {})),
                              **union_kernel_names(db_paths)}

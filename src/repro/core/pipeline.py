@@ -73,10 +73,10 @@ from .query import (LanePlan, Query, QueryPlan, QueryResult,
 from .reducers import normalize_reducers
 from .anomaly import (IQRReport, anomalous_bins, is_quantile_score,
                       report_for_query, top_variability_bins)
-from .events import table_rowid_hi
 from .generation import (AppendReport, GenerationConfig, GenerationReport,
-                         generate_rank, global_time_range, run_append,
-                         run_generation, union_kernel_names)
+                         _resolve_sources, generate_rank,
+                         generation_manifest_extra, global_time_range,
+                         run_append, run_generation)
 from .sharding import ShardPlan, assignment, owner_of_shards
 from .tracestore import StoreManifest, TraceStore
 
@@ -218,7 +218,10 @@ class VariabilityPipeline:
                  ) -> GenerationReport:
         cfg, gen = self.cfg, self.cfg.generation
         t0 = time.perf_counter()
-        lo, hi = global_time_range(db_paths)
+        # one sniff per source here; workers re-resolve from the pickled
+        # sources without re-sniffing (pass-through in as_trace_source)
+        sources = _resolve_sources(db_paths, gen)
+        lo, hi = global_time_range(sources)
         plan = (ShardPlan(lo, hi, gen.n_shards) if gen.n_shards is not None
                 else ShardPlan.from_interval(lo, hi, gen.interval_ns))
         store = TraceStore(out_dir)
@@ -226,7 +229,7 @@ class VariabilityPipeline:
                                  gen.partitioning)
 
         if self.cfg.backend == "process":
-            jobs = [(r, list(db_paths),
+            jobs = [(r, list(sources),
                      (plan.t_start, plan.t_end, plan.n_shards),
                      rank_shards[r].tolist(), out_dir,
                      dataclasses.asdict(gen))
@@ -236,7 +239,7 @@ class VariabilityPipeline:
                 rank_counts = pool.map(_gen_worker, jobs)
         else:
             rank_counts = [generate_rank(
-                r, db_paths, plan, rank_shards[r], store, gen,
+                r, sources, plan, rank_shards[r], store, gen,
                 contiguous=(gen.partitioning == "block"))
                 for r in range(cfg.n_ranks)]
 
@@ -246,14 +249,7 @@ class VariabilityPipeline:
             t_start=plan.t_start, t_end=plan.t_end, n_shards=plan.n_shards,
             n_ranks=cfg.n_ranks, partitioning=gen.partitioning,
             columns=SHARD_COLUMNS, shard_owner=owner.tolist(),
-            extra={"interval_ns": gen.interval_ns,
-                   "join_window_ns": gen.join_window_ns,
-                   "join_cap": gen.join_cap,
-                   "kernel_names": union_kernel_names(db_paths),
-                   "db_paths": [os.path.abspath(p) for p in db_paths],
-                   "db_rowid_hi": {
-                       os.path.abspath(p): list(table_rowid_hi(p))
-                       for p in db_paths}}))
+            extra=generation_manifest_extra(sources, gen)))
 
         # Table-1 inventory straight from the rank workers — the rank range
         # queries partition the kernel/memcpy tables, so their counts sum
@@ -265,7 +261,11 @@ class VariabilityPipeline:
             n_shards=plan.n_shards, n_ranks=cfg.n_ranks,
             t_start=plan.t_start, t_end=plan.t_end, rows_per_table=rows,
             joined_rows=sum(c["joined"] for c in rank_counts),
-            seconds=time.perf_counter() - t0)
+            seconds=time.perf_counter() - t0,
+            ingest_rows_read=sum(
+                c.get("ingest_rows_read", 0) for c in rank_counts),
+            ingest_rows_skipped=sum(
+                c.get("ingest_rows_skipped", 0) for c in rank_counts))
 
     # -- phase 2 -------------------------------------------------------------
     def aggregate(self, store_dir: str) -> AggregationResult:

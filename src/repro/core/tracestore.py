@@ -176,8 +176,13 @@ class TraceStore:
     ``pack_writes`` count physical partial-pack file operations) — the
     incremental-path tests assert through it that a delta aggregation
     touches only dirty shard files, and the fused-batch IO claim is the
-    logical/physical ratio. Updates are lock-protected: the background
-    partial writer and concurrent serving threads share one instance.
+    logical/physical ratio. Generation/append runs add the ingest pair:
+    ``ingest_rows_read`` (event rows actually fetched from the source
+    SQLite exports) and ``ingest_rows_skipped`` (rows an ingest-time
+    pushdown predicate excluded SQL-side — counted, never
+    materialized); their ratio is the pushdown IO win the ingest bench
+    gates on. Updates are lock-protected: the background partial
+    writer and concurrent serving threads share one instance.
     """
 
     MANIFEST = "manifest.json"

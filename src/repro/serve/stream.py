@@ -7,9 +7,10 @@ long-running plane riding the query service's tick pipeline:
 
 Tailer (one thread, rowid watermarks)
     :class:`StreamIngestor` polls every attached rank DB's
-    ``table_rowid_hi`` on a cadence. The poll is O(attached DBs) sqlite
-    MAX(rowid) probes — independent of store size and of how much data
-    each DB holds. Growth past the last-dispatched watermark schedules
+    ``rowid_watermark`` (dialect-aware: native synthetic DBs and live
+    Nsight/nvprof exports alike, schema sniffed once per path) on a
+    cadence. The poll is O(attached DBs) sqlite MAX(rowid) probes —
+    independent of store size and of how much data each DB holds. Growth past the last-dispatched watermark schedules
     ONE ingest tick; the next poll waits for its commit, so ingest
     ticks never overlap themselves (``run_append`` journals a staged
     commit and must not race its own journal).
@@ -57,8 +58,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.anomaly import report_for_query
-from repro.core.events import table_rowid_hi
 from repro.core.query import Query
+from repro.ingest.cupti_sqlite import rowid_watermark
 from repro.core.reducers import QuantileSketch, bucket_of
 
 __all__ = ["DEFAULT_FENCE_QUERY", "FenceHub", "IngestConfig",
@@ -209,7 +210,7 @@ class StreamIngestor:
         for ap, last in sorted(self.watermarks().items()):
             if not os.path.exists(ap):
                 continue                    # writer hasn't created it yet
-            hi = table_rowid_hi(ap)
+            hi = rowid_watermark(ap)
             if int(hi[0]) > last[0] or int(hi[1]) > last[1]:
                 grown.append(ap)
         return grown
